@@ -1,0 +1,94 @@
+"""Table 2 / Fig 11: adaptive model cascades on six boolean benchmarks.
+
+Three configurations per dataset (paper §6.2):
+  oracle-only (llama3.3-70B class), cascade (SUPG-IT), proxy-only (8B).
+Reports execution time (modelled serving clock), speedup, F1/precision/
+recall vs ground truth, and delegation rate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_table, model_clock, save_result
+from repro.core import AisqlEngine, Catalog, CascadeConfig, ExecConfig
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+
+
+def _run_one(name: str, mode: str, seed: int = 0):
+    t = D.cascade_table(name, seed=seed)
+    cat = Catalog({"ds": t})
+    sql = ("SELECT * FROM ds AS d WHERE "
+           f"AI_FILTER(PROMPT('{D.CASCADE_PREDICATES[name]}', d.text))")
+    client = make_simulated_client(seed=seed)
+    ec = ExecConfig()
+    if mode == "cascade":
+        ec = ExecConfig(use_cascade=True, cascade=CascadeConfig(seed=seed))
+    if mode == "proxy":
+        client.default_model = "proxy-8b"
+    eng = AisqlEngine(cat, client, executor=ec)
+    out = eng.sql(sql)
+    ids = set(out.column("d.id").tolist())
+    pred = np.array([i in ids for i in t.column("id")])
+    m = D.binary_metrics(pred, t.column("_truth"))
+    res = {"time_s": model_clock(client), **m,
+           "oracle_calls": client.calls_by_model.get("oracle-70b", 0),
+           "proxy_calls": client.calls_by_model.get("proxy-8b", 0)}
+    if mode == "cascade" and eng.cascades:
+        casc = list(eng.cascades.values())[0]
+        res["delegation_rate"] = round(casc.stats.delegation_rate, 4)
+        res["tau_low"] = round(casc.stats.tau_low, 4)
+        res["tau_high"] = round(casc.stats.tau_high, 4)
+    return res
+
+
+def run(seed: int = 0):
+    per_ds = []
+    for name in D.CASCADE_DATASETS:
+        r = {"dataset": name}
+        res = {m: _run_one(name, m, seed) for m in
+               ("oracle", "cascade", "proxy")}
+        r["t_oracle"] = round(res["oracle"]["time_s"], 2)
+        r["t_cascade"] = round(res["cascade"]["time_s"], 2)
+        r["t_proxy"] = round(res["proxy"]["time_s"], 2)
+        r["speedup"] = round(res["oracle"]["time_s"]
+                             / res["cascade"]["time_s"], 2)
+        r["f1_oracle"] = round(res["oracle"]["f1"], 3)
+        r["f1_cascade"] = round(res["cascade"]["f1"], 3)
+        r["f1_proxy"] = round(res["proxy"]["f1"], 3)
+        r["f1_retained"] = round(res["cascade"]["f1"]
+                                 / max(res["oracle"]["f1"], 1e-9), 3)
+        r["delegation"] = res["cascade"].get("delegation_rate", 0)
+        r["prec_cascade"] = round(res["cascade"]["precision"], 3)
+        r["rec_cascade"] = round(res["cascade"]["recall"], 3)
+        per_ds.append(r)
+    mean = {
+        "dataset": "MEAN",
+        "t_oracle": round(np.mean([r["t_oracle"] for r in per_ds]), 2),
+        "t_cascade": round(np.mean([r["t_cascade"] for r in per_ds]), 2),
+        "t_proxy": round(np.mean([r["t_proxy"] for r in per_ds]), 2),
+        "speedup": round(np.mean([r["t_oracle"] for r in per_ds])
+                         / np.mean([r["t_cascade"] for r in per_ds]), 2),
+        "f1_oracle": round(np.mean([r["f1_oracle"] for r in per_ds]), 3),
+        "f1_cascade": round(np.mean([r["f1_cascade"] for r in per_ds]), 3),
+        "f1_proxy": round(np.mean([r["f1_proxy"] for r in per_ds]), 3),
+        "f1_retained": round(
+            np.mean([r["f1_cascade"] for r in per_ds])
+            / np.mean([r["f1_oracle"] for r in per_ds]), 3),
+    }
+    return per_ds + [mean]
+
+
+def main():
+    rows = run()
+    print("== Table 2 / Fig 11: adaptive model cascades (6 datasets) ==")
+    print(fmt_table(rows, ["dataset", "t_oracle", "t_cascade", "speedup",
+                           "f1_oracle", "f1_cascade", "f1_retained",
+                           "f1_proxy", "delegation"]))
+    print("paper: 1.22-5.9x speedups, cascade retains ~95.7% of oracle F1")
+    save_result("bench_cascade", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§2: Cortex-platform serving substrate — real JAX engine throughput.
+
+Measures wall-clock throughput of the smoke-size inference engine under
+(a) per-row submission vs batched submission, (b) 1 vs 2 replicas with
+the scheduler, and (c) fault injection (retry overhead).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.inference.backend import SCORE, Request
+from repro.inference.engine import JaxInferenceEngine
+from repro.inference.scheduler import Scheduler
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def run(n_requests: int = 32):
+    prompts = [f"request number {i}: is this row relevant?" for i in
+               range(n_requests)]
+    reqs = [Request(p, "proxy-8b", SCORE, request_id=i)
+            for i, p in enumerate(prompts)]
+    rows = []
+
+    engine = JaxInferenceEngine("proxy-8b", smoke=True, max_batch=8)
+    engine.submit_batch(reqs[:8])      # warm the jit cache
+    dt_batched, _ = _timed(lambda: engine.submit_batch(reqs))
+    dt_single, _ = _timed(lambda: [engine.submit_batch([r]) for r in reqs])
+    rows.append({"config": "single-row submits", "requests": n_requests,
+                 "seconds": round(dt_single, 3),
+                 "req_per_s": round(n_requests / dt_single, 1)})
+    rows.append({"config": "batched submits", "requests": n_requests,
+                 "seconds": round(dt_batched, 3),
+                 "req_per_s": round(n_requests / dt_batched, 1)})
+
+    # scheduler with retry under injected failures
+    sched = Scheduler(max_retries=2)
+    flaky = JaxInferenceEngine("proxy-8b", smoke=True, max_batch=8,
+                               failure_rate=0.5, seed=1)
+    healthy = JaxInferenceEngine("proxy-8b", smoke=True, max_batch=8, seed=2)
+    healthy.submit_batch(reqs[:8])
+    sched.register(flaky)
+    sched.register(healthy)
+    dt_ft, _ = _timed(lambda: sched.submit(reqs))
+    rows.append({"config": "scheduler + 50% flaky replica",
+                 "requests": n_requests, "seconds": round(dt_ft, 3),
+                 "req_per_s": round(n_requests / dt_ft, 1),
+                 "retries": sched.retries})
+    return rows
+
+
+def main():
+    rows = run()
+    print("== §2: serving substrate throughput (real JAX engine, smoke) ==")
+    print(fmt_table(rows, ["config", "requests", "seconds", "req_per_s",
+                           "retries"]))
+    save_result("bench_serving", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

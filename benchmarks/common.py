@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def model_clock(client) -> float:
+    """Total modelled serving seconds across the client's backends."""
+    total = 0.0
+    seen = set()
+    for reps in client.scheduler._replicas.values():
+        for r in reps:
+            if id(r) not in seen and hasattr(r, "clock_s"):
+                total += r.clock_s
+                seen.add(id(r))
+    return total
+
+
+def save_result(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def fmt_table(rows: List[Dict[str, Any]], cols: List[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    head = "  ".join(c.ljust(widths[c]) for c in cols)
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        lines.append("  ".join(str(r.get(c, "")).ljust(widths[c])
+                               for c in cols))
+    return "\n".join(lines)

@@ -1,0 +1,63 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.report_roofline \
+        results/dryrun_baseline.json results/dryrun_optimized.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def _load(path: str) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(recs: List[dict], *, multi_pod: bool) -> str:
+    rows = [r for r in recs if r.get("ok") and not r.get("skipped")
+            and bool(r.get("multi_pod")) == multi_pod]
+    skips = [r for r in recs if r.get("skipped")]
+    out = ["| arch | shape | C (ms) | M (ms) | X (ms) | bottleneck | "
+           "useful FLOPs | MFU bound | mem/dev (GiB) |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        mem = (r.get("memory_per_device") or {})
+        total = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} "
+            f"| {r['t_memory_s']*1e3:.1f} | {r['t_collective_s']*1e3:.1f} "
+            f"| {r['bottleneck']} | {r['useful_flop_ratio']:.1%} "
+            f"| {r['mfu_bound']:.2%} | {total/2**30:.1f} |")
+    if not multi_pod:
+        for r in sorted(skips, key=lambda r: r["arch"]):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['skipped']} | — | — | — |")
+    return "\n".join(out)
+
+
+def summary(recs: List[dict]) -> str:
+    ok = [r for r in recs if r.get("ok")]
+    comp = [r for r in ok if not r.get("skipped")]
+    sp = [r for r in comp if not r.get("multi_pod")]
+    mp = [r for r in comp if r.get("multi_pod")]
+    return (f"{len(ok)} records OK ({len(sp)} single-pod compiles, "
+            f"{len(mp)} multi-pod compiles, "
+            f"{len([r for r in ok if r.get('skipped')])} assignment skips)")
+
+
+def main(argv=None) -> int:
+    paths = (argv or sys.argv[1:]) or ["results/dryrun_baseline.json"]
+    for path in paths:
+        recs = _load(path)
+        print(f"\n## {path} — {summary(recs)}\n")
+        print("### single-pod 16x16 (256 chips)\n")
+        print(table(recs, multi_pod=False))
+        print("\n### multi-pod 2x16x16 (512 chips)\n")
+        print(table(recs, multi_pod=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

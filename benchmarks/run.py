@@ -1,0 +1,46 @@
+"""Run every paper-reproduction benchmark (one per table/figure).
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-serving]
+
+Artifacts land in results/*.json; the printed tables mirror the paper's
+Figures 9-12 and Tables 2-4 plus the §5.4 aggregation optimization and a
+§2 serving-throughput check on the real JAX engine.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-serving", action="store_true",
+                    help="skip the real-engine serving benchmark (slow)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_agg_shortcircuit, bench_cascade,
+                            bench_hybrid_join, bench_join_placement,
+                            bench_join_rewrite, bench_predicate_reorder)
+    benches = [
+        ("Fig 9 predicate reordering", bench_predicate_reorder.main),
+        ("Fig 10 join placement", bench_join_placement.main),
+        ("Table 2 / Fig 11 cascades", bench_cascade.main),
+        ("Tables 3-4 / Fig 12 join rewrite", bench_join_rewrite.main),
+        ("S5.4 agg short-circuit", bench_agg_shortcircuit.main),
+        ("beyond-paper: hybrid k-pass join", bench_hybrid_join.main),
+    ]
+    if not args.skip_serving:
+        from benchmarks import bench_serving
+        benches.append(("S2 serving throughput", bench_serving.main))
+
+    t0 = time.perf_counter()
+    for name, fn in benches:
+        print(f"\n######## {name} ########")
+        fn()
+    print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

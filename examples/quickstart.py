@@ -1,0 +1,62 @@
+"""Quickstart: AISQL in five queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small catalog (product reviews + the paper's arXiv example
+schema), stands up a simulated Cortex client, and runs the paper's six
+semantic operators end-to-end with AI-aware optimization, printing the
+optimized plans and the LLM-call telemetry.
+"""
+from repro.core import AisqlEngine, Catalog
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+
+
+def main():
+    papers, paper_images = D.papers_tables(n_papers=120, images_per_paper=3)
+    catalog = Catalog({
+        "product_reviews": D.cascade_table("IMDB", rows=80),
+        "papers": papers,
+        "paper_images": paper_images,
+    })
+    engine = AisqlEngine(catalog, make_simulated_client())
+
+    queries = [
+        # AI_COMPLETE — map/projection (§3.1)
+        ("AI_COMPLETE",
+         "SELECT AI_COMPLETE(PROMPT('Evaluate satisfaction: {0}', r.text)) "
+         "FROM product_reviews AS r LIMIT 3"),
+        # AI_FILTER — semantic predicate (§3.2)
+        ("AI_FILTER",
+         "SELECT * FROM product_reviews AS r WHERE "
+         "AI_FILTER(PROMPT('does {0} express positive sentiment?', r.text)) "
+         "LIMIT 5"),
+        # AI_CLASSIFY + GROUP BY (§3.4)
+        ("AI_CLASSIFY",
+         "SELECT AI_CLASSIFY(PROMPT('sentiment {0}', r.text), "
+         "['positive','negative']) AS sentiment, COUNT(*) "
+         "FROM product_reviews AS r GROUP BY sentiment"),
+        # AI_SUMMARIZE_AGG (§3.5)
+        ("AI_SUMMARIZE_AGG",
+         "SELECT AI_SUMMARIZE_AGG(r.text) FROM product_reviews AS r"),
+        # the paper's §5.1 example: relational + text + multimodal filters
+        ("paper §5.1 example",
+         "SELECT AI_SUMMARIZE_AGG(p.abstract) "
+         "FROM papers p JOIN paper_images i ON p.id = i.id "
+         "WHERE p.date BETWEEN 2010 AND 2015 AND "
+         "AI_FILTER(PROMPT('{0} discusses energy efficiency', p.abstract)) "
+         "AND AI_FILTER(PROMPT('{0} shows TPC-H results', i.image_file))"),
+    ]
+    for name, sql in queries:
+        print(f"\n=== {name} ===")
+        print(engine.explain(sql))
+        out = engine.sql(sql)
+        for i in range(min(out.num_rows, 3)):
+            print("  ", {k: str(v)[:64] for k, v in out.row(i).items()})
+        rep = engine.last_report
+        print(f"  -> {out.num_rows} rows | {rep.ai_calls} LLM calls | "
+              f"{rep.ai_credits:.6f} credits | {rep.wall_seconds:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

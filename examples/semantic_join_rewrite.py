@@ -1,0 +1,62 @@
+"""Semantic-join -> multi-label classification rewrite (paper §5.3 / §6.3).
+
+    PYTHONPATH=src python examples/semantic_join_rewrite.py [dataset]
+
+Shows the same AI_FILTER join executed as (a) the naive O(|L|x|R|) cross
+join and (b) the AI_CLASSIFY rewrite the optimizer's rewrite-oracle
+chooses, with call counts, modelled time, and pair-level quality.
+"""
+import sys
+
+import numpy as np
+
+from repro.core import AisqlEngine, Catalog, OptimizerConfig
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+
+
+def model_clock(client) -> float:
+    seen, total = set(), 0.0
+    for reps in client.scheduler._replicas.values():
+        for r in reps:
+            if id(r) not in seen and hasattr(r, "clock_s"):
+                total += r.clock_s
+                seen.add(id(r))
+    return total
+
+
+def main(dataset: str = "CNN"):
+    left, right, spec = D.join_tables(dataset)
+    catalog = Catalog({"docs": left, "cats": right})
+    sql = ("SELECT * FROM docs AS l JOIN cats AS r ON "
+           f"AI_FILTER(PROMPT('{D.JOIN_PROMPTS[dataset]}', "
+           "l.content, r.label))")
+    truth = D.true_pairs_of(left, right)
+    print(f"dataset={dataset}: |L|={spec.left_rows} |R|={spec.right_rows} "
+          f"({spec.left_rows * spec.right_rows} candidate pairs)\n")
+
+    stats = {}
+    for mode, label in (("none", "cross join + AI_FILTER"),
+                        ("ai_aware", "AI_CLASSIFY rewrite")):
+        client = make_simulated_client()
+        engine = AisqlEngine(catalog, client,
+                             optimizer=OptimizerConfig(mode=mode))
+        print(f"--- {label} ---")
+        print(engine.explain(sql))
+        out = engine.sql(sql)
+        pairs = set(zip((int(x) for x in out.column("l.id")),
+                        (str(x) for x in out.column("r.label"))))
+        m = D.pair_metrics(pairs, truth)
+        stats[mode] = (engine.last_report.ai_calls, model_clock(client), m)
+        print(f"  {engine.last_report.ai_calls} LLM calls | "
+              f"{model_clock(client):.1f}s modelled | "
+              f"P={m['precision']:.3f} R={m['recall']:.3f} F1={m['f1']:.3f}\n")
+    calls0, t0, m0 = stats["none"]
+    calls1, t1, m1 = stats["ai_aware"]
+    print(f"rewrite: {calls0}->{calls1} calls, {t0 / t1:.1f}x faster, "
+          f"F1 {m0['f1']:.3f}->{m1['f1']:.3f} "
+          f"(paper CNN: 69.5x, 0.840->0.887)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "CNN")

@@ -1,0 +1,8 @@
+"""AISQL core: the paper's contribution (operators + AI-aware engine)."""
+from repro.core.engine import AisqlEngine, QueryReport           # noqa: F401
+from repro.core.cascade import (CascadeConfig, SupgItCascade,    # noqa: F401
+                                CalibratedCascade)
+from repro.core.optimizer import Optimizer, OptimizerConfig      # noqa: F401
+from repro.core.executor import ExecConfig, Executor             # noqa: F401
+from repro.core.aggregate import AggConfig, HierarchicalAggregator  # noqa: F401
+from repro.core.cost import Catalog, CostModel                   # noqa: F401

@@ -1,0 +1,199 @@
+"""Cost model for AI-aware query optimization (paper §5.1).
+
+The key departure from classical optimizers: the objective is the number /
+price of LLM invocations, not join cardinality.  AI-operator selectivity is
+unknown at compile time (default 0.5); cost per row is estimable from the
+average token length of the referenced columns and the per-model price —
+multimodal predicates (FILE args) are priced on the multimodal model tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.inference.backend import CREDITS_PER_MTOK
+from repro.tables.table import Table
+
+# relative per-row evaluation cost of non-AI predicates (arbitrary tiny unit:
+# one numpy comparison vs an LLM call is ~6-9 orders of magnitude)
+REL_PRED_COST = 1e-7
+
+
+@dataclasses.dataclass
+class TableStats:
+    rows: int
+    ndv: Dict[str, int]
+    avg_len: Dict[str, float]
+
+    @classmethod
+    def of(cls, t: Table) -> "TableStats":
+        return cls(rows=t.num_rows,
+                   ndv={c: t.ndv(c) for c in t.column_names},
+                   avg_len={c: t.avg_len(c) for c in t.column_names})
+
+
+@dataclasses.dataclass
+class Catalog:
+    tables: Dict[str, Table]
+
+    def __post_init__(self):
+        self.stats = {k: TableStats.of(v) for k, v in self.tables.items()}
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]
+
+
+class CostModel:
+    def __init__(self, catalog: Catalog, *, default_model: str = "oracle-70b",
+                 multimodal_model: str = "qwen2-vl-7b",
+                 ai_selectivity_default: float = 0.5):
+        self.catalog = catalog
+        self.default_model = default_model
+        self.multimodal_model = multimodal_model
+        self.ai_sel = ai_selectivity_default
+        # alias -> table stats resolved at plan time
+        self._alias_stats: Dict[str, TableStats] = {}
+
+    # ------------------------------------------------------------------
+    def bind_alias(self, alias: str, table_name: str) -> None:
+        self._alias_stats[alias] = self.catalog.stats[table_name]
+
+    def _col_stats(self, qualified: str):
+        alias, _, col = qualified.partition(".")
+        st = self._alias_stats.get(alias)
+        if st is None or col not in st.ndv:
+            # unqualified or unknown: search all
+            for st2 in self._alias_stats.values():
+                if qualified in st2.ndv:
+                    return st2, qualified
+            return None, col
+        return st, col
+
+    def ndv(self, qualified: str) -> int:
+        st, col = self._col_stats(qualified)
+        return st.ndv.get(col, 100) if st else 100
+
+    def avg_tokens(self, qualified: str) -> float:
+        st, col = self._col_stats(qualified)
+        chars = st.avg_len.get(col, 64.0) if st else 64.0
+        return max(chars / 4.0, 2.0)
+
+    # ------------------------------------------------------------------
+    # per-predicate estimates
+    # ------------------------------------------------------------------
+
+    def predicate_cost_per_row(self, pred: E.Expr) -> float:
+        """Credits per evaluated row."""
+        if isinstance(pred, E.AIFilter):
+            model = pred.model or (
+                self.multimodal_model if pred.multimodal else self.default_model)
+            toks = len(pred.prompt.template) / 4.0 + sum(
+                self.avg_tokens(r) for r in pred.refs())
+            return CREDITS_PER_MTOK.get(model, 0.5) * toks / 1e6
+        if isinstance(pred, E.AIClassify):
+            model = pred.model or self.default_model
+            toks = sum(self.avg_tokens(r) for r in pred.refs()) + \
+                4.0 * max(len(pred.labels), 4)
+            return CREDITS_PER_MTOK.get(model, 0.5) * toks / 1e6
+        return REL_PRED_COST
+
+    def predicate_selectivity(self, pred: E.Expr) -> float:
+        if isinstance(pred, (E.AIFilter, E.AIClassify)):
+            return self.ai_sel                     # unknown at compile time
+        if isinstance(pred, E.InList):
+            if isinstance(pred.expr, E.Column):
+                nd = self.ndv(pred.expr.name)
+                return min(1.0, len(pred.values) / max(nd, 1))
+            return 0.5
+        if isinstance(pred, E.Between):
+            return 0.25
+        if isinstance(pred, E.BinOp):
+            if pred.op == "=":
+                lc = pred.left if isinstance(pred.left, E.Column) else None
+                if lc is not None:
+                    return 1.0 / max(self.ndv(lc.name), 1)
+                return 0.1
+            return 1.0 / 3.0
+        if isinstance(pred, E.Not):
+            return 1.0 - self.predicate_selectivity(pred.arg)
+        if isinstance(pred, E.BoolOp):
+            sels = [self.predicate_selectivity(a) for a in pred.args]
+            if pred.op == "and":
+                out = 1.0
+                for s in sels:
+                    out *= s
+            else:
+                inv = 1.0
+                for s in sels:
+                    inv *= (1.0 - s)
+                out = 1.0 - inv
+            return out
+        if isinstance(pred, E.FuncCall):
+            return 0.5
+        return 0.5
+
+    # ------------------------------------------------------------------
+    # plan-level cardinality & LLM-cost estimation
+    # ------------------------------------------------------------------
+
+    def est_rows(self, node: P.PlanNode) -> float:
+        if isinstance(node, P.Scan):
+            self.bind_alias(node.alias, node.table)
+            return float(self.catalog.stats[node.table].rows)
+        if isinstance(node, P.Filter):
+            r = self.est_rows(node.child)
+            for p in node.predicates:
+                r *= self.predicate_selectivity(p)
+            return r
+        if isinstance(node, P.Join):
+            l = self.est_rows(node.left)
+            r = self.est_rows(node.right)
+            if node.equi:
+                lk, rk = node.equi[0]
+                denom = max(self.ndv(lk), self.ndv(rk), 1)
+                out = l * r / denom
+            else:
+                out = l * r
+            for p in node.residual:
+                out *= self.predicate_selectivity(p)
+            return out
+        if isinstance(node, P.SemanticJoinClassify):
+            l = self.est_rows(node.left)
+            return l * 1.5                        # avg labels per row
+        if isinstance(node, (P.Project, P.Aggregate, P.Limit)):
+            r = self.est_rows(node.children()[0])
+            if isinstance(node, P.Aggregate) and node.group_by:
+                return min(r, self.ndv(node.group_by[0]))
+            if isinstance(node, P.Limit):
+                return min(r, node.n)
+            return r
+        raise TypeError(node)
+
+    def est_llm_cost(self, node: P.PlanNode) -> float:
+        """Total expected LLM credits of the plan (the §5.1 objective)."""
+        total = 0.0
+        if isinstance(node, P.Filter):
+            rows = self.est_rows(node.child)
+            for p in node.predicates:
+                total += rows * self.predicate_cost_per_row(p)
+                rows *= self.predicate_selectivity(p)
+        if isinstance(node, P.Join):
+            l = self.est_rows(node.left)
+            r = self.est_rows(node.right)
+            pairs = l * r if not node.equi else self.est_rows(
+                P.Join(node.left, node.right, node.equi, ()))
+            for p in node.residual:
+                total += pairs * self.predicate_cost_per_row(p)
+                pairs *= self.predicate_selectivity(p)
+        if isinstance(node, P.SemanticJoinClassify):
+            l = self.est_rows(node.left)
+            r = self.est_rows(node.right)
+            import math
+            calls_per_row = max(1.0, math.ceil(r / node.max_labels_per_call))
+            fake = E.AIClassify(node.prompt, labels=())
+            total += l * calls_per_row * self.predicate_cost_per_row(fake)
+        for c in node.children():
+            total += self.est_llm_cost(c)
+        return total

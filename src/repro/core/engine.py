@@ -1,0 +1,85 @@
+"""AisqlEngine — the public entry point: SQL text in, Table out.
+
+Wires the full paper pipeline:
+
+    parse (§3 dialect) -> build_plan -> AI-aware optimize (§5.1/§5.3)
+        -> execute (§5.2 cascades, runtime adaptation) -> Table
+
+Also exposes ``explain`` (optimized plan + optimizer trace + cost
+estimates) and per-query telemetry (LLM calls / credits / seconds — the
+paper's §4 instrumentation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+from repro.core import plan as P
+from repro.core import sqlparse
+from repro.core.cost import Catalog, CostModel
+from repro.core.executor import ExecConfig, Executor
+from repro.core.optimizer import Optimizer, OptimizerConfig
+from repro.inference.api import CortexClient
+from repro.tables.table import Table
+
+
+@dataclasses.dataclass
+class QueryReport:
+    sql: str
+    plan: str
+    optimizer_trace: list
+    est_llm_cost: float
+    wall_seconds: float
+    ai_calls: int
+    ai_credits: float
+    ai_seconds: float
+    rows_out: int
+
+
+class AisqlEngine:
+    def __init__(self, catalog: Catalog, client: CortexClient, *,
+                 optimizer: Optional[OptimizerConfig] = None,
+                 executor: Optional[ExecConfig] = None,
+                 llm_judge=None):
+        self.catalog = catalog
+        self.client = client
+        self.cost = CostModel(catalog, default_model=client.default_model)
+        self.opt = Optimizer(catalog, cfg=optimizer, cost=self.cost,
+                             llm_judge=llm_judge)
+        self.exec = Executor(catalog, client, cfg=executor, cost=self.cost)
+        self.last_report: Optional[QueryReport] = None
+
+    # ------------------------------------------------------------------
+    def plan(self, sql: str) -> P.PlanNode:
+        return self.opt.optimize(P.build_plan(sqlparse.parse(sql)))
+
+    def explain(self, sql: str) -> str:
+        node = self.plan(sql)
+        lines = [node.pretty(),
+                 f"-- est LLM cost: {self.cost.est_llm_cost(node):.6g} credits"]
+        lines += [f"-- {t}" for t in self.opt.trace]
+        return "\n".join(lines)
+
+    def sql(self, sql: str) -> Table:
+        before = self.client.snapshot()
+        t0 = time.perf_counter()
+        node = self.plan(sql)
+        out = self.exec.execute(node)
+        dt = time.perf_counter() - t0
+        delta = self.client.meter_delta(before)
+        self.last_report = QueryReport(
+            sql=sql, plan=node.pretty(), optimizer_trace=list(self.opt.trace),
+            est_llm_cost=self.cost.est_llm_cost(node), wall_seconds=dt,
+            ai_calls=delta["ai_calls"], ai_credits=delta["ai_credits"],
+            ai_seconds=delta["ai_seconds"], rows_out=out.num_rows)
+        return out
+
+    # telemetry passthroughs ------------------------------------------------
+    @property
+    def pred_stats(self):
+        return self.exec.pred_stats
+
+    @property
+    def cascades(self):
+        return self.exec.cascades

@@ -1,0 +1,476 @@
+"""Vectorised plan executor with runtime adaptation (paper §5.1–5.3).
+
+Executes optimized plans against the columnar substrate + the Cortex client.
+
+Runtime behaviour mirrored from the paper:
+
+  * **adaptive predicate reordering** — Filters evaluate in row chunks;
+    per-predicate cost and selectivity statistics are collected and the
+    evaluation order is re-ranked between chunks (cheap/selective first);
+  * **model cascades** — AI_FILTER predicates route through a streaming
+    SUPG-IT cascade (proxy scores + learned thresholds + oracle escalation)
+    when enabled;
+  * **semantic-join rewrite execution** — SemanticJoinClassify runs one
+    multi-label AI_CLASSIFY per left row (chunked over the label set)
+    instead of |L|·|R| AI_FILTER calls.
+
+Ground-truth plumbing: hidden columns (leaf name starting with ``_``) are
+never returned by ``SELECT *`` but travel with rows and are forwarded as
+request metadata (``_truth`` → truth, ``_difficulty`` → difficulty,
+``_labels`` → truth_labels, ``_recall_penalty`` → recall_penalty) so the
+calibrated simulator can ground quality metrics.  The real JAX engine
+ignores metadata entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core.aggregate import AggConfig, HierarchicalAggregator
+from repro.core.cascade import CascadeConfig, SupgItCascade
+from repro.core.cost import Catalog, CostModel
+from repro.inference.api import CortexClient
+from repro.tables.table import Table, _hash_join_indices
+
+
+def _is_hidden(col: str) -> bool:
+    return col.rsplit(".", 1)[-1].startswith("_")
+
+
+_MD_MAP = {"_truth": "truth", "_difficulty": "difficulty",
+           "_labels": "truth_labels", "_recall_penalty": "recall_penalty",
+           "_fp_bias": "fp_bias", "_fn_bias": "fn_bias",
+           "_drop_prob": "drop_prob", "_add_frac": "add_frac"}
+
+
+def row_metadata(table: Table, rows: np.ndarray,
+                 label_args: Sequence[np.ndarray] = ()) -> List[Dict[str, Any]]:
+    """Simulator grounding: hidden columns -> per-row request metadata.
+
+    ``label_args``: rendered per-row values of prompt args; when the row
+    carries a ``_labels`` truth set, pairwise truth is derived as "any arg
+    value is one of the true labels" (used by cross-join AI_FILTER so that
+    baseline and rewrite share identical ground truth).
+    """
+    hidden: Dict[str, np.ndarray] = {}
+    for c in table.column_names:
+        leaf = c.rsplit(".", 1)[-1]
+        if leaf in _MD_MAP:
+            hidden[_MD_MAP[leaf]] = table.column(c)[rows]
+    n = len(rows)
+    out: List[Dict[str, Any]] = []
+    for i in range(n):
+        md = {k: v[i] for k, v in hidden.items()}
+        if "truth_labels" in md and "truth" not in md and label_args:
+            lbls = md["truth_labels"]
+            lbls = set(lbls) if isinstance(lbls, (tuple, list, set)) else {lbls}
+            md["truth"] = any(str(a[i]) in lbls for a in label_args)
+        out.append(md)
+    return out
+
+
+@dataclasses.dataclass
+class ExecConfig:
+    use_cascade: bool = False
+    cascade: CascadeConfig = dataclasses.field(default_factory=CascadeConfig)
+    adaptive_reorder: bool = True
+    chunk_rows: int = 256            # runtime-adaptation granularity
+    agg: AggConfig = dataclasses.field(default_factory=AggConfig)
+    proxy_model: Optional[str] = None    # default: client.proxy_model
+    classify_multi_label: bool = True    # semantic-join rewrite labels
+    # Hybrid join strategy (paper §8 future work): run the multi-label
+    # classification k times and union the selections.  Conservative
+    # selection drops true labels independently per pass, so recall
+    # improves ~1-(1-R1)^k at k× the (still O(L)) call cost.
+    classify_passes: int = 1
+
+
+@dataclasses.dataclass
+class PredicateStats:
+    evaluated: int = 0
+    passed: int = 0
+    seconds: float = 0.0
+    credits: float = 0.0
+
+    @property
+    def selectivity(self) -> float:
+        return self.passed / self.evaluated if self.evaluated else 0.5
+
+    @property
+    def cost_per_row(self) -> float:
+        # runtime rank uses observed credits (primary) + wall time tiebreak
+        if not self.evaluated:
+            return 0.0
+        return (self.credits + 1e-6 * self.seconds) / self.evaluated
+
+    @property
+    def rank(self) -> float:
+        return self.cost_per_row / max(1.0 - self.selectivity, 1e-9)
+
+
+class Executor:
+    def __init__(self, catalog: Catalog, client: CortexClient, *,
+                 cfg: Optional[ExecConfig] = None,
+                 cost: Optional[CostModel] = None):
+        self.catalog = catalog
+        self.client = client
+        self.cfg = cfg or ExecConfig()
+        self.cost = cost or CostModel(catalog)
+        # telemetry of the last execute()
+        self.pred_stats: Dict[str, PredicateStats] = {}
+        self.cascades: Dict[str, SupgItCascade] = {}
+        self.agg_telemetry = None
+        self.reorder_events: List[str] = []
+
+    # ------------------------------------------------------------------
+    def execute(self, node: P.PlanNode) -> Table:
+        self.pred_stats = {}
+        self.cascades = {}
+        self.reorder_events = []
+        return self._exec(node)
+
+    def _exec(self, node: P.PlanNode) -> Table:
+        if isinstance(node, _Materialized):
+            return node.table
+        if isinstance(node, P.Scan):
+            return self.catalog.table(node.table).prefixed(node.alias)
+        if isinstance(node, P.Filter):
+            return self._exec_filter(node)
+        if isinstance(node, P.Join):
+            return self._exec_join(node)
+        if isinstance(node, P.SemanticJoinClassify):
+            return self._exec_semantic_join(node)
+        if isinstance(node, P.Aggregate):
+            return self._exec_aggregate(node)
+        if isinstance(node, P.Project):
+            return self._exec_project(node)
+        if isinstance(node, P.Limit):
+            return self._exec(node.child).head(node.n)
+        raise TypeError(node)
+
+    # ------------------------------------------------------------------
+    # Filter: chunked evaluation + adaptive reordering + cascades
+    # ------------------------------------------------------------------
+
+    def _pred_key(self, pred: E.Expr) -> str:
+        if isinstance(pred, E.AIFilter):
+            return f"AI_FILTER({pred.prompt.template[:40]!r})"
+        if isinstance(pred, E.AIClassify):
+            return f"AI_CLASSIFY({pred.text.template[:40]!r})"
+        return f"{type(pred).__name__}:{abs(hash(pred)) % 10 ** 8}"
+
+    def _stats_for(self, pred: E.Expr) -> PredicateStats:
+        return self.pred_stats.setdefault(self._pred_key(pred),
+                                          PredicateStats())
+
+    def _exec_filter(self, node: P.Filter) -> Table:
+        table = self._exec(node.child)
+        mask = self.eval_predicates(table, list(node.predicates))
+        return table.filter_mask(mask)
+
+    def eval_predicates(self, table: Table, preds: List[E.Expr]
+                        ) -> np.ndarray:
+        n = table.num_rows
+        mask = np.ones(n, dtype=bool)
+        if not preds:
+            return mask
+        order = list(preds)            # compile-time order from the optimizer
+        chunk = self.cfg.chunk_rows if self.cfg.adaptive_reorder else n
+        chunk = max(chunk, 1)
+        for lo in range(0, n, chunk):
+            hi = min(lo + chunk, n)
+            alive = np.arange(lo, hi)
+            for pred in order:
+                if len(alive) == 0:
+                    break
+                st = self._stats_for(pred)
+                t0 = time.perf_counter()
+                c0 = self.client.ai_credits
+                res = self._eval_pred(pred, table, alive)
+                st.seconds += time.perf_counter() - t0
+                st.credits += self.client.ai_credits - c0
+                st.evaluated += len(alive)
+                st.passed += int(res.sum())
+                alive = alive[res]
+            sel = np.zeros(hi - lo, dtype=bool)
+            sel[alive - lo] = True
+            mask[lo:hi] = sel
+            # --- adaptive reordering between chunks (§5.1 runtime) ---
+            if self.cfg.adaptive_reorder and hi < n:
+                ranked = sorted(order, key=lambda p: self._stats_for(p).rank)
+                if ranked != order:
+                    self.reorder_events.append(
+                        f"rows[{hi}]: reorder -> "
+                        + ", ".join(self._pred_key(p) for p in ranked))
+                    order = ranked
+        return mask
+
+    def _eval_pred(self, pred: E.Expr, table: Table, rows: np.ndarray
+                   ) -> np.ndarray:
+        if isinstance(pred, E.AIFilter):
+            return self._eval_ai_filter(pred, table, rows)
+        if isinstance(pred, E.AIClassify):
+            raise NotImplementedError("AI_CLASSIFY as a predicate")
+        return np.asarray(E.eval_expr(pred, table, rows), dtype=bool)
+
+    # -- AI_FILTER with optional cascade --
+    def _eval_ai_filter(self, pred: E.AIFilter, table: Table,
+                        rows: np.ndarray) -> np.ndarray:
+        prompts = pred.prompt.render(table, rows)
+        args = [E.eval_expr(a, table, rows) for a in pred.prompt.args]
+        md = row_metadata(table, rows, args)
+        model = pred.model or (
+            self.cost.multimodal_model if pred.multimodal
+            else self.client.default_model)
+        if not self.cfg.use_cascade:
+            scores = self.client.filter_scores(prompts, model=model,
+                                               metadata=md)
+            return scores >= 0.5
+        proxy = self.cfg.proxy_model or self.client.proxy_model
+        cascade = self.cascades.setdefault(
+            self._pred_key(pred), SupgItCascade(self.cfg.cascade))
+        items = list(zip(prompts, md))
+
+        def proxy_scores(batch):
+            return self.client.filter_scores(
+                [p for p, _ in batch], model=proxy,
+                metadata=[m for _, m in batch])
+
+        def oracle_labels(batch):
+            s = self.client.filter_scores(
+                [p for p, _ in batch], model=model,
+                metadata=[m for _, m in batch])
+            return s >= 0.5
+
+        return cascade.run(items, proxy_scores, oracle_labels)
+
+    # ------------------------------------------------------------------
+    # Joins
+    # ------------------------------------------------------------------
+
+    def _combine(self, left: Table, right: Table, lidx: np.ndarray,
+                 ridx: np.ndarray) -> Table:
+        cols: Dict[str, Any] = {}
+        types: Dict[str, str] = {}
+        for k in left.column_names:
+            cols[k] = left.column(k)[lidx]
+            types[k] = left.types[k]
+        for k in right.column_names:
+            cols[k] = right.column(k)[ridx]
+            types[k] = right.types[k]
+        return Table(cols, types)
+
+    def _exec_join(self, node: P.Join) -> Table:
+        left = self._exec(node.left)
+        right = self._exec(node.right)
+        if node.equi:
+            lk, rk = node.equi[0]
+            lidx, ridx = _hash_join_indices(
+                left.column(E.resolve_column(left, lk)),
+                right.column(E.resolve_column(right, rk)))
+            # extra equi conjuncts as post-filters
+            joined = self._combine(left, right, lidx, ridx)
+            for lk2, rk2 in node.equi[1:]:
+                m = (joined.column(E.resolve_column(joined, lk2))
+                     == joined.column(E.resolve_column(joined, rk2)))
+                joined = joined.filter_mask(m)
+        else:
+            lidx, ridx = left.cross_join_indices(right)
+            joined = self._combine(left, right, lidx, ridx)
+        if node.residual:
+            mask = self.eval_predicates(joined, list(node.residual))
+            joined = joined.filter_mask(mask)
+        return joined
+
+    # ------------------------------------------------------------------
+    # SemanticJoinClassify (§5.3 rewritten join)
+    # ------------------------------------------------------------------
+
+    def _exec_semantic_join(self, node: P.SemanticJoinClassify) -> Table:
+        left = self._exec(node.left)
+        right = self._exec(node.right)
+        label_col = E.resolve_column(right, node.label_col)
+        label_vals = right.column(label_col)
+        # label value -> right row indices (labels may repeat)
+        label_rows: Dict[str, List[int]] = {}
+        uniq: List[str] = []
+        for j, v in enumerate(label_vals):
+            s = str(v)
+            if s not in label_rows:
+                uniq.append(s)
+                label_rows[s] = []
+            label_rows[s].append(j)
+        left_rows = np.arange(left.num_rows)
+        left_text = np.asarray(E.eval_expr(node.left_arg, left, left_rows),
+                               dtype=object)
+        chunk = max(node.max_labels_per_call, 1)
+        chunks = [uniq[i:i + chunk] for i in range(0, len(uniq), chunk)]
+        instruction = node.prompt.template
+        md_rows = row_metadata(left, left_rows)
+        selected: List[set] = [set() for _ in range(left.num_rows)]
+        for pass_no in range(max(self.cfg.classify_passes, 1)):
+            tag = "" if pass_no == 0 else (
+                f" (pass {pass_no + 1}: select any additional matches)")
+            for labels in chunks:
+                prompts = [
+                    ("Select every label that satisfies: "
+                     f"{instruction}{tag}\ninput: {t}") for t in left_text]
+                chosen = self.client.classify(
+                    prompts, tuple(labels), model=node.model,
+                    multi_label=self.cfg.classify_multi_label,
+                    metadata=[{**m, "candidate_labels": tuple(labels)}
+                              for m in md_rows])
+                for i, labs in enumerate(chosen):
+                    selected[i].update(labs)
+        pairs_l: List[int] = []
+        pairs_r: List[int] = []
+        for i, labs in enumerate(selected):
+            for lb in labs:
+                for j in label_rows.get(lb, ()):
+                    pairs_l.append(i)
+                    pairs_r.append(j)
+        return self._combine(left, right, np.asarray(pairs_l, np.int64),
+                             np.asarray(pairs_r, np.int64))
+
+    # ------------------------------------------------------------------
+    # Aggregate / Project
+    # ------------------------------------------------------------------
+
+    def _agg_value(self, agg: E.AggCall, table: Table, rows: np.ndarray,
+                   aggregator: HierarchicalAggregator):
+        name = agg.name
+        if name == "COUNT":
+            return int(len(rows))
+        col = E.eval_expr(agg.args[0], table, rows)
+        if name == "SUM":
+            return float(np.sum(col.astype(np.float64)))
+        if name == "AVG":
+            return float(np.mean(col.astype(np.float64))) if len(rows) else 0.0
+        if name == "MIN":
+            return col.min() if len(rows) else None
+        if name == "MAX":
+            return col.max() if len(rows) else None
+        if name in ("AI_AGG", "AI_SUMMARIZE_AGG"):
+            out = aggregator.aggregate([str(v) for v in col],
+                                       agg.instruction)
+            self.agg_telemetry = aggregator.telemetry
+            return out
+        raise KeyError(name)
+
+    def _item_name(self, item: E.SelectItem, i: int) -> str:
+        if item.alias:
+            return item.alias
+        e = item.expr
+        if isinstance(e, E.Column):
+            return e.name
+        if isinstance(e, E.AggCall):
+            return e.name.lower()
+        if isinstance(e, E.AIComplete):
+            return "ai_complete"
+        if isinstance(e, E.AIClassify):
+            return "ai_classify"
+        return f"col{i}"
+
+    def _materialize_item(self, table: Table, item: E.SelectItem) -> Table:
+        """Compute one select item as a column (GROUP BY <alias> support)."""
+        one = self._exec_project(P.Project(_Materialized(table), (item,)))
+        name = self._item_name(item, 0)
+        return table.with_column(name, one.column(name))
+
+    def _exec_aggregate(self, node: P.Aggregate) -> Table:
+        table = self._exec(node.child)
+        aggregator = HierarchicalAggregator(self.client, self.cfg.agg)
+        if node.group_by:
+            try:
+                key0 = E.resolve_column(table, node.group_by[0])
+            except KeyError:
+                # GROUP BY a select alias (e.g. an AI_CLASSIFY output):
+                # materialize that item first, then group on it
+                for item in node.items:
+                    if item.alias == node.group_by[0]:
+                        table = self._materialize_item(table, item)
+                        break
+                key0 = E.resolve_column(table, node.group_by[0])
+            groups = table.group_indices(key0)
+        else:
+            groups = {None: np.arange(table.num_rows)}
+        cols: Dict[str, List[Any]] = {}
+        for gkey, rows in groups.items():
+            for i, item in enumerate(node.items):
+                name = self._item_name(item, i)
+                e = item.expr
+                if isinstance(e, E.AggCall):
+                    v = self._agg_value(e, table, rows, aggregator)
+                elif isinstance(e, E.Column):
+                    v = table.column(E.resolve_column(table, e.name))[rows[0]]
+                elif isinstance(e, E.Star):
+                    v = gkey
+                elif name in table:          # materialized alias column
+                    v = table.column(name)[rows[0]]
+                else:
+                    v = E.eval_expr(e, table, rows[:1])[0]
+                cols.setdefault(name, []).append(v)
+        return Table(cols)
+
+
+    def _exec_project(self, node: P.Project) -> Table:
+        table = self._exec(node.child)
+        rows = np.arange(table.num_rows)
+        cols: Dict[str, Any] = {}
+        types: Dict[str, str] = {}
+        for i, item in enumerate(node.items):
+            e = item.expr
+            if isinstance(e, E.Star):
+                for c in table.column_names:
+                    if not _is_hidden(c):
+                        cols[c] = table.column(c)
+                        types[c] = table.types[c]
+                continue
+            name = self._item_name(item, i)
+            if isinstance(e, E.AIComplete):
+                prompts = e.prompt.render(table, rows)
+                md = row_metadata(table, rows)
+                cols[name] = np.asarray(
+                    self.client.complete(prompts, model=e.model,
+                                         max_tokens=e.max_tokens,
+                                         metadata=md), dtype=object)
+                types[name] = "str"
+            elif isinstance(e, E.AIClassify):
+                prompts = e.text.render(table, rows)
+                md = row_metadata(table, rows)
+                labels = e.labels
+                if e.labels_expr is not None:
+                    lv = E.eval_expr(e.labels_expr, table, rows[:1])
+                    labels = tuple(lv[0]) if len(lv) else ()
+                chosen = self.client.classify(
+                    prompts, tuple(labels), model=e.model,
+                    multi_label=e.multi_label,
+                    metadata=[{**m, "candidate_labels": tuple(labels)}
+                              for m in md])
+                if e.multi_label:
+                    cols[name] = np.asarray([tuple(c) for c in chosen],
+                                            dtype=object)
+                else:
+                    cols[name] = np.asarray(
+                        [c[0] if c else None for c in chosen], dtype=object)
+                types[name] = "str"
+            elif isinstance(e, E.AIFilter):
+                cols[name] = self._eval_ai_filter(e, table, rows)
+                types[name] = "bool"
+            else:
+                cols[name] = E.eval_expr(e, table, rows)
+        if not cols:                      # SELECT over an empty item list
+            cols["rows"] = np.arange(table.num_rows)
+        return Table(cols, types or None)
+
+
+class _Materialized(P.PlanNode):
+    """Plan leaf wrapping an already-computed Table (internal)."""
+
+    def __init__(self, table: Table):
+        self.table = table

@@ -1,0 +1,396 @@
+"""AI-aware query optimization (paper §5.1) + semantic-join rewrite (§5.3).
+
+Three plan rewrites, all driven by the LLM-cost objective (``CostModel.
+est_llm_cost``) rather than join cardinality:
+
+1. **Predicate reordering** — within every Filter, order conjuncts by the
+   classical expensive-predicate rank cost/(1 - selectivity); with AI
+   selectivities unknown (default 0.5) this degenerates to exactly the
+   paper's rule "most expensive predicates last".
+
+2. **AI-predicate placement wrt joins** — every AI conjunct sitting below a
+   join may be *pulled up* above it (and conversely a post-join AI conjunct
+   referencing one side only may be *pushed down*).  We enumerate the
+   pull/push assignment per AI predicate and keep the plan with the lowest
+   estimated total LLM cost — reproducing Plan A → Plan B of Fig. 7.
+
+3. **Semantic-join rewrite** — a join whose residual is an AI_FILTER over
+   one column from each side is a multi-label classification in disguise
+   when one side's column behaves like a label set.  A *rewrite oracle*
+   inspects the prompt text, schema metadata, NDV statistics and sample
+   values (and can optionally consult an LLM) to pick the label side; the
+   join is then rewritten to ``SemanticJoinClassify`` — O(|L|·|R|) → O(|L|).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Set, Tuple
+
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core.cost import Catalog, CostModel
+from repro.core.plan import refs_aliases
+
+MODES = ("ai_aware", "always_pushdown", "always_pullup", "none")
+
+
+@dataclasses.dataclass
+class OptimizerConfig:
+    mode: str = "ai_aware"
+    enable_reorder: bool = True
+    enable_join_placement: bool = True
+    enable_semantic_join_rewrite: bool = True
+    max_labels_per_call: int = 250      # AI_CLASSIFY context-window chunking
+    # rewrite-oracle gates
+    label_ndv_max: int = 512            # label sets are small-cardinality
+    label_avg_len_max: float = 120.0    # labels are short strings
+    min_pairs_for_rewrite: int = 64     # tiny joins are left alone
+
+
+@dataclasses.dataclass
+class RewriteDecision:
+    applicable: bool
+    label_side: str = ""                # "left" | "right"
+    label_col: str = ""
+    reason: str = ""
+
+
+# ---------------------------------------------------------------------------
+# the rewrite oracle (§5.3)
+# ---------------------------------------------------------------------------
+
+
+class RewriteOracle:
+    """Decides if a semantic join is a multi-label classification.
+
+    Inputs mirror the paper: the natural-language prompt, schema metadata
+    (table/column names), statistics (NDV), and sample values.  An optional
+    LLM hook (`llm_judge`) lets an AI model veto/confirm borderline cases —
+    by default a deterministic heuristic decides.
+    """
+
+    LABELY_WORDS = ("category", "categories", "label", "class", "topic",
+                    "type", "tag", "genre", "sentiment")
+
+    def __init__(self, cost: CostModel, cfg: OptimizerConfig,
+                 llm_judge=None):
+        self.cost = cost
+        self.cfg = cfg
+        self.llm_judge = llm_judge
+
+    def decide(self, node: P.Join, pred: E.AIFilter) -> RewriteDecision:
+        sides = self._split_prompt_args(node, pred)
+        if sides is None:
+            return RewriteDecision(False, reason="prompt does not reference "
+                                   "exactly one column from each side")
+        (l_col, r_col) = sides
+        l_rows = self.cost.est_rows(node.left)
+        r_rows = self.cost.est_rows(node.right)
+        if l_rows * r_rows < self.cfg.min_pairs_for_rewrite:
+            return RewriteDecision(False, reason="join too small to benefit")
+        cand: List[Tuple[str, str, float]] = []     # (side, col, score)
+        for side, col, rows in (("right", r_col, r_rows),
+                                ("left", l_col, l_rows)):
+            ndv = self.cost.ndv(col)
+            avg_len = self.cost.avg_tokens(col) * 4.0
+            if ndv > self.cfg.label_ndv_max:
+                continue
+            if avg_len > self.cfg.label_avg_len_max:
+                continue
+            score = 0.0
+            # schema signal: label-like column/table names
+            name_l = col.lower()
+            if any(wd in name_l for wd in self.LABELY_WORDS):
+                score += 2.0
+            # statistics signal: low NDV relative to row count
+            score += 1.0 if ndv <= rows * 0.9 else 0.0
+            score += 1.0 if avg_len <= 40 else 0.0
+            # sample-value signal: short single-phrase values
+            samples = self._samples(node, side, col)
+            if samples and all(len(str(s)) <= 80 and "\n" not in str(s)
+                               for s in samples):
+                score += 1.0
+            cand.append((side, col, score))
+        if not cand:
+            return RewriteDecision(False, reason="no side looks like a "
+                                   "label set (NDV/length gates failed)")
+        cand.sort(key=lambda t: -t[2])
+        side, col, score = cand[0]
+        if score < 2.0:
+            return RewriteDecision(False, reason=f"weak label evidence "
+                                   f"(score={score})")
+        if self.llm_judge is not None:
+            verdict = self.llm_judge(pred.prompt.template, col,
+                                     self._samples(node, side, col))
+            if not verdict:
+                return RewriteDecision(False, reason="LLM judge vetoed")
+        return RewriteDecision(True, label_side=side, label_col=col,
+                               reason=f"label side={side} col={col} "
+                                      f"score={score}")
+
+    # -- helpers --
+    def _split_prompt_args(self, node: P.Join, pred: E.AIFilter):
+        """-> (left_col, right_col) if the prompt has exactly one column
+        from each side; else None."""
+        largs = node.left.out_aliases()
+        rargs = node.right.out_aliases()
+        lcols, rcols = [], []
+        for a in pred.prompt.args:
+            if not isinstance(a, E.Column):
+                return None
+            alias = a.name.split(".", 1)[0] if "." in a.name else ""
+            if alias in largs:
+                lcols.append(a.name)
+            elif alias in rargs:
+                rcols.append(a.name)
+            else:
+                return None
+        if len(lcols) == 1 and len(rcols) == 1:
+            return lcols[0], rcols[0]
+        return None
+
+    def _samples(self, node: P.Join, side: str, col: str):
+        alias, _, c = col.partition(".")
+        sub = node.left if side == "left" else node.right
+        for n in _walk(sub):
+            if isinstance(n, P.Scan) and n.alias == alias:
+                try:
+                    return self.cost.catalog.table(n.table).sample_values(c)
+                except KeyError:
+                    return []
+        return []
+
+
+def _walk(node: P.PlanNode):
+    yield node
+    for c in node.children():
+        yield from _walk(c)
+
+
+# ---------------------------------------------------------------------------
+# the optimizer
+# ---------------------------------------------------------------------------
+
+
+class Optimizer:
+    def __init__(self, catalog: Catalog, *,
+                 cfg: Optional[OptimizerConfig] = None,
+                 cost: Optional[CostModel] = None, llm_judge=None):
+        self.cfg = cfg or OptimizerConfig()
+        assert self.cfg.mode in MODES, self.cfg.mode
+        self.cost = cost or CostModel(catalog)
+        self.oracle = RewriteOracle(self.cost, self.cfg, llm_judge)
+        self.trace: List[str] = []
+
+    # ------------------------------------------------------------------
+    def optimize(self, root: P.PlanNode) -> P.PlanNode:
+        self.trace = []
+        self.cost.est_rows(root)        # bind aliases for stats lookups
+        if self.cfg.mode == "none":
+            return root
+        node = root
+        if self.cfg.enable_semantic_join_rewrite:
+            node = self._rewrite_semantic_joins(node)
+        # Snowflake's default pushes filters below joins; relational
+        # predicates always benefit.  AI predicates are pushed in
+        # always_pushdown/ai_aware (ai_aware may pull them back up below,
+        # by LLM-cost enumeration) and held above in always_pullup.
+        node = self._pushdown_filters(node, push_ai=self.cfg.mode
+                                      in ("ai_aware", "always_pushdown"))
+        if self.cfg.enable_join_placement:
+            # ai_aware: cost-based enumeration; always_pullup: forced pull;
+            # always_pushdown: stays below (no-op after the pushdown pass)
+            node = self._place_ai_predicates(node)
+        if self.cfg.enable_reorder:
+            node = self._reorder_filters(node)
+        return node
+
+    # ------------------------------------------------------------------
+    # 0. filter pushdown below joins
+    # ------------------------------------------------------------------
+
+    def _pushdown_filters(self, node: P.PlanNode, *, push_ai: bool
+                          ) -> P.PlanNode:
+        node = _map_children(
+            node, lambda c: self._pushdown_filters(c, push_ai=push_ai))
+        if not (isinstance(node, P.Filter)
+                and isinstance(node.child, P.Join)):
+            return node
+        join = node.child
+        la = join.left.out_aliases()
+        ra = join.right.out_aliases()
+        to_left, to_right, keep = [], [], []
+        for pred in node.predicates:
+            if pred.is_ai() and not push_ai:
+                keep.append(pred)
+                continue
+            al = refs_aliases(pred)
+            if al and al <= la:
+                to_left.append(pred)
+            elif al and al <= ra:
+                to_right.append(pred)
+            else:
+                keep.append(pred)
+        if not (to_left or to_right):
+            return node
+        left = P.Filter(join.left, tuple(to_left)) if to_left else join.left
+        right = (P.Filter(join.right, tuple(to_right)) if to_right
+                 else join.right)
+        out: P.PlanNode = dataclasses.replace(join, left=left, right=right)
+        if keep:
+            out = P.Filter(out, tuple(keep))
+        self.trace.append(
+            f"pushdown: {len(to_left)}L/{len(to_right)}R below join")
+        return out
+
+    # ------------------------------------------------------------------
+    # 1. predicate reordering
+    # ------------------------------------------------------------------
+
+    def rank(self, pred: E.Expr) -> float:
+        """Hellerstein-style rank: cost per row / (1 - selectivity)."""
+        c = self.cost.predicate_cost_per_row(pred)
+        s = self.cost.predicate_selectivity(pred)
+        return c / max(1.0 - s, 1e-9)
+
+    def _reorder_filters(self, node: P.PlanNode) -> P.PlanNode:
+        node = _map_children(node, self._reorder_filters)
+        if isinstance(node, P.Filter):
+            ordered = tuple(sorted(node.predicates, key=self.rank))
+            if ordered != node.predicates:
+                self.trace.append(
+                    "reorder: " + " -> ".join(_pname(p) for p in ordered))
+            return dataclasses.replace(node, predicates=ordered)
+        return node
+
+    # ------------------------------------------------------------------
+    # 2. AI-predicate placement with respect to joins
+    # ------------------------------------------------------------------
+
+    def _place_ai_predicates(self, node: P.PlanNode) -> P.PlanNode:
+        node = _map_children(node, self._place_ai_predicates)
+        if not isinstance(node, P.Join):
+            return node
+        mode = self.cfg.mode
+        # collect movable AI conjuncts from single-side pre-join filters
+        movable: List[Tuple[str, E.Expr]] = []   # (side, pred)
+        left, right = node.left, node.right
+        l_keep, left = _strip_ai_filter(left)
+        r_keep, right = _strip_ai_filter(right)
+        movable += [("left", p) for p in l_keep]
+        movable += [("right", p) for p in r_keep]
+        if not movable:
+            return node
+        if mode == "always_pushdown":
+            choice = [False] * len(movable)       # stay below the join
+        elif mode == "always_pullup":
+            choice = [True] * len(movable)
+        else:
+            choice = self._best_placement(node, left, right, movable)
+        below_l = [p for (s, p), up in zip(movable, choice)
+                   if not up and s == "left"]
+        below_r = [p for (s, p), up in zip(movable, choice)
+                   if not up and s == "right"]
+        above = [p for (_, p), up in zip(movable, choice) if up]
+        new_left = P.Filter(left, tuple(below_l)) if below_l else left
+        new_right = P.Filter(right, tuple(below_r)) if below_r else right
+        out: P.PlanNode = dataclasses.replace(node, left=new_left,
+                                              right=new_right)
+        if above:
+            out = P.Filter(out, tuple(above))
+            self.trace.append(
+                f"pull-up: {len(above)} AI predicate(s) above join")
+        return out
+
+    def _best_placement(self, join: P.Join, left, right, movable
+                        ) -> List[bool]:
+        best_cost = float("inf")
+        best: List[bool] = [False] * len(movable)
+        for choice in itertools.product([False, True], repeat=len(movable)):
+            below_l = [p for (s, p), up in zip(movable, choice)
+                       if not up and s == "left"]
+            below_r = [p for (s, p), up in zip(movable, choice)
+                       if not up and s == "right"]
+            above = [p for (_, p), up in zip(movable, choice) if up]
+            nl = P.Filter(left, tuple(below_l)) if below_l else left
+            nr = P.Filter(right, tuple(below_r)) if below_r else right
+            cand: P.PlanNode = dataclasses.replace(join, left=nl, right=nr)
+            if above:
+                cand = P.Filter(cand, tuple(above))
+            c = self.cost.est_llm_cost(cand)
+            if c < best_cost - 1e-15:
+                best_cost = c
+                best = list(choice)
+        self.trace.append(f"placement: best LLM cost {best_cost:.6g}")
+        return best
+
+    # ------------------------------------------------------------------
+    # 3. semantic-join -> multi-label classification rewrite
+    # ------------------------------------------------------------------
+
+    def _rewrite_semantic_joins(self, node: P.PlanNode) -> P.PlanNode:
+        node = _map_children(node, self._rewrite_semantic_joins)
+        if not (isinstance(node, P.Join) and not node.equi):
+            return node
+        ai_res = [p for p in node.residual if isinstance(p, E.AIFilter)]
+        if len(ai_res) != 1 or len(node.residual) != 1:
+            return node
+        pred = ai_res[0]
+        dec = self.oracle.decide(node, pred)
+        self.trace.append(f"rewrite-oracle: {dec.reason}")
+        if not dec.applicable:
+            return node
+        if dec.label_side == "right":
+            left, right = node.left, node.right
+            l_col = self.oracle._split_prompt_args(node, pred)[0]
+        else:
+            left, right = node.right, node.left
+            l_col = self.oracle._split_prompt_args(node, pred)[1]
+        return P.SemanticJoinClassify(
+            left=left, right=right, prompt=pred.prompt,
+            left_arg=E.Column(l_col), label_col=dec.label_col,
+            model=pred.model,
+            max_labels_per_call=self.cfg.max_labels_per_call)
+
+
+# ---------------------------------------------------------------------------
+# plan-tree utilities
+# ---------------------------------------------------------------------------
+
+
+def _map_children(node: P.PlanNode, fn) -> P.PlanNode:
+    kids = node.children()
+    if not kids:
+        return node
+    new = tuple(fn(c) for c in kids)
+    if new == kids:
+        return node
+    if isinstance(node, P.Filter):
+        return dataclasses.replace(node, child=new[0])
+    if isinstance(node, (P.Join, P.SemanticJoinClassify)):
+        return dataclasses.replace(node, left=new[0], right=new[1])
+    if isinstance(node, (P.Project, P.Aggregate, P.Limit)):
+        return dataclasses.replace(node, child=new[0])
+    raise TypeError(node)
+
+
+def _strip_ai_filter(node: P.PlanNode) -> Tuple[List[E.Expr], P.PlanNode]:
+    """Remove AI conjuncts from a top-of-side Filter; returns (ai, rest)."""
+    if not isinstance(node, P.Filter):
+        return [], node
+    ai = [p for p in node.predicates if p.is_ai()]
+    rel = [p for p in node.predicates if not p.is_ai()]
+    if not ai:
+        return [], node
+    rest: P.PlanNode = (P.Filter(node.child, tuple(rel)) if rel
+                        else node.child)
+    return ai, rest
+
+
+def _pname(p: E.Expr) -> str:
+    if isinstance(p, E.AIFilter):
+        return "AI_FILTER" + ("[mm]" if p.multimodal else "")
+    if isinstance(p, E.AIClassify):
+        return "AI_CLASSIFY"
+    return type(p).__name__

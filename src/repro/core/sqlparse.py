@@ -1,0 +1,362 @@
+"""Recursive-descent parser for the AISQL dialect (paper §3).
+
+Supported surface:
+
+    SELECT <items> FROM t [AS] a
+      [JOIN t2 [AS] b ON <expr>]*
+      [WHERE <expr>] [GROUP BY <cols>] [LIMIT n]
+
+with the AI operators AI_COMPLETE, AI_FILTER, AI_CLASSIFY, AI_AGG,
+AI_SUMMARIZE_AGG, the PROMPT(...) object, FILE utilities (FL_IS_IMAGE...),
+BETWEEN/IN/AND/OR/NOT, array literals ['a','b'] for label sets, and an
+optional ``model => 'name'`` keyword argument on AI calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, List, Optional, Tuple
+
+from repro.core import expr as E
+
+_TOKEN_RE = re.compile(r"""
+    (?P<ws>\s+)
+  | (?P<arrow>=>)
+  | (?P<op><=|>=|!=|<>|[=<>+\-*/(),\[\].])
+  | (?P<num>\d+(\.\d+)?)
+  | (?P<str>'(?:[^']|'')*')
+  | (?P<ident>[A-Za-z_][A-Za-z_0-9]*)
+""", re.VERBOSE)
+
+_KEYWORDS = {
+    "SELECT", "FROM", "JOIN", "ON", "WHERE", "GROUP", "BY", "LIMIT", "AS",
+    "AND", "OR", "NOT", "BETWEEN", "IN", "INNER", "LEFT", "ORDER", "ASC",
+    "DESC", "TRUE", "FALSE",
+}
+
+
+@dataclasses.dataclass
+class Tok:
+    kind: str      # op | num | str | ident | kw | arrow | eof
+    value: str
+
+
+def _lex(sql: str) -> List[Tok]:
+    out: List[Tok] = []
+    i = 0
+    while i < len(sql):
+        m = _TOKEN_RE.match(sql, i)
+        if not m:
+            raise SyntaxError(f"cannot tokenize at: {sql[i:i+30]!r}")
+        i = m.end()
+        kind = m.lastgroup
+        if kind == "ws":
+            continue
+        v = m.group()
+        if kind == "ident" and v.upper() in _KEYWORDS:
+            out.append(Tok("kw", v.upper()))
+        else:
+            out.append(Tok(kind, v))
+    out.append(Tok("eof", ""))
+    return out
+
+
+@dataclasses.dataclass
+class TableRef:
+    table: str
+    alias: str
+
+
+@dataclasses.dataclass
+class JoinClause:
+    ref: TableRef
+    on: E.Expr
+
+
+@dataclasses.dataclass
+class Query:
+    select: List[E.SelectItem]
+    table: TableRef
+    joins: List[JoinClause]
+    where: Optional[E.Expr]
+    group_by: List[str]
+    limit: Optional[int]
+
+
+class Parser:
+    def __init__(self, sql: str):
+        self.toks = _lex(sql)
+        self.i = 0
+
+    # ---- token helpers ----
+    def peek(self) -> Tok:
+        return self.toks[self.i]
+
+    def next(self) -> Tok:
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def accept(self, kind: str, value: Optional[str] = None) -> Optional[Tok]:
+        t = self.peek()
+        if t.kind == kind and (value is None or t.value == value):
+            return self.next()
+        return None
+
+    def expect(self, kind: str, value: Optional[str] = None) -> Tok:
+        t = self.accept(kind, value)
+        if t is None:
+            raise SyntaxError(f"expected {value or kind}, got "
+                              f"{self.peek().kind}:{self.peek().value!r}")
+        return t
+
+    # ---- grammar ----
+    def parse(self) -> Query:
+        self.expect("kw", "SELECT")
+        items = [self.select_item()]
+        while self.accept("op", ","):
+            items.append(self.select_item())
+        self.expect("kw", "FROM")
+        table = self.table_ref()
+        joins = []
+        while True:
+            if self.accept("kw", "INNER"):
+                self.expect("kw", "JOIN")
+            elif not self.accept("kw", "JOIN"):
+                break
+            ref = self.table_ref()
+            self.expect("kw", "ON")
+            joins.append(JoinClause(ref, self.expr()))
+        where = None
+        if self.accept("kw", "WHERE"):
+            where = self.expr()
+        group_by: List[str] = []
+        if self.accept("kw", "GROUP"):
+            self.expect("kw", "BY")
+            group_by.append(self.qualified_name())
+            while self.accept("op", ","):
+                group_by.append(self.qualified_name())
+        limit = None
+        if self.accept("kw", "LIMIT"):
+            limit = int(self.expect("num").value)
+        self.expect("eof")
+        return Query(items, table, joins, where, group_by, limit)
+
+    def select_item(self) -> E.SelectItem:
+        if self.accept("op", "*"):
+            return E.SelectItem(E.Star())
+        ex = self.expr()
+        alias = None
+        if self.accept("kw", "AS"):
+            alias = self.expect("ident").value
+        elif self.peek().kind == "ident":
+            alias = self.next().value
+        return E.SelectItem(ex, alias)
+
+    def table_ref(self) -> TableRef:
+        name = self.expect("ident").value
+        alias = name
+        if self.accept("kw", "AS"):
+            alias = self.expect("ident").value
+        elif self.peek().kind == "ident":
+            alias = self.next().value
+        return TableRef(name, alias)
+
+    def qualified_name(self) -> str:
+        name = self.expect("ident").value
+        while self.accept("op", "."):
+            name += "." + self.expect("ident").value
+        return name
+
+    # expressions (precedence: OR < AND < NOT < cmp < add < mul < atom)
+    def expr(self) -> E.Expr:
+        return self.or_expr()
+
+    def or_expr(self) -> E.Expr:
+        parts = [self.and_expr()]
+        while self.accept("kw", "OR"):
+            parts.append(self.and_expr())
+        return parts[0] if len(parts) == 1 else E.BoolOp("or", tuple(parts))
+
+    def and_expr(self) -> E.Expr:
+        parts = [self.not_expr()]
+        while self.accept("kw", "AND"):
+            parts.append(self.not_expr())
+        return parts[0] if len(parts) == 1 else E.BoolOp("and", tuple(parts))
+
+    def not_expr(self) -> E.Expr:
+        if self.accept("kw", "NOT"):
+            return E.Not(self.not_expr())
+        return self.cmp_expr()
+
+    def cmp_expr(self) -> E.Expr:
+        left = self.add_expr()
+        t = self.peek()
+        if t.kind == "op" and t.value in ("=", "!=", "<>", "<", "<=", ">", ">="):
+            self.next()
+            op = "!=" if t.value == "<>" else t.value
+            return E.BinOp(op, left, self.add_expr())
+        if t.kind == "kw" and t.value == "BETWEEN":
+            self.next()
+            lo = self.add_expr()
+            self.expect("kw", "AND")
+            hi = self.add_expr()
+            return E.Between(left, lo, hi)
+        if t.kind == "kw" and t.value == "IN":
+            self.next()
+            self.expect("op", "(")
+            vals = [self.literal_value()]
+            while self.accept("op", ","):
+                vals.append(self.literal_value())
+            self.expect("op", ")")
+            return E.InList(left, tuple(vals))
+        return left
+
+    def add_expr(self) -> E.Expr:
+        left = self.mul_expr()
+        while True:
+            t = self.peek()
+            if t.kind == "op" and t.value in ("+", "-"):
+                self.next()
+                left = E.BinOp(t.value, left, self.mul_expr())
+            else:
+                return left
+
+    def mul_expr(self) -> E.Expr:
+        left = self.atom()
+        while True:
+            t = self.peek()
+            if t.kind == "op" and t.value in ("*", "/"):
+                self.next()
+                left = E.BinOp(t.value, left, self.atom())
+            else:
+                return left
+
+    def literal_value(self) -> Any:
+        t = self.next()
+        if t.kind == "num":
+            return float(t.value) if "." in t.value else int(t.value)
+        if t.kind == "str":
+            return t.value[1:-1].replace("''", "'")
+        if t.kind == "kw" and t.value in ("TRUE", "FALSE"):
+            return t.value == "TRUE"
+        raise SyntaxError(f"expected literal, got {t.value!r}")
+
+    def atom(self) -> E.Expr:
+        t = self.peek()
+        if t.kind == "op" and t.value == "(":
+            self.next()
+            ex = self.expr()
+            self.expect("op", ")")
+            return ex
+        if t.kind == "num":
+            self.next()
+            return E.Literal(float(t.value) if "." in t.value else int(t.value))
+        if t.kind == "str":
+            self.next()
+            return E.Literal(t.value[1:-1].replace("''", "'"))
+        if t.kind == "kw" and t.value in ("TRUE", "FALSE"):
+            self.next()
+            return E.Literal(t.value == "TRUE")
+        if t.kind == "op" and t.value == "[":
+            return E.Literal(self.array_literal())
+        if t.kind == "ident":
+            name = self.next().value
+            if self.peek().kind == "op" and self.peek().value == "(":
+                return self.call(name)
+            full = name
+            while self.accept("op", "."):
+                full += "." + self.expect("ident").value
+            return E.Column(full)
+        if t.kind == "op" and t.value == "*":
+            self.next()
+            return E.Star()
+        raise SyntaxError(f"unexpected token {t.value!r}")
+
+    def array_literal(self) -> Tuple[str, ...]:
+        self.expect("op", "[")
+        vals = [self.literal_value()]
+        while self.accept("op", ","):
+            vals.append(self.literal_value())
+        self.expect("op", "]")
+        return tuple(str(v) for v in vals)
+
+    # ---- calls ----
+    def call(self, name: str) -> E.Expr:
+        uname = name.upper()
+        self.expect("op", "(")
+        if uname == "COUNT" and self.accept("op", "*"):
+            self.expect("op", ")")
+            return E.AggCall("COUNT", (E.Star(),))
+        args: List[E.Expr] = []
+        kwargs = {}
+        if not (self.peek().kind == "op" and self.peek().value == ")"):
+            while True:
+                if (self.peek().kind == "ident"
+                        and self.toks[self.i + 1].kind == "arrow"):
+                    kw = self.next().value.lower()
+                    self.next()  # =>
+                    kwargs[kw] = self.literal_value()
+                else:
+                    args.append(self.expr())
+                if not self.accept("op", ","):
+                    break
+        self.expect("op", ")")
+        return self.build_call(uname, args, kwargs)
+
+    def build_call(self, uname, args, kwargs) -> E.Expr:
+        model = kwargs.get("model")
+        if uname == "PROMPT":
+            tpl = _lit_str(args[0])
+            return E.Prompt(tpl, tuple(args[1:]))
+        if uname == "AI_FILTER":
+            p = args[0]
+            if not isinstance(p, E.Prompt):
+                if isinstance(p, E.Literal):
+                    p = E.Prompt(str(p.value), tuple(args[1:]))
+                else:
+                    p = E.Prompt("{0}", (p,))
+            return E.AIFilter(p, model=model)
+        if uname == "AI_CLASSIFY":
+            text = args[0]
+            if not isinstance(text, E.Prompt):
+                text = (E.Prompt(str(text.value), ())
+                        if isinstance(text, E.Literal)
+                        else E.Prompt("{0}", (text,)))
+            labels: Tuple[str, ...] = ()
+            labels_expr = None
+            if len(args) > 1:
+                second = args[1]
+                if isinstance(second, E.Literal) and isinstance(second.value,
+                                                                tuple):
+                    labels = second.value
+                else:
+                    labels_expr = second
+            return E.AIClassify(text, labels=labels, labels_expr=labels_expr,
+                                multi_label=bool(kwargs.get("multi_label",
+                                                            False)),
+                                model=model)
+        if uname == "AI_COMPLETE":
+            p = args[0]
+            if not isinstance(p, E.Prompt):
+                p = (E.Prompt(str(p.value), tuple(args[1:]))
+                     if isinstance(p, E.Literal) else E.Prompt("{0}", (p,)))
+            return E.AIComplete(p, model=model,
+                                max_tokens=int(kwargs.get("max_tokens", 48)))
+        if uname == "AI_AGG":
+            instr = _lit_str(args[1]) if len(args) > 1 else None
+            return E.AggCall("AI_AGG", (args[0],), instruction=instr)
+        if uname == "AI_SUMMARIZE_AGG":
+            return E.AggCall("AI_SUMMARIZE_AGG", (args[0],))
+        if uname in ("COUNT", "SUM", "AVG", "MIN", "MAX"):
+            return E.AggCall(uname, tuple(args))
+        return E.FuncCall(uname, tuple(args))
+
+
+def _lit_str(e: E.Expr) -> str:
+    assert isinstance(e, E.Literal) and isinstance(e.value, str), e
+    return e.value
+
+
+def parse(sql: str) -> Query:
+    return Parser(sql).parse()

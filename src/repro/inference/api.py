@@ -1,0 +1,116 @@
+"""Cortex Platform API Service (paper §2): the front-end the SQL engine
+talks to.  Applies business logic (request ids, budget guards, credit
+metering), forwards to the Scheduler, and exposes typed convenience calls
+used by the AISQL operators.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, Request,
+                                     Result)
+from repro.inference.scheduler import Scheduler
+
+
+class CortexClient:
+    """What a virtual warehouse holds: a handle to the Cortex API service."""
+
+    def __init__(self, scheduler: Scheduler, *, default_model: str = "oracle-70b",
+                 proxy_model: str = "proxy-8b"):
+        self.scheduler = scheduler
+        self.default_model = default_model
+        self.proxy_model = proxy_model
+        self._ids = itertools.count(1)
+        # meters (paper §4 cost-analysis instrumentation)
+        self.ai_calls = 0
+        self.ai_credits = 0.0
+        self.ai_seconds = 0.0
+        self.calls_by_model: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def _submit(self, requests: List[Request]) -> List[Result]:
+        for r in requests:
+            r.request_id = next(self._ids)
+        results = self.scheduler.submit(requests)
+        self.ai_calls += len(results)
+        for res in results:
+            self.ai_credits += res.credits
+            self.ai_seconds += res.latency_s
+            self.calls_by_model[res.model] = \
+                self.calls_by_model.get(res.model, 0) + 1
+        return results
+
+    # ------------------------------------------------------------------
+    def complete(self, prompts: Sequence[str], *, model: Optional[str] = None,
+                 max_tokens: int = 48,
+                 metadata: Optional[Sequence[Dict[str, Any]]] = None
+                 ) -> List[str]:
+        model = model or self.default_model
+        md = metadata or [{} for _ in prompts]
+        res = self._submit([
+            Request(p, model, COMPLETE, max_tokens=max_tokens, metadata=m)
+            for p, m in zip(prompts, md)])
+        return [r.text for r in res]
+
+    def filter_scores(self, prompts: Sequence[str], *,
+                      model: Optional[str] = None,
+                      metadata: Optional[Sequence[Dict[str, Any]]] = None
+                      ) -> np.ndarray:
+        """Confidence s_i = P(predicate true) per row (§5.2)."""
+        model = model or self.default_model
+        md = metadata or [{} for _ in prompts]
+        res = self._submit([
+            Request(p, model, SCORE, metadata=m) for p, m in zip(prompts, md)])
+        return np.asarray([r.score for r in res], np.float64)
+
+    def classify(self, prompts: Sequence[str], labels: Tuple[str, ...], *,
+                 model: Optional[str] = None, multi_label: bool = False,
+                 metadata: Optional[Sequence[Dict[str, Any]]] = None
+                 ) -> List[Tuple[str, ...]]:
+        model = model or self.default_model
+        md = metadata or [{} for _ in prompts]
+        res = self._submit([
+            Request(p, model, CLASSIFY, labels=tuple(labels),
+                    multi_label=multi_label, metadata=m)
+            for p, m in zip(prompts, md)])
+        return [tuple(r.labels or ((r.label,) if r.label else ())) for r in res]
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        return {"ai_calls": self.ai_calls, "ai_credits": self.ai_credits,
+                "ai_seconds": self.ai_seconds,
+                "calls_by_model": dict(self.calls_by_model)}
+
+    def meter_delta(self, before: Dict[str, Any]) -> Dict[str, Any]:
+        return {
+            "ai_calls": self.ai_calls - before["ai_calls"],
+            "ai_credits": self.ai_credits - before["ai_credits"],
+            "ai_seconds": self.ai_seconds - before["ai_seconds"],
+        }
+
+
+def make_simulated_client(*, seed: int = 0, default_model: str = "oracle-70b",
+                          proxy_model: str = "proxy-8b") -> CortexClient:
+    """Convenience: a CortexClient over the calibrated simulator."""
+    from repro.inference.simulator import SimulatedBackend
+    sched = Scheduler()
+    sched.register(SimulatedBackend(seed=seed))
+    return CortexClient(sched, default_model=default_model,
+                        proxy_model=proxy_model)
+
+
+def make_engine_client(archs: Sequence[str] = ("proxy-8b", "oracle-70b"), *,
+                       seed: int = 0, replicas: int = 1,
+                       default_model: Optional[str] = None) -> CortexClient:
+    """Convenience: a CortexClient over real JAX engines (smoke-size)."""
+    from repro.inference.engine import JaxInferenceEngine
+    sched = Scheduler()
+    for arch in archs:
+        for rep in range(replicas):
+            sched.register(JaxInferenceEngine(
+                arch, engine_id=f"{arch}#{rep}", seed=seed + rep))
+    return CortexClient(sched, default_model=default_model or archs[-1],
+                        proxy_model=archs[0])

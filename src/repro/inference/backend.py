@@ -1,0 +1,75 @@
+"""Inference request/result types and the backend protocol.
+
+Everything above this line (AISQL executor, cascades, join rewrite) talks to
+``InferenceBackend.submit_batch`` only — the real JAX engine and the
+calibrated simulator are interchangeable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+COMPLETE = "complete"
+SCORE = "score"        # binary predicate -> confidence in [0,1]
+CLASSIFY = "classify"  # choose label(s) from a candidate set
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: str
+    model: str
+    kind: str = COMPLETE
+    max_tokens: int = 32
+    labels: Optional[Tuple[str, ...]] = None
+    multi_label: bool = False
+    # opaque payload: ground-truth hooks for the simulator, routing hints…
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    request_id: int = 0
+
+
+@dataclasses.dataclass
+class Result:
+    request_id: int
+    model: str
+    kind: str
+    text: str = ""
+    score: Optional[float] = None            # SCORE kind
+    label: Optional[str] = None              # CLASSIFY kind (top-1)
+    labels: Optional[Tuple[str, ...]] = None  # CLASSIFY multi-label
+    tokens_in: int = 0
+    tokens_out: int = 0
+    credits: float = 0.0
+    latency_s: float = 0.0
+    engine_id: str = ""
+
+
+class InferenceBackend(Protocol):
+    def submit_batch(self, requests: Sequence[Request]) -> List[Result]: ...
+    def hosted_models(self) -> List[str]: ...
+
+
+class EngineFailure(RuntimeError):
+    """Raised by an engine when a (possibly injected) fault occurs; the
+    scheduler retries on a healthy replica."""
+
+
+# --- model pricing table (credits per 1M tokens), mirrors §4's observation
+# that AI credits dominate and that multimodal/oracle models cost more.
+CREDITS_PER_MTOK = {
+    "proxy-8b": 0.19,
+    "oracle-70b": 1.33,
+    "recurrentgemma-9b": 0.22,
+    "command-r-35b": 0.83,
+    "qwen3-32b": 0.75,
+    "stablelm-12b": 0.30,
+    "minitron-8b": 0.19,
+    "whisper-base": 0.06,
+    "phi3.5-moe-42b-a6.6b": 0.17,   # active-param priced
+    "qwen2-moe-a2.7b": 0.08,
+    "qwen2-vl-7b": 0.90,            # multimodal premium (paper §5.1)
+    "rwkv6-1.6b": 0.05,
+}
+
+
+def credits_for(model: str, tokens: int) -> float:
+    return CREDITS_PER_MTOK.get(model, 0.5) * tokens / 1e6

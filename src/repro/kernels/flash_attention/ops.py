@@ -1,0 +1,39 @@
+"""Public jit'd wrapper for flash attention (model layout [B,S,H,hd])."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto", block_q: int = 128,
+                    block_k: int = 128):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] -> [B,Sq,H,hd].
+
+    impl: "pallas" (compiled TPU kernel), "interpret" (kernel body traced on
+    CPU — used by the test suite), "reference" (jnp oracle), "auto"
+    (pallas on TPU else reference).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    qt = jnp.swapaxes(q, 1, 2)            # [B,H,S,hd]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if impl == "reference":
+        out = flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention_kernel(
+            qt, kt, vt, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, interpret=(impl == "interpret"))
+    return jnp.swapaxes(out, 1, 2)

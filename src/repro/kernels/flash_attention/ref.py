@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA causal attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        sm_scale: float | None = None):
+    """q: [B,H,Sq,hd]; k,v: [B,KV,Skv,hd] -> [B,H,Sq,hd].
+
+    GQA: q head h uses kv head h // (H // KV).  Optional sliding window.
+    """
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, Sq, hd)
+    logits = jnp.einsum("bcgqd,bckd->bcgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bcgqk,bckd->bcgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the RG-LRU scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_w", "block_t"))
+def rglru_scan(a, b, h0, *, impl: str = "auto", block_w: int = 512,
+               block_t: int = 128):
+    """h_t = a_t*h_{t-1} + b_t.  a,b: [B,S,W]; h0: [B,W] ->
+    (hs [B,S,W], hT [B,W]) in fp32."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl == "reference":
+        return rglru_scan_ref(a, b, h0)
+    return rglru_scan_kernel(a, b, h0, block_w=block_w, block_t=block_t,
+                             interpret=(impl == "interpret"))

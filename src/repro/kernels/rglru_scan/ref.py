@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t.  a,b: [B,S,W] fp32; h0: [B,W].
+    Returns (hs [B,S,W], hT [B,W])."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+    hT, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(b.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT

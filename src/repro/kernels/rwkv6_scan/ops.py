@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the RWKV-6 wkv recurrence."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_t"))
+def rwkv6_scan(r, k, v, w, u, s0, *, impl: str = "auto", block_t: int = 64):
+    """r,k,v,w: [B,S,H,hd]; u: [H,hd]; s0: [B,H,hd,hd] ->
+    (o [B,S,H,hd] fp32, sT [B,H,hd,hd] fp32)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl == "reference":
+        return rwkv6_scan_ref(r, k, v, w, u, s0)
+    return rwkv6_scan_kernel(r, k, v, w, u, s0, block_t=block_t,
+                             interpret=(impl == "interpret"))

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the RWKV-6 wkv recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """RWKV6: o_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ);  S_t = diag(w_t) S + k_t v_tᵀ.
+
+    r,k,v,w: [B,S,H,hd]  (w ∈ (0,1) decay);  u: [H,hd];  s0: [B,H,hd,hd] fp32.
+    Returns (o [B,S,H,hd] fp32, sT [B,H,hd,hd] fp32).
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, rkvw):
+        r_t, k_t, v_t, w_t = rkvw
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        s_att = s + u[None, :, :, None] * kv
+        o_t = jnp.einsum("bhi,bhij->bhj", r_t, s_att)
+        s = w_t[..., :, None] * s + kv
+        return s, o_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    sT, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1), sT

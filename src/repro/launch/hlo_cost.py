@@ -1,0 +1,466 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 64 layers contributes its body a single time, so flops /
+bytes / collectives are undercounted by the trip count (verified
+empirically on this backend: scan(8×matmul) reports 1×matmul flops).
+
+This module re-derives the three roofline inputs by walking the HLO call
+graph with multiplicities:
+
+  * computations reached through ``while`` bodies inherit
+    ``known_trip_count`` from the op's backend_config (jax scans always
+    carry it);
+  * ``fusion``/``call``/``conditional`` propagate the caller multiplicity;
+  * per-op costs: ``dot`` = 2·prod(result)·contraction; elementwise ~1
+    flop/elem (transcendentals 8); ``reduce`` counts its operand once;
+  * traffic bytes are counted at fusion/dot/copy/dus/… boundaries —
+    post-fusion, these are the buffers that actually move through HBM;
+  * collectives get ring-algorithm wire bytes × multiplicity, tagged with
+    the jax op_name path so hot spots are attributable (attn vs mlp vs
+    optimizer).
+
+Everything is derived from ``compiled.as_text()`` — the artifact the
+dry-run already produces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_TRANSCENDENTAL = {"tanh", "exp", "exponential", "log", "rsqrt", "sqrt",
+                   "power", "logistic", "sine", "cosine", "atan2",
+                   "exponential-minus-one", "log-plus-one", "erf", "cbrt"}
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+                "compare", "select", "and", "or", "xor", "not", "negate",
+                "abs", "sign", "floor", "ceil", "round-nearest-afz",
+                "round-nearest-even", "clamp", "convert", "shift-left",
+                "shift-right-logical", "shift-right-arithmetic", "remainder",
+                "is-finite", "popcnt", "clz", "stochastic-convert"}
+_TRAFFIC_OPS = {"fusion", "dot", "copy", "dynamic-update-slice",
+                "dynamic-slice", "gather", "scatter", "reduce", "transpose",
+                "convert", "broadcast", "concatenate", "slice", "pad",
+                "reverse", "select-and-scatter", "custom-call", "reshape",
+                "reduce-window", "sort", "iota", "rng", "cholesky",
+                "triangular-solve", "convolution", "copy-start"}
+_SKIP_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "copy-done",
+             "get-dimension-size", "opt-barrier"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across every array in a (tuple) shape str."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    shape: str          # result shape string
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\)|\S+?))\s+"    # result shape (tuples have no inner parens)
+    r"([\w\-]+)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"?(\d+)"?')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^()]*)\)")   # operand names never nest parens
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and "->" in line \
+                and line.rstrip().endswith("{"):
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, shape, kind = m.group(1), m.group(2), m.group(3)
+            cur.ops.append(Op(name, kind, shape, line))
+            cur.shapes[name] = shape
+    return comps, entry
+
+
+def _multiplicities(comps: Dict[str, Computation], entry: str
+                    ) -> Tuple[Dict[str, float], set]:
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_called: set = set()
+
+    def visit(comp_name: str, m: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        mult[comp_name] += m
+        for op in comp.ops:
+            if op.kind == "while":
+                trips = 1.0
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = float(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                cm = _COND_RE.search(op.line)
+                if bm:
+                    visit(bm.group(1), m * trips)
+                if cm:
+                    visit(cm.group(1), m * (trips + 1))
+            elif op.kind in ("fusion", "call", "async-start"):
+                cm = _CALLS_RE.search(op.line) or _TOAPPLY_RE.search(op.line)
+                if cm:
+                    if op.kind == "fusion":
+                        fusion_called.add(cm.group(1))
+                    visit(cm.group(1), m)
+            elif op.kind == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        visit(b.strip().lstrip("%"), m)
+            # reduce/map/sort to_apply bodies: per-element scalar ops —
+            # accounted via the reduce op itself, not traversed.
+    visit(entry, 1.0)
+    return mult, fusion_called
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    relems, _ = shape_elems_bytes(op.shape)
+    contract = 1
+    cm = _CONTRACT_RE.search(op.line)
+    om = _OPERANDS_RE.search(op.line[op.line.index(op.kind):])
+    if cm and om:
+        lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
+        lhs_shape = comp.shapes.get(lhs_name, "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci.strip():
+                    i = int(ci)
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2.0 * relems * contract
+
+
+def _op_operand_bytes(op: Op, comp: Computation) -> int:
+    om = _OPERANDS_RE.search(op.line[op.line.index(op.kind):])
+    if not om:
+        return 0
+    total = 0
+    for nm in om.group(1).split(","):
+        nm = nm.strip().lstrip("%")
+        if not nm:
+            continue
+        sh = comp.shapes.get(nm)
+        if sh:
+            total += shape_elems_bytes(sh)[1]
+    return total
+
+
+def _first_operand(op: Op) -> Optional[str]:
+    om = _OPERANDS_RE.search(op.line[op.line.index(op.kind):])
+    if not om:
+        return None
+    parts = om.group(1).split(",")
+    return parts[0].strip().lstrip("%") if parts else None
+
+
+def _unwrap(comp: Computation, op: Op, kinds=("convert", "bitcast", "copy")
+            ) -> Op:
+    """Follow single-operand wrapper ops (the CPU backend legalizes bf16
+    DUS as convert→DUS→convert; TPU updates in place)."""
+    by_name = {o.name: o for o in comp.ops}
+    seen = 0
+    while op.kind in kinds and seen < 8:
+        nm = _first_operand(op)
+        if nm is None or nm not in by_name:
+            break
+        op = by_name[nm]
+        seen += 1
+    return op
+
+
+def _dus_update_bytes(comp: Computation) -> Optional[float]:
+    """If the computation's ROOT is (a wrapper around) a
+    dynamic-update-slice (or a tuple of them), return the bytes of the
+    update operands — the in-place pattern XLA buffer-assigns without
+    copying the big buffer."""
+    roots = [o for o in comp.ops if o.line.lstrip().startswith("ROOT")]
+    if not roots:
+        return None
+    root = _unwrap(comp, roots[0])
+    dus_ops = []
+    if root.kind == "dynamic-update-slice":
+        dus_ops = [root]
+    elif root.kind == "tuple":
+        om = _OPERANDS_RE.search(root.line[root.line.index("tuple"):])
+        if om:
+            names = {n.strip().lstrip("%") for n in om.group(1).split(",")}
+            dus_ops = [o for o in comp.ops
+                       if o.name in names and o.kind == "dynamic-update-slice"]
+        if not dus_ops:
+            return None
+    else:
+        return None
+    by_name = {o.name: o for o in comp.ops}
+    total = 0.0
+    for o in dus_ops:
+        om = _OPERANDS_RE.search(o.line[o.line.index(o.kind):])
+        if not om:
+            return None
+        names = [n.strip().lstrip("%") for n in om.group(1).split(",")]
+        if len(names) < 2:
+            return None
+        upd_op = by_name.get(names[1])
+        upd = _unwrap(comp, upd_op).shape if upd_op is not None \
+            else comp.shapes.get(names[1])
+        if upd is None:
+            return None
+        total += shape_elems_bytes(upd)[1]
+    return total
+
+
+def _param_slice_traffic(callee: Computation) -> Dict[int, float]:
+    """Per-parameter-index traffic override for fused slicing reads.
+
+    A fusion operand that is only consumed by dynamic-slice/gather inside
+    the fused computation reads just the slice, not the whole buffer
+    (the loop-body pattern: read layer i of a stacked [L, ...] array).
+    Returns {param_index: effective_bytes}.
+    """
+    out: Dict[int, float] = {}
+    params = {}
+    for o in callee.ops:
+        if o.kind == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", o.line)
+            if pm:
+                params[o.name] = int(pm.group(1))
+    for pname, pidx in params.items():
+        pat = re.compile(r"%" + re.escape(pname) + r"\b")
+        users = [o for o in callee.ops
+                 if o.name != pname and pat.search(o.line)]
+        if users and all(u.kind in ("dynamic-slice", "slice", "gather")
+                         for u in users):
+            out[pidx] = float(sum(shape_elems_bytes(u.shape)[1]
+                                  for u in users))
+    return out
+
+
+def _fusion_traffic(op: Op, comp: Computation, callee: Computation,
+                    rbytes: int) -> float:
+    """Traffic of one fusion execution: result write + operand reads, with
+    the in-place-DUS root and fused-slice-read patterns accounted."""
+    upd = _dus_update_bytes(callee)
+    slice_reads = _param_slice_traffic(callee)
+    # aliased operand index for a DUS root (operand 0 of the root DUS, when
+    # it is a plain parameter)
+    aliased_idx = None
+    if upd is not None:
+        roots = [o for o in callee.ops if o.line.lstrip().startswith("ROOT")]
+        dus = _unwrap(callee, roots[0]) if roots else None
+        if dus is not None and dus.kind == "dynamic-update-slice":
+            first = _first_operand(dus)
+            by_name = {o.name: o for o in callee.ops}
+            o = by_name.get(first)
+            if o is not None:
+                o = _unwrap(callee, o)
+                if o.kind == "parameter":
+                    pm = re.search(r"parameter\((\d+)\)", o.line)
+                    if pm:
+                        aliased_idx = int(pm.group(1))
+    total = 2.0 * upd if upd is not None else float(rbytes)
+    om = _OPERANDS_RE.search(op.line[op.line.index("fusion"):])
+    if om:
+        for i, nm in enumerate(om.group(1).split(",")):
+            nm = nm.strip().lstrip("%")
+            if not nm:
+                continue
+            if i == aliased_idx:
+                continue                      # in-place: no full read/write
+            if i in slice_reads:
+                total += 2.0 * slice_reads[i]
+                continue
+            sh = comp.shapes.get(nm)
+            if sh:
+                total += shape_elems_bytes(sh)[1]
+    return total
+
+
+def _traffic_bytes(op: Op, comp: Computation, rbytes: int,
+                   comps: Optional[Dict[str, Computation]] = None) -> float:
+    """Realistic HBM traffic for one op execution.
+
+    In-place-updating and slicing ops move only the slice, not the full
+    buffer (XLA buffer-assigns DUS in place, including DUS-rooted loop
+    fusions); reshapes are bitcasts.
+    """
+    kind = op.kind
+    if kind == "reshape" or kind == "bitcast":
+        return 0.0
+    if kind == "dynamic-update-slice":
+        om = _OPERANDS_RE.search(op.line[op.line.index(kind):])
+        if om:
+            names = [n.strip().lstrip("%") for n in om.group(1).split(",")]
+            if len(names) > 1:
+                upd = comp.shapes.get(names[1])
+                if upd:
+                    return 2.0 * shape_elems_bytes(upd)[1]
+        return float(rbytes)
+    if kind == "fusion" and comps is not None:
+        cm = _CALLS_RE.search(op.line)
+        if cm and cm.group(1) in comps:
+            return _fusion_traffic(op, comp, comps[cm.group(1)], rbytes)
+    if kind in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * rbytes          # read the slice + write it
+    if kind in ("broadcast", "iota", "pad"):
+        return float(rbytes)         # write-mostly
+    return rbytes + _op_operand_bytes(op, comp)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0               # per device
+    bytes: float = 0.0               # HBM traffic per device
+    collective_bytes: float = 0.0    # wire bytes per device
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    collective_by_path: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    flops_by_path: Dict[str, float] = dataclasses.field(default_factory=dict)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+
+def _wire_bytes(kind: str, result_bytes: int, operand_bytes: int,
+                group: int) -> float:
+    n = max(group, 1)
+    if n == 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * result_bytes
+    if kind == "reduce-scatter":
+        return (n - 1) / n * operand_bytes
+    if kind == "all-to-all":
+        return (n - 1) / n * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return float(result_bytes)
+
+
+def _path_tag(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    if not m:
+        return "?"
+    path = m.group(1)
+    # compress: keep the distinctive trailing parts
+    for tag in ("attn", "moe", "mlp", "rec", "rwkv", "embed", "lm_head",
+                "logits", "adamw", "grad", "loss", "rglru", "wkv",
+                "transpose(jvp", "norm"):
+        if tag in path:
+            return tag
+    parts = path.split("/")
+    return parts[-1][:40] if parts else "?"
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = parse_computations(hlo)
+    mult, fusion_called = _multiplicities(comps, entry)
+    out = HloCost()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        fused = cname in fusion_called
+        for op in comp.ops:
+            kind = op.kind
+            base = kind.replace("-start", "")
+            if base in _COLLECTIVES and not kind.endswith("-done"):
+                relems, rbytes = shape_elems_bytes(op.shape)
+                obytes = _op_operand_bytes(op, comp)
+                g = 1
+                gm = _GROUPS_RE.search(op.line)
+                if gm:
+                    g = len([x for x in gm.group(1).split(",") if x.strip()])
+                else:
+                    gm2 = _GROUPS_IOTA_RE.search(op.line)
+                    if gm2:
+                        g = int(gm2.group(2))
+                wb = _wire_bytes(base, rbytes, obytes, g) * m
+                out.collective_bytes += wb
+                out.collective_counts[base] = \
+                    out.collective_counts.get(base, 0) + int(m)
+                tag = _path_tag(op.line)
+                out.collective_by_path[tag] = \
+                    out.collective_by_path.get(tag, 0.0) + wb
+                continue
+            if kind in _SKIP_OPS or kind == "while" or kind == "conditional":
+                continue
+            # ---- flops ----
+            relems, rbytes = shape_elems_bytes(op.shape)
+            if kind == "dot":
+                f = _dot_flops(op, comp) * m
+                out.flops += f
+                tag = _path_tag(op.line)
+                out.flops_by_path[tag] = out.flops_by_path.get(tag, 0.0) + f
+            elif kind in _TRANSCENDENTAL:
+                out.flops += 8.0 * relems * m
+            elif kind in _ELEMENTWISE or kind in ("reduce", "map"):
+                out.flops += 1.0 * relems * m
+            # ---- bytes (traffic at non-fused op boundaries) ----
+            if not fused and kind in _TRAFFIC_OPS:
+                out.bytes += _traffic_bytes(op, comp, rbytes, comps) * m
+    return out

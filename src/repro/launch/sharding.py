@@ -1,0 +1,215 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs per arch.
+
+Scheme (Megatron/MaxText-flavoured, adapted to the zoo):
+
+  * TP (`model` axis): attention q-heads, MLP hidden, MoE experts (EP reuses
+    the TP axis), RG-LRU recurrence width, RWKV heads, vocab;
+  * FSDP (`data` axis): the d_model dimension of every weight (ZeRO-3-style;
+    XLA inserts the all-gathers);
+  * `pod` axis: pure data parallelism — params replicated across pods,
+    batch sharded, gradient all-reduce crosses pods once per step;
+  * GQA KV projections are REPLICATED across `model` (num_kv_heads ≤ 16
+    never divides evenly; the small-KV rule);
+  * decode KV caches: batch on the DP axes, sequence chunks on `model`
+    (flash-decode sharding) — this is what makes decode_32k/long_500k fit.
+
+Every rule degrades gracefully: an axis is only used when it divides the
+dimension, otherwise that dim is replicated (e.g. whisper's 51865 vocab).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgs
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit(mesh, shape, want: Sequence[Any]) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    spec = []
+    for dim, axis in zip(shape, want):
+        if axis is None:
+            spec.append(None)
+        elif dim % _axis_size(mesh, axis) == 0:
+            spec.append(axis)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def _resolve(token, fsdp, tp):
+    if token == "F":
+        return fsdp
+    if token == "T":
+        return tp
+    return token
+
+
+def _key_of(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (regex on the leaf path, want-spec builder given ndim); `F`=fsdp, `T`=tp.
+# Leading stacked-layer axes (periods/b*, enc_layers, dec_layers) are padded
+# with None by ndim alignment: the want list is right-aligned to the shape.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    (r"embed/w$",                       ("T", "F")),
+    (r"lm_head/w$",                     ("F", "T")),
+    (r"(pos_embed|enc_pos)/w$",         (None, "F")),
+    # attention
+    (r"attn/wq$",                       ("F", "T")),
+    (r"x?attn/w[kv]$",                  ("F", None)),
+    (r"attn/wo$",                       ("T", "F")),
+    (r"xattn/wq$",                      ("F", "T")),
+    (r"xattn/wo$",                      ("T", "F")),
+    (r"attn/bq$",                       ("T",)),
+    (r"attn/b[kvo]$",                   (None,)),
+    # dense MLP
+    (r"mlp/w[ig]$",                     ("F", "T")),
+    (r"mlp/wo$",                        ("T", "F")),
+    (r"mlp/b[ig]$",                     ("T",)),
+    (r"mlp/bo$",                        (None,)),
+    # MoE (EP on the model axis)
+    (r"router/w$",                      ("F", None)),
+    (r"experts/w[ig]$",                 ("T", "F", None)),
+    (r"experts/wo$",                    ("T", None, "F")),
+    (r"shared/w[ig]$",                  ("F", "T")),
+    (r"shared/wo$",                     ("T", "F")),
+    (r"shared/b[ig]$",                  ("T",)),
+    (r"shared/bo$",                     (None,)),
+    # RG-LRU
+    (r"rec/in_(x|gate)$",               ("F", "T")),
+    (r"rec/out$",                       ("T", "F")),
+    (r"rec/conv_w$",                    (None, "T")),
+    (r"rec/(conv_b|a_param|[ir]_gate_[wb])$", ("T",)),
+    # RWKV6
+    (r"tmix/w[rkvgw]$",                 ("F", "T")),
+    (r"tmix/ww$",                       ("F", "T")),
+    (r"tmix/wo$",                       ("T", "F")),
+    (r"tmix/u$",                        ("T", None)),
+    (r"tmix/(mu_.|w0|gn_scale|gn_bias)$", (None,)),
+    (r"cmix/wk$",                       ("F", "T")),
+    (r"cmix/wv$",                       ("T", "F")),
+    (r"cmix/mu_k$",                     (None,)),
+)
+
+
+def param_spec(mesh, key: str, shape, *, fsdp, tp) -> P:
+    # optimizer moments share the param layout
+    key = re.sub(r"^(mu|nu)/", "", key)
+    for pat, want in _PARAM_RULES:
+        if re.search(pat, key):
+            aligned: list = [None] * (len(shape) - len(want)) + [
+                {"F": fsdp, "T": tp, None: None}[w] for w in want]
+            return _fit(mesh, shape, aligned)
+    return P()          # norms, scalars, anything unmatched: replicate
+
+
+def state_specs(mesh, state_tree) -> Any:
+    """PartitionSpecs for a TrainState tree (params + adamw moments)."""
+    fsdp, tp = "data", "model"
+
+    def one(path, leaf):
+        key = _key_of(path)
+        key = re.sub(r"^(params|opt_state)/", "", key)
+        if key in ("count", "step"):
+            return P()
+        return param_spec(mesh, key, np.shape(leaf), fsdp=fsdp, tp=tp)
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def param_specs(mesh, params_tree, *, fsdp: Any = "data") -> Any:
+    """Param specs.  Training uses fsdp="data" (ZeRO-3 layout).  Serving
+    passes fsdp=None: weights TP-sharded only and replicated across the DP
+    axes — per-step FSDP all-gathers are pure waste when there is no
+    optimizer state to co-locate (observed: ~7 GB/step of weight gathers
+    on the 35B decode cell)."""
+    def one(path, leaf):
+        return param_spec(mesh, _key_of(path), np.shape(leaf),
+                          fsdp=fsdp, tp="model")
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(mesh, batch_tree) -> Any:
+    """Shard the leading (batch) dim over all DP axes (divisibility-gated)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_ax: Any = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        shape = np.shape(leaf)
+        if not shape:
+            return P()
+        return _fit(mesh, shape, [dp_ax] + [None] * (len(shape) - 1))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+_CACHE_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    # attention KV: [..., B, S, KV, hd] — batch on DP, sequence on model
+    (r"/x?k$|/x?v$|^k$|^v$|^xk$|^xv$",  ("B", "S", None, None)),
+    # RG-LRU state: h [B, W], conv [B, cw-1, W]
+    (r"/h$",                            ("B", "S")),
+    (r"/conv$",                         ("B", None, "S")),
+    # RWKV state: s [B, H, hd, hd], shift [B, D]
+    (r"/s$",                            ("B", "S", None, None)),
+    (r"/shift_[tc]$",                   ("B", None)),
+    (r"len$",                           ("B",)),
+)
+
+
+def cache_specs_tree(mesh, cache_tree) -> Any:
+    """KV/state cache sharding: batch over DP axes, the large state axis
+    (sequence / recurrence width / heads) over `model`."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_ax: Any = dp if len(dp) > 1 else dp[0]
+    sub = {"B": dp_ax, "S": "model", None: None}
+
+    def one(path, leaf):
+        key = _key_of(path)
+        shape = np.shape(leaf)
+        if not shape:
+            return P()
+        for pat, want in _CACHE_RULES:
+            if re.search(pat, key):
+                aligned = [None] * (len(shape) - len(want)) + [
+                    sub[w] for w in want]
+                return _fit(mesh, shape, aligned)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# convenience
+# ---------------------------------------------------------------------------
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

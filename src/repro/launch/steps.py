@@ -1,0 +1,154 @@
+"""Cell builders: one lowerable jit function per (arch × shape) cell.
+
+``build_cell(arch, shape_name, mesh)`` returns a :class:`Cell` carrying the
+jit-wrapped function, abstract input avals (ShapeDtypeStructs — nothing is
+allocated), and the in/out shardings.  ``cell.lower()`` is what the
+multi-pod dry-run and the roofline analysis consume.
+
+Cell kinds:
+  train   -> train_step(state, batch)            (loss/grad/adamw)
+  prefill -> prefill_step(params, batch)         (writes the KV cache)
+  decode  -> serve_step(params, cache, batch)    (one token vs. seq_len cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cfgs
+from repro.models import model_zoo
+from repro.launch import sharding as shd
+from repro.train.optim import AdamWConfig
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: cfgs.ShapeSpec
+    mesh: Any
+    fn: Callable
+    in_avals: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    model_flops: float
+    donate: Tuple[int, ...] = ()
+
+    sp: bool = False           # sequence parallelism on the layer carry
+
+    def jitted(self):
+        return jax.jit(self.fn,
+                       in_shardings=shd.named(self.mesh, self.in_shardings),
+                       out_shardings=(None if self.out_shardings is None else
+                                      shd.named(self.mesh, self.out_shardings)),
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        from repro.models import shardctx
+        shardctx.enable(self.mesh, sp=self.sp)
+        try:
+            with self.mesh:
+                return self.jitted().lower(*self.in_avals)
+        finally:
+            shardctx.disable()
+
+
+def _abstract_state(model: model_zoo.Model) -> Dict[str, Any]:
+    """TrainState avals via eval_shape (no allocation)."""
+    def mk():
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt = {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        return {"params": params, "opt_state": opt,
+                "step": jnp.zeros((), jnp.int32)}
+    return jax.eval_shape(mk)
+
+
+def _abstract_params(model: model_zoo.Model):
+    return jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               smoke: bool = False,
+               grad_accum: Optional[int] = None,
+               remat: bool = True,
+               sp: bool = False,
+               extra_tags: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = (cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch))
+    shape = cfgs.SHAPE_BY_NAME[shape_name]
+    model = model_zoo.build(cfg)
+    batch_avals = model_zoo.input_specs(cfg, shape)
+    batch_spec = shd.batch_specs(mesh, batch_avals)
+    mf = model_zoo.model_flops(cfg, shape)
+
+    if shape.kind == "train":
+        state_avals = _abstract_state(model)
+        state_spec = shd.state_specs(mesh, state_avals)
+        step_fn = make_train_step(model, AdamWConfig(),
+                                  grad_accum=grad_accum, remat=remat)
+        return Cell(arch, shape, mesh, step_fn, sp=sp,
+                    in_avals=(state_avals, batch_avals),
+                    in_shardings=(state_spec, batch_spec),
+                    out_shardings=(state_spec, None),
+                    model_flops=mf, donate=(0,))
+
+    dp_size = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp_size *= mesh.shape[a]
+    # serving weight layout: TP-only when DP actually has batch to split;
+    # B=1 long-context cells keep FSDP weight sharding (pure weight
+    # parallelism reads 1/16th the bytes per device)
+    serve_fsdp = None if shape.global_batch % dp_size == 0 else "data"
+
+    if shape.kind == "prefill":
+        params_avals = _abstract_params(model)
+        params_spec = shd.param_specs(mesh, params_avals, fsdp=serve_fsdp)
+        cache_avals = model_zoo.cache_specs(cfg, shape)
+        cache_spec = shd.cache_specs_tree(mesh, cache_avals)
+        B, S = shape.global_batch, shape.seq_len
+
+        def prefill_step(params, batch):
+            cache = model.init_cache(B, S)
+            out = model.apply(params, batch, mode="prefill", cache=cache)
+            logits = model.logits_of(params, out["last_hidden"])
+            return jnp.argmax(logits, -1).astype(jnp.int32), out["cache"]
+
+        return Cell(arch, shape, mesh, prefill_step, sp=sp,
+                    in_avals=(params_avals, batch_avals),
+                    in_shardings=(params_spec, batch_spec),
+                    out_shardings=(shd.batch_specs(
+                        mesh, jax.ShapeDtypeStruct((B,), jnp.int32)),
+                        cache_spec),
+                    model_flops=mf)
+
+    # decode (serving layout: TP-only weights, no per-step FSDP gathers)
+    params_avals = _abstract_params(model)
+    params_spec = shd.param_specs(mesh, params_avals, fsdp=serve_fsdp)
+    cache_avals = model_zoo.cache_specs(cfg, shape)
+    cache_spec = shd.cache_specs_tree(mesh, cache_avals)
+    B = shape.global_batch
+
+    def serve_step(params, cache, batch):
+        out = model.apply(params, batch, mode="decode", cache=cache)
+        logits = model.logits_of(params, out["hidden"][:, 0])
+        return jnp.argmax(logits, -1).astype(jnp.int32), out["cache"]
+
+    return Cell(arch, shape, mesh, serve_step, sp=sp,
+                in_avals=(params_avals, cache_avals, batch_avals),
+                in_shardings=(params_spec, cache_spec, batch_spec),
+                out_shardings=(shd.batch_specs(
+                    mesh, jax.ShapeDtypeStruct((B,), jnp.int32)),
+                    cache_spec),
+                model_flops=mf, donate=(1,))

@@ -1,0 +1,154 @@
+"""Shared model-building primitives: norms, projections, RoPE / M-RoPE.
+
+All modules are pure functions over explicit param pytrees (dicts of
+jnp arrays) — no framework dependency.  Matmuls run in the config dtype
+(bf16 by default) with fp32 softmax/norm statistics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def layer_norm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_init(d: int, dtype, use_layernorm: bool):
+    return layer_norm_init(d, dtype) if use_layernorm else rms_norm_init(d, dtype)
+
+
+def apply_norm(params, x, eps: float = 1e-6):
+    """RMSNorm or LayerNorm depending on whether a bias is present."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if "bias" in params:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def group_norm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head group norm used by RWKV6 (x: [..., H, hd])."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    sh = y.shape[:-2] + (y.shape[-2] * y.shape[-1],)
+    y = y.reshape(sh) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / mlp
+# ---------------------------------------------------------------------------
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...i,io->...o", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def mlp_init(key, d: int, f: int, dtype, use_bias: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, d, f, dtype),
+        "wg": dense_init(k2, d, f, dtype),
+        "wo": dense_init(k3, f, d, dtype),
+    }
+    if use_bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bg"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(params, x):
+    """Gated (SwiGLU-style) MLP."""
+    h = linear(x, params["wi"], params.get("bi"))
+    g = linear(x, params["wg"], params.get("bg"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    return linear(h, params["wo"], params.get("bo"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_inv_freq(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float,
+               mrope_sections: Tuple[int, ...] = ()):
+    """Rotate x: [..., S, H, hd].  positions: [..., S] or [..., S, 3] (M-RoPE).
+
+    Half-split (llama) convention.  For M-RoPE, rotary dim i uses the
+    position stream of its section (t/h/w), per Qwen2-VL.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    inv = rope_inv_freq(hd, theta)                      # [half]
+    if mrope_sections:
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        # section id for each rotary dim
+        sec = jnp.concatenate([
+            jnp.full((n,), i, jnp.int32) for i, n in enumerate(mrope_sections)
+        ])                                              # [half]
+        pos = positions.astype(jnp.float32)             # [..., S, 3]
+        pos_per_dim = pos[..., sec]                     # [..., S, half]
+        angles = pos_per_dim * inv                      # [..., S, half]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv   # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        lf = logits.astype(jnp.float32)
+        return (jnp.tanh(lf / cap) * cap).astype(logits.dtype)
+    return logits
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]

@@ -1,0 +1,156 @@
+"""Unified model interface over the 10 assigned architectures (+ extras).
+
+``build(arch)`` returns a :class:`Model` with init/apply/cache entry points;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an assigned (arch × shape) cell — weak-type-correct,
+shardable, and allocation-free (used by the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgs
+from repro.models import lm, whisper
+from repro.models.common import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: cfgs.ModelConfig
+    init_params: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    apply: Callable[..., Any]
+    logits_of: Callable[..., Any]
+    ce_loss: Callable[..., Any]
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+
+def build(arch: Union[str, cfgs.ModelConfig], *, smoke: bool = False) -> Model:
+    if isinstance(arch, str):
+        cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
+    else:
+        cfg = arch
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init_params=functools.partial(whisper.init_params, cfg),
+            init_cache=functools.partial(whisper.init_cache, cfg),
+            apply=functools.partial(whisper.apply, cfg),
+            logits_of=functools.partial(lm.logits_of, cfg),
+            ce_loss=functools.partial(lm.ce_loss_chunked, cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init_params=functools.partial(lm.init_params, cfg),
+        init_cache=functools.partial(lm.init_cache, cfg),
+        apply=functools.partial(lm.apply, cfg),
+        logits_of=functools.partial(lm.logits_of, cfg),
+        ce_loss=functools.partial(lm.ce_loss_chunked, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: cfgs.ModelConfig, shape: cfgs.ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for one (arch × shape) cell.
+
+    train  -> {"tokens","labels","loss_mask"} (+ modality extras)
+    prefill-> {"tokens","lengths"} (+ extras)
+    decode -> {"tokens"} (+ positions for M-RoPE); KV cache comes from
+              :func:`cache_specs`.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    act = dtype_of(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    if shape.kind == "train":
+        n_tok = S
+        if cfg.frontend == "patches":
+            n_tok = S - cfg.num_patches
+        batch["tokens"] = _sds((B, n_tok), jnp.int32)
+        batch["labels"] = _sds((B, S), jnp.int32)
+        batch["loss_mask"] = _sds((B, S), jnp.float32)
+        if cfg.frontend == "patches":
+            batch["patches"] = _sds((B, cfg.num_patches, cfg.d_model), act)
+            batch["positions"] = _sds((B, S, 3), jnp.int32)
+        if cfg.frontend == "frames":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), act)
+    elif shape.kind == "prefill":
+        n_tok = S
+        if cfg.frontend == "patches":
+            n_tok = S - cfg.num_patches
+        batch["tokens"] = _sds((B, n_tok), jnp.int32)
+        batch["lengths"] = _sds((B,), jnp.int32)
+        if cfg.frontend == "patches":
+            batch["patches"] = _sds((B, cfg.num_patches, cfg.d_model), act)
+            batch["positions"] = _sds((B, S, 3), jnp.int32)
+        if cfg.frontend == "frames":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), act)
+    else:  # decode: one new token against a cache of S tokens
+        batch["tokens"] = _sds((B, 1), jnp.int32)
+        if cfg.mrope_sections:
+            batch["positions"] = _sds((B, 1, 3), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg: cfgs.ModelConfig, shape: cfgs.ShapeSpec):
+    """Abstract KV/state-cache pytree for a decode cell (no allocation)."""
+    model = build(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs (roofline MODEL_FLOPS term)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: cfgs.ModelConfig, shape: cfgs.ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference fwd), N = active params.
+
+    D counts processed tokens: B·S for train/prefill, B·1 for decode.
+    Attention is *not* included (the ratio HLO/MODEL in the roofline table
+    surfaces attention + routing + remat overheads explicitly).
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    toks = shape.global_batch * 1
+    return 2.0 * n_active * toks
+
+
+def attention_flops(cfg: cfgs.ModelConfig, shape: cfgs.ShapeSpec) -> float:
+    """Analytic attention matmul FLOPs (qk^T + pv), forward only."""
+    n_attn = sum(1 for b in cfg.block_pattern if b == cfgs.ATTN)
+    n_local = sum(1 for b in cfg.block_pattern if b == cfgs.LOCAL_ATTN)
+    B, S = shape.global_batch, shape.seq_len
+    H, hd = cfg.num_heads, cfg.head_dim
+    if shape.kind == "decode":
+        per_q = 4.0 * H * hd
+        f = B * (n_attn * per_q * S + n_local * per_q * min(S, cfg.attention_window))
+        return f
+    # full-sequence: 2*S^2*H*hd per matmul pair (x2), /2 causal
+    full = 2.0 * S * S * H * hd
+    local = 2.0 * S * min(2 * cfg.attention_window, S) * H * hd
+    f = B * (n_attn * full + n_local * local)
+    if shape.kind == "train":
+        f *= 3.0  # fwd + bwd
+    return f

@@ -1,0 +1,94 @@
+"""Sharding-constraint context for model internals.
+
+XLA's sharding propagation handles most of the graph, but two spots need
+pinning on the production mesh:
+
+  * the GQA head-split reshape [B,S,H,hd] -> [B,S,KV,G,hd] — neither KV nor
+    G alone divides the 16-way `model` axis, and propagation can drop the
+    *batch* sharding while deciding, replicating multi-GiB attention
+    logits (observed: f32[4,128,1,2,1024,4096] per device);
+  * the scan-over-layers carry, whose sharding otherwise re-derives per
+    layer.
+
+``enable(mesh, ...)`` arms the context (launchers only — smoke tests and
+the CPU serving engine never enable it, so ``constrain`` is a no-op there).
+Dims that don't divide their axis are dropped per-dim, so one rule set
+serves every architecture.
+
+Tokens understood in a constraint spec: "dp" (all data-parallel axes),
+"tp" (the model axis), "sp" (sequence: tp when sequence-parallelism is on,
+else unsharded), None.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "dp": ("data",), "tp": "model", "sp": False}
+
+
+def enable(mesh, *, dp: Optional[Tuple[str, ...]] = None, tp: str = "model",
+           sp: bool = False) -> None:
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = dp or tuple(a for a in mesh.axis_names if a != tp)
+    _STATE["tp"] = tp
+    _STATE["sp"] = sp
+
+
+def disable() -> None:
+    _STATE["mesh"] = None
+
+
+def enabled() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def mesh_info():
+    """(mesh, dp_axes, tp_axis) or (None, None, None)."""
+    return _STATE["mesh"], _STATE["dp"], _STATE["tp"]
+
+
+def dp_for(batch: int):
+    """The subset of dp axes usable for a batch dim of this size."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return ()
+    dp = _STATE["dp"]
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if batch % size == 0 else ()
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def constrain(x, *dims: Any):
+    """Apply with_sharding_constraint(x, P(resolved dims)); no-op unless
+    a launcher enabled the context.  Drops non-dividing axes per-dim."""
+    mesh = _STATE["mesh"]
+    if mesh is None or not hasattr(x, "shape"):
+        return x
+    if len(dims) != len(x.shape):
+        return x
+    spec = []
+    for size, d in zip(x.shape, dims):
+        axis = {"dp": _STATE["dp"], "tp": _STATE["tp"],
+                "sp": (_STATE["tp"] if _STATE["sp"] else None)}.get(d, d) \
+            if isinstance(d, str) else d
+        if axis is None:
+            spec.append(None)
+        elif size % _axis_size(mesh, axis) == 0:
+            spec.append(axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

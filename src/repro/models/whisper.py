@@ -1,0 +1,196 @@
+"""Whisper-style audio encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: the model consumes
+precomputed frame embeddings [B, encoder_seq, d_model] (``batch["frames"]``).
+Decoder = causal self-attention (cached) + cross-attention over the encoder
+output (K/V precomputed at prefill) + gated MLP.  Learned positions, no RoPE.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgs
+from repro.models import attention as attn
+from repro.models import blocks
+from repro.models.common import (apply_mlp, apply_norm, dtype_of, embed_init,
+                                 mlp_init, norm_init)
+
+
+def init_params(cfg: cfgs.ModelConfig, key, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": norm_init(cfg.d_model, dtype, True),
+                "attn": blocks.attn_init(k1, cfg, dtype),
+                "ln2": norm_init(cfg.d_model, dtype, True),
+                "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, cfg.use_bias)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": norm_init(cfg.d_model, dtype, True),
+                "attn": blocks.attn_init(k1, cfg, dtype),
+                "lnx": norm_init(cfg.d_model, dtype, True),
+                "xattn": blocks.attn_init(k2, cfg, dtype),
+                "ln2": norm_init(cfg.d_model, dtype, True),
+                "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype, cfg.use_bias)}
+
+    enc_keys = jax.random.split(keys[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.num_layers)
+    return {
+        "embed": {"w": embed_init(keys[2], cfg.vocab_size, cfg.d_model, dtype)},
+        "pos_embed": {"w": embed_init(keys[3], cfg.max_pos_embed, cfg.d_model,
+                                      dtype)},
+        "enc_pos": {"w": embed_init(keys[4], cfg.encoder_seq, cfg.d_model,
+                                    dtype)},
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": norm_init(cfg.d_model, dtype, True),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+        "final_norm": norm_init(cfg.d_model, dtype, True),
+    }
+
+
+def init_cache(cfg: cfgs.ModelConfig, batch: int, smax: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or dtype_of(cfg.dtype)
+    L = cfg.num_layers
+    kv = (batch, smax, cfg.num_kv_heads, cfg.head_dim)
+    xkv = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+    zero = lambda s: jnp.zeros((L,) + s, dtype)
+    return {"k": zero(kv), "v": zero(kv), "xk": zero(xkv), "xv": zero(xkv),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def _self_qkv(p, x, cfg):
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def encode(cfg, params, frames):
+    """frames: [B, Senc, D] -> encoder output [B, Senc, D]."""
+    x = frames.astype(dtype_of(cfg.dtype)) + params["enc_pos"]["w"][None]
+
+    def body(h, lp):
+        a_in = apply_norm(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = _self_qkv(lp["attn"], a_in, cfg)
+        o = attn.causal_attention(q, k, v, causal=False)
+        o = o.reshape(h.shape[0], h.shape[1], cfg.q_dim)
+        h = h + (o @ lp["attn"]["wo"] + lp["attn"].get("bo", 0))
+        m_in = apply_norm(lp["ln2"], h, cfg.norm_eps)
+        h = h + apply_mlp(lp["mlp"], m_in)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def apply(cfg: cfgs.ModelConfig, params, batch, *, mode: str, cache=None,
+          mesh_axes=None, remat: bool = True):
+    """Whisper forward.  batch: {"frames": [B,Senc,D] (train/prefill),
+    "tokens": [B,S], optional "lengths"}."""
+    assert mode in ("train", "prefill", "decode")
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1]
+
+    if mode in ("train", "prefill"):
+        enc_out = encode(cfg, params, batch["frames"])
+        lengths = batch.get("lengths")
+        if lengths is None:
+            lengths = jnp.full((B,), S, jnp.int32)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    else:
+        enc_out = None
+        lengths = cache["len"] + S
+        positions = (lengths - 1)[:, None]
+
+    x = params["embed"]["w"][batch["tokens"]]
+    x = x + params["pos_embed"]["w"][positions]
+
+    smax = cache["k"].shape[2] if cache is not None else 0
+
+    def layer(h, lp, layer_cache):
+        new_lc = {}
+        # --- causal self attention ---
+        a_in = apply_norm(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = _self_qkv(lp["attn"], a_in, cfg)
+        if mode == "decode":
+            if S == 1 and attn.seq_sharded_decode_ready(layer_cache["k"]):
+                o, ck, cv = attn.sharded_cache_decode(
+                    q, layer_cache["k"], layer_cache["v"], k, v, lengths)
+            else:
+                start = lengths - S
+                ck, cv = attn.write_kv(layer_cache["k"], layer_cache["v"],
+                                       k, v, start)
+                o = attn.decode_attention(q, ck, cv, lengths)
+            new_lc["k"], new_lc["v"] = ck, cv
+        else:
+            o = attn.causal_attention(q, k, v)
+            if mode == "prefill":
+                ck = jnp.zeros((B, smax) + k.shape[2:], k.dtype)
+                cv = jnp.zeros((B, smax) + v.shape[2:], v.dtype)
+                new_lc["k"] = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, 1)
+                new_lc["v"] = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, 1)
+        o = o.reshape(B, S, cfg.q_dim)
+        h = h + (o @ lp["attn"]["wo"] + lp["attn"].get("bo", 0))
+        # --- cross attention ---
+        x_in = apply_norm(lp["lnx"], h, cfg.norm_eps)
+        xp = lp["xattn"]
+        qx = (x_in @ xp["wq"] + xp.get("bq", 0)).reshape(
+            B, S, cfg.num_heads, cfg.head_dim)
+        if mode == "decode":
+            xk, xv = layer_cache["xk"], layer_cache["xv"]
+            new_lc["xk"], new_lc["xv"] = xk, xv
+        else:
+            xk = (enc_out @ xp["wk"] + xp.get("bk", 0)).reshape(
+                B, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+            xv = (enc_out @ xp["wv"] + xp.get("bv", 0)).reshape(
+                B, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+            if mode == "prefill":
+                new_lc["xk"], new_lc["xv"] = xk, xv
+        ox = attn.causal_attention(qx, xk, xv, causal=False)
+        ox = ox.reshape(B, S, cfg.q_dim)
+        h = h + (ox @ xp["wo"] + xp.get("bo", 0))
+        # --- mlp ---
+        m_in = apply_norm(lp["ln2"], h, cfg.norm_eps)
+        h = h + apply_mlp(lp["mlp"], m_in)
+        return h, new_lc
+
+    if mode == "train":
+        def body(h, lp):
+            h, _ = layer(h, lp, None)
+            return h, None
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        new_cache = None
+    else:
+        def body(h, xs):
+            lp, lc = xs
+            h, new_lc = layer(h, lp, lc)
+            return h, new_lc
+        per_layer_cache = {k: cache[k] for k in ("k", "v", "xk", "xv")}
+        x, new_lcs = jax.lax.scan(body, x, (params["dec_layers"],
+                                            per_layer_cache))
+        new_cache = dict(new_lcs)
+        new_cache["len"] = lengths
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    out = {"aux": jnp.float32(0.0)}
+    if mode == "train":
+        out["hidden"] = x
+    elif mode == "prefill":
+        bidx = jnp.arange(B)
+        out["last_hidden"] = x[bidx, jnp.clip(lengths - 1, 0, S - 1)]
+        out["cache"] = new_cache
+    else:
+        out["hidden"] = x
+        out["cache"] = new_cache
+    return out

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train step, data pipeline, checkpoints."""
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.train.train_step import TrainState, make_train_step, init_state  # noqa: F401
+from repro.train.checkpoint import CheckpointManager                 # noqa: F401
+from repro.train.data import TokenPipeline                           # noqa: F401

@@ -1,0 +1,114 @@
+"""The jit-able train step for every zoo architecture.
+
+Structure (bottom to top): ce_loss_chunked (never materialises [B,S,V]) →
+loss_fn (+ MoE aux) → grad → microbatch accumulation (lax.scan over
+microbatches when cfg.grad_accum_steps > 1) → AdamW update.
+
+The same function lowers on 1 CPU device (smoke tests) and on the 512-chip
+production mesh (dry-run) — sharding comes entirely from in/out shardings
+supplied by the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgs
+from repro.models import model_zoo
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray        # int32 scalar
+
+    def tree(self):
+        return {"params": self.params, "opt_state": self.opt_state,
+                "step": self.step}
+
+    @classmethod
+    def from_tree(cls, t):
+        return cls(t["params"], t["opt_state"], t["step"])
+
+
+def init_state(model: model_zoo.Model, key,
+               opt_cfg: Optional[AdamWConfig] = None) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params, adamw_init(params), jnp.zeros((), jnp.int32))
+
+
+def loss_fn(model: model_zoo.Model, params, batch, *, remat: bool = True):
+    out = model.apply(params, batch, mode="train", remat=remat)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    loss, count = model.ce_loss(params, out["hidden"], labels, mask)
+    return loss + out["aux"], {"ce": loss, "aux": out["aux"], "tokens": count}
+
+
+def _microbatches(batch: Dict[str, Any], n: int):
+    """Split the leading (batch) axis into n microbatches: [n, B/n, ...]."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: model_zoo.Model,
+                    opt_cfg: Optional[AdamWConfig] = None, *,
+                    grad_accum: Optional[int] = None, remat: bool = True):
+    """Returns train_step(state_tree, batch) -> (state_tree, metrics).
+
+    state is passed as a plain pytree (dict) so jit in/out shardings can be
+    expressed uniformly for the dry-run.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    accum = grad_accum or model.cfg.grad_accum_steps
+
+    def forward_backward(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, remat=remat), has_aux=True
+        )(params)
+        return loss, aux, grads
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        params = state["params"]
+        if accum <= 1:
+            loss, aux, grads = forward_backward(params, batch)
+        else:
+            micro = _microbatches(batch, accum)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                loss, _aux, grads = forward_backward(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_sum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = loss_sum / accum
+            aux = {"ce": loss, "aux": jnp.float32(0.0),
+                   "tokens": jnp.float32(0.0)}
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, state["opt_state"],
+                                               params)
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}, **om}
+        new_state = {"params": new_params, "opt_state": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: model_zoo.Model, *, remat: bool = False):
+    def eval_step(params, batch):
+        loss, aux = loss_fn(model, params, batch, remat=remat)
+        return {"loss": loss, **aux}
+    return eval_step

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run sets its own
+# XLA_FLAGS in-process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

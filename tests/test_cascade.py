@@ -1,0 +1,133 @@
+"""SUPG-IT cascade: budget, quality, threshold and streaming invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cascade import (CalibratedCascade, CascadeConfig,
+                                SupgItCascade)
+
+
+def synth(n=2000, pos=0.4, sep=4.0, seed=0):
+    """Rows with ground truth + a proxy that scores via a logistic noise."""
+    rng = np.random.default_rng(seed)
+    truth = rng.random(n) < pos
+    z = np.where(truth, sep / 2, -sep / 2) + rng.normal(0, 1.2, n)
+    scores = 1.0 / (1.0 + np.exp(-z))
+    return list(range(n)), truth, scores
+
+
+def run_cascade(cfg, rows, truth, scores, oracle_err=0.0, seed=0):
+    rng = np.random.default_rng(seed + 1)
+    calls = {"proxy": 0, "oracle": 0}
+
+    def proxy(batch):
+        calls["proxy"] += len(batch)
+        return scores[np.asarray(batch)]
+
+    def oracle(batch):
+        calls["oracle"] += len(batch)
+        t = truth[np.asarray(batch)]
+        flip = rng.random(len(batch)) < oracle_err
+        return np.where(flip, ~t, t)
+
+    cascade = SupgItCascade(cfg)
+    pred = cascade.run(rows, proxy, oracle)
+    return pred, calls, cascade
+
+
+def f1(pred, truth):
+    tp = (pred & truth).sum()
+    fp = (pred & ~truth).sum()
+    fn = (~pred & truth).sum()
+    return 2 * tp / max(2 * tp + fp + fn, 1)
+
+
+def test_oracle_budget_respected():
+    rows, truth, scores = synth()
+    cfg = CascadeConfig(oracle_budget_frac=0.2, seed=0)
+    pred, calls, _ = run_cascade(cfg, rows, truth, scores)
+    assert calls["oracle"] <= int(np.ceil(0.2 * len(rows))) + cfg.batch_size
+
+
+def test_cascade_beats_raw_proxy_quality():
+    rows, truth, scores = synth(sep=2.5)
+    cfg = CascadeConfig(seed=0)
+    pred, calls, _ = run_cascade(cfg, rows, truth, scores)
+    proxy_pred = scores >= 0.5
+    assert f1(pred, truth) > f1(proxy_pred, truth)
+    assert calls["oracle"] < len(rows) * 0.6   # and it used far fewer calls
+
+
+def test_thresholds_ordered_and_narrowing():
+    rows, truth, scores = synth()
+    _, _, cascade = run_cascade(CascadeConfig(seed=1), rows, truth, scores)
+    assert cascade.tau_low <= cascade.tau_high
+
+
+def test_streaming_state_accumulates_across_runs():
+    rows, truth, scores = synth()
+    cfg = CascadeConfig(seed=2)
+    cascade = SupgItCascade(cfg)
+
+    def proxy(batch):
+        return scores[np.asarray(batch)]
+
+    def oracle(batch):
+        return truth[np.asarray(batch)]
+
+    half = len(rows) // 2
+    cascade.run(rows[:half], proxy, oracle)
+    samples_after_first = len(cascade._s)
+    cascade.run(rows[half:], proxy, oracle)
+    assert cascade.stats.rows == len(rows)
+    assert len(cascade._s) >= samples_after_first
+    # budget accounting must be streaming (vs rows seen), not per-call
+    assert cascade.stats.oracle_calls <= int(np.ceil(
+        cfg.oracle_budget_frac * len(rows))) + cfg.batch_size
+
+
+def test_easy_data_mostly_proxy():
+    rows, truth, scores = synth(sep=8.0)    # near-separable
+    pred, calls, cascade = run_cascade(CascadeConfig(seed=3), rows, truth,
+                                       scores)
+    assert cascade.stats.delegation_rate < 0.35
+    assert f1(pred, truth) > 0.93
+
+
+def test_noisy_oracle_still_bounded():
+    rows, truth, scores = synth(sep=3.0)
+    pred, calls, _ = run_cascade(CascadeConfig(seed=4), rows, truth, scores,
+                                 oracle_err=0.1)
+    assert f1(pred, truth) > 0.7
+
+
+@given(st.integers(0, 1000), st.floats(0.1, 0.9), st.floats(0.05, 0.5))
+@settings(max_examples=15, deadline=None)
+def test_property_budget_and_predictions_total(seed, pos, budget):
+    rows, truth, scores = synth(n=400, pos=pos, seed=seed)
+    cfg = CascadeConfig(oracle_budget_frac=budget, batch_size=128,
+                        seed=seed)
+    pred, calls, cascade = run_cascade(cfg, rows, truth, scores, seed=seed)
+    # every row got a prediction; oracle calls within (streamed) budget
+    assert len(pred) == len(rows)
+    assert calls["oracle"] <= int(np.ceil(budget * len(rows))) + cfg.batch_size
+    st_ = cascade.stats
+    assert (st_.accepted_by_proxy + st_.rejected_by_proxy
+            + st_.uncertain_to_oracle + st_.uncertain_fallback
+            + st_.sampled_for_learning) >= len(rows)
+
+
+def test_calibrated_cascade_runs():
+    rows, truth, scores = synth()
+    cc = CalibratedCascade(CascadeConfig(seed=5))
+    pred = cc.run(rows, lambda b: scores[np.asarray(b)],
+                  lambda b: truth[np.asarray(b)])
+    assert f1(pred, truth) > 0.85
+
+
+def test_pava_isotonic():
+    y = np.array([0.1, 0.5, 0.3, 0.8, 0.2, 0.9])
+    w = np.ones(6)
+    out = CalibratedCascade._pava(y, w)
+    assert (np.diff(out) >= -1e-12).all()
+    np.testing.assert_allclose(out.sum(), y.sum(), rtol=1e-9)

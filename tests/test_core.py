@@ -1,0 +1,304 @@
+"""AISQL core: parser, plan, optimizer, executor correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AisqlEngine, Catalog, CostModel, ExecConfig,
+                        Optimizer, OptimizerConfig)
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core import sqlparse
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+from repro.tables.table import FileRef, Table
+
+
+def small_catalog(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    t = Table({
+        "id": np.arange(n),
+        "score": rng.random(n),
+        "category": rng.choice(["a", "b", "c"], n),
+        "text": [f"row {i} text" for i in range(n)],
+        "_truth": rng.random(n) < 0.4,
+        "_difficulty": np.full(n, 0.05),
+    }, name="t")
+    return Catalog({"t": t})
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+
+def test_parse_ai_filter_prompt():
+    q = sqlparse.parse(
+        "SELECT * FROM reviews AS r WHERE r.id < 5 AND "
+        "AI_FILTER(PROMPT('is {0} happy?', r.text), model => 'proxy-8b')")
+    conjuncts = E.split_conjuncts(q.where)
+    assert len(conjuncts) == 2
+    ai = [c for c in conjuncts if isinstance(c, E.AIFilter)]
+    assert len(ai) == 1 and ai[0].model == "proxy-8b"
+    assert ai[0].prompt.template == "is {0} happy?"
+
+
+def test_parse_join_group_limit():
+    q = sqlparse.parse(
+        "SELECT p.id, COUNT(*), AI_SUMMARIZE_AGG(p.abstract) FROM papers p "
+        "JOIN imgs i ON p.id = i.id AND AI_FILTER(PROMPT('x {0}', i.f)) "
+        "WHERE p.date BETWEEN 2010 AND 2015 GROUP BY p.id LIMIT 7")
+    assert q.joins and q.group_by == ["p.id"] and q.limit == 7
+    agg = [it.expr for it in q.select if isinstance(it.expr, E.AggCall)]
+    assert {a.name for a in agg} == {"COUNT", "AI_SUMMARIZE_AGG"}
+
+
+def test_parse_classify_labels():
+    q = sqlparse.parse("SELECT AI_CLASSIFY(r.text, ['pos','neg']) FROM t r")
+    c = q.select[0].expr
+    assert isinstance(c, E.AIClassify) and c.labels == ("pos", "neg")
+
+
+def test_parse_errors():
+    with pytest.raises(SyntaxError):
+        sqlparse.parse("SELECT FROM t")
+    with pytest.raises(SyntaxError):
+        sqlparse.parse("SELECT * FROM t WHERE ???")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def _ai(template="p {0}", col="t.text"):
+    return E.AIFilter(E.Prompt(template, (E.Column(col),)))
+
+
+def test_reorder_puts_ai_last():
+    cat = small_catalog()
+    opt = Optimizer(cat)
+    node = P.Filter(P.Scan("t", "t"),
+                    (_ai(), E.BinOp("<", E.Column("t.id"), E.Literal(5))))
+    out = opt.optimize(node)
+    assert isinstance(out, P.Filter)
+    assert not out.predicates[0].is_ai() and out.predicates[-1].is_ai()
+
+
+def test_optimize_never_increases_est_cost():
+    cat = small_catalog()
+    for mode in ("ai_aware",):
+        opt = Optimizer(cat, cfg=OptimizerConfig(mode=mode))
+        cost = CostModel(cat)
+        node = P.Filter(P.Scan("t", "t"),
+                        (_ai(), E.InList(E.Column("t.category"), ("a",))))
+        before = cost.est_llm_cost(node)
+        after = cost.est_llm_cost(opt.optimize(node))
+        assert after <= before + 1e-12
+
+
+def test_join_placement_modes():
+    left, right = D.nyt_join_pair(100, out_in_ratio=2.0)
+    cat = Catalog({"ny_articles_v1": left, "ny_meta": right})
+    sql = ("SELECT * FROM ny_articles_v1 AS a JOIN ny_meta AS m "
+           "ON a.key = m.key AND AI_FILTER(PROMPT('x? {0}', a.body))")
+    q = P.build_plan(sqlparse.parse(sql))
+    cost = CostModel(cat)
+    costs = {}
+    for mode in ("always_pushdown", "always_pullup", "ai_aware"):
+        opt = Optimizer(cat, cfg=OptimizerConfig(mode=mode))
+        costs[mode] = cost.est_llm_cost(opt.optimize(q))
+    assert costs["ai_aware"] <= min(costs["always_pushdown"],
+                                    costs["always_pullup"]) + 1e-12
+
+
+def test_semantic_join_rewrite_triggers():
+    left, right, _ = D.join_tables("AGNEWS_100")
+    cat = Catalog({"l": left, "r": right})
+    sql = ("SELECT * FROM l JOIN r ON "
+           "AI_FILTER(PROMPT('{0} is about {1}', l.content, r.label))")
+    opt = Optimizer(cat)
+    out = opt.optimize(P.build_plan(sqlparse.parse(sql)))
+
+    def find(node):
+        if isinstance(node, P.SemanticJoinClassify):
+            return node
+        for c in node.children():
+            f = find(c)
+            if f is not None:
+                return f
+        return None
+    sj = find(out)
+    assert sj is not None and sj.label_col == "r.label"
+
+
+def test_semantic_join_rewrite_not_for_equi():
+    cat = small_catalog()
+    node = P.Join(P.Scan("t", "a"), P.Scan("t", "b"),
+                  (("a.id", "b.id"),), ( _ai(col="a.text"),))
+    out = Optimizer(cat).optimize(node)
+
+    def has_sjc(n):
+        return isinstance(n, P.SemanticJoinClassify) or any(
+            has_sjc(c) for c in n.children())
+    assert not has_sjc(out)
+
+
+@given(st.lists(st.tuples(st.sampled_from(["cheap", "ai"]),
+                          st.floats(0.05, 0.95)), min_size=1, max_size=5))
+@settings(max_examples=30, deadline=None)
+def test_reorder_rank_is_sorted(preds):
+    """Property: optimizer output is sorted by rank = cost/(1-sel)."""
+    cat = small_catalog()
+    opt = Optimizer(cat)
+    exprs = []
+    for kind, sel in preds:
+        if kind == "cheap":
+            exprs.append(E.BinOp("<", E.Column("t.score"), E.Literal(sel)))
+        else:
+            exprs.append(_ai(f"pred {sel} {{0}}"))
+    out = opt.optimize(P.Filter(P.Scan("t", "t"), tuple(exprs)))
+    ranks = [opt.rank(p) for p in out.predicates]
+    assert ranks == sorted(ranks)
+
+
+# ---------------------------------------------------------------------------
+# executor correctness (AI + relational paths)
+# ---------------------------------------------------------------------------
+
+
+def _engine(cat, **exec_kw):
+    return AisqlEngine(cat, make_simulated_client(),
+                       executor=ExecConfig(**exec_kw))
+
+
+def test_relational_filter_matches_numpy():
+    cat = small_catalog()
+    eng = _engine(cat)
+    out = eng.sql("SELECT * FROM t WHERE t.score < 0.5 AND t.category = 'a'")
+    t = cat.table("t")
+    expect = (t["score"] < 0.5) & (t["category"] == "a")
+    assert out.num_rows == int(expect.sum())
+    assert "_truth" not in " ".join(out.column_names)   # hidden cols excluded
+
+
+def test_group_by_aggregates():
+    cat = small_catalog()
+    eng = _engine(cat)
+    out = eng.sql("SELECT t.category, COUNT(*), AVG(t.score) "
+                  "FROM t GROUP BY t.category")
+    t = cat.table("t")
+    for i in range(out.num_rows):
+        c = out.column("t.category")[i]
+        sel = t["category"] == c
+        assert out.column("count")[i] == int(sel.sum())
+        np.testing.assert_allclose(out.column("avg")[i],
+                                   float(t["score"][sel].mean()))
+
+
+def test_equi_join_matches_numpy():
+    rng = np.random.default_rng(1)
+    a = Table({"k": rng.integers(0, 10, 30), "x": np.arange(30)})
+    b = Table({"k": rng.integers(0, 10, 20), "y": np.arange(20)})
+    cat = Catalog({"a": a, "b": b})
+    eng = _engine(cat)
+    out = eng.sql("SELECT * FROM a JOIN b ON a.k = b.k")
+    expect = sum(int((b["k"] == k).sum()) for k in a["k"])
+    assert out.num_rows == expect
+    assert (out.column("a.k") == out.column("b.k")).all()
+
+
+def test_ai_filter_simulated_accuracy():
+    cat = small_catalog(n=200)
+    eng = _engine(cat)
+    out = eng.sql("SELECT * FROM t WHERE "
+                  "AI_FILTER(PROMPT('truthy? {0}', t.text))")
+    t = cat.table("t")
+    ids = set(out.column("t.id").tolist())
+    pred = np.array([i in ids for i in t["id"]])
+    acc = (pred == t["_truth"]).mean()
+    assert acc > 0.9      # difficulty 0.05 oracle should be near-perfect
+
+
+def test_adaptive_reorder_fixes_bad_static_order():
+    """With the optimizer off and the AI predicate written first, runtime
+    cost/selectivity stats must flip the order after the first chunk —
+    and that flip must reduce LLM calls vs. a non-adaptive run."""
+    n = 600
+    cat = small_catalog(n=n, seed=3)
+    sql = ("SELECT * FROM t WHERE "
+           "AI_FILTER(PROMPT('truthy? {0}', t.text)) AND t.score < 0.3")
+    calls = {}
+    for adaptive in (False, True):
+        client = make_simulated_client()
+        eng = AisqlEngine(cat, client,
+                          optimizer=OptimizerConfig(mode="none"),
+                          executor=ExecConfig(adaptive_reorder=adaptive,
+                                              chunk_rows=100))
+        eng.sql(sql)
+        calls[adaptive] = eng.last_report.ai_calls
+        if adaptive:
+            assert eng.exec.reorder_events, "expected a runtime reorder"
+    assert calls[True] < calls[False]
+
+
+def test_limit_and_projection():
+    cat = small_catalog()
+    eng = _engine(cat)
+    out = eng.sql("SELECT t.id AS ident FROM t LIMIT 3")
+    assert out.num_rows == 3 and out.column_names == ["ident"]
+
+
+# ---------------------------------------------------------------------------
+# table substrate properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=40),
+       st.lists(st.integers(0, 5), min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_hash_join_matches_nested_loop(lk, rk):
+    a = Table({"k": np.asarray(lk), "x": np.arange(len(lk))})
+    b = Table({"k": np.asarray(rk), "y": np.arange(len(rk))})
+    joined = a.hash_join(b, "k", "k")
+    expect = [(i, j) for i, x in enumerate(lk) for j, y in enumerate(rk)
+              if x == y]
+    assert joined.num_rows == len(expect)
+
+
+def test_file_type_predicates():
+    t = Table({"f": [FileRef("s3://a.png", "image/png"),
+                     FileRef("s3://b.wav", "audio/wav"),
+                     FileRef("s3://c.pdf", "application/pdf")]})
+    cat = Catalog({"files": t})
+    eng = _engine(cat)
+    out = eng.sql("SELECT * FROM files AS f WHERE FL_IS_IMAGE(f.f)")
+    assert out.num_rows == 1
+    out = eng.sql("SELECT * FROM files AS f WHERE FL_IS_AUDIO(f.f)")
+    assert out.num_rows == 1
+
+
+@given(st.integers(0, 10 ** 6), st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_optimizer_modes_preserve_relational_semantics(seed, nfilters):
+    """Property: every optimizer mode returns the same row set for
+    relational queries (plan rewrites must be semantics-preserving)."""
+    rng = np.random.default_rng(seed)
+    n = 60
+    a = Table({"k": rng.integers(0, 8, n), "v": rng.random(n),
+               "id": np.arange(n)})
+    b = Table({"k": rng.integers(0, 8, 30), "w": rng.random(30)})
+    cat = Catalog({"a": a, "b": b})
+    conds = ["a.v < 0.7", "b.w >= 0.2", "a.k IN (1,2,3,4)",
+             "a.v BETWEEN 0.1 AND 0.9", "b.k < 6"]
+    where = " AND ".join(conds[:nfilters])
+    sql = f"SELECT a.id, b.w FROM a JOIN b ON a.k = b.k WHERE {where}"
+    results = {}
+    for mode in ("none", "always_pushdown", "always_pullup", "ai_aware"):
+        client = make_simulated_client()
+        eng = AisqlEngine(cat, client, optimizer=OptimizerConfig(mode=mode))
+        out = eng.sql(sql)
+        results[mode] = sorted(zip(out.column("a.id").tolist(),
+                                   out.column("b.w").tolist()))
+    base = results["none"]
+    for mode, rows in results.items():
+        assert rows == base, f"mode {mode} changed the result set"

@@ -1,0 +1,120 @@
+"""Cortex-platform analogue: engines, scheduler fault tolerance, metering."""
+import numpy as np
+import pytest
+
+from repro.inference.api import CortexClient, make_engine_client
+from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, EngineFailure,
+                                     Request, credits_for)
+from repro.inference.engine import JaxInferenceEngine
+from repro.inference.scheduler import Scheduler, SchedulerError
+from repro.inference.simulator import SimulatedBackend
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return JaxInferenceEngine("proxy-8b", smoke=True, max_seq=192)
+
+
+def test_engine_score_batch(engine):
+    reqs = [Request(f"is row {i} positive?", "proxy-8b", SCORE,
+                    request_id=i) for i in range(3)]
+    res = engine.submit_batch(reqs)
+    assert len(res) == 3
+    for r in res:
+        assert 0.0 <= r.score <= 1.0
+        assert r.credits > 0 and r.tokens_in > 0
+
+
+def test_engine_complete_batch(engine):
+    reqs = [Request("hello", "proxy-8b", COMPLETE, max_tokens=4,
+                    request_id=7)]
+    res = engine.submit_batch(reqs)
+    assert res[0].tokens_out <= 4
+    assert isinstance(res[0].text, str)
+
+
+def test_engine_classify_batch(engine):
+    reqs = [Request("pick a label", "proxy-8b", CLASSIFY,
+                    labels=("alpha", "beta"), request_id=1)]
+    res = engine.submit_batch(reqs)
+    assert res[0].label in ("alpha", "beta")
+
+
+def test_engine_determinism(engine):
+    reqs = [Request("same prompt", "proxy-8b", SCORE, request_id=1)]
+    s1 = engine.submit_batch(reqs)[0].score
+    s2 = engine.submit_batch(reqs)[0].score
+    assert s1 == s2
+
+
+def test_scheduler_retries_on_failure():
+    sched = Scheduler(max_retries=2)
+    flaky = SimulatedBackend(seed=0)
+    # wrap with a failure-injecting proxy
+    class Flaky:
+        def __init__(self, inner, fail_times):
+            self.inner = inner
+            self.fails = fail_times
+        def submit_batch(self, reqs):
+            if self.fails > 0:
+                self.fails -= 1
+                raise EngineFailure("boom")
+            return self.inner.submit_batch(reqs)
+        def hosted_models(self):
+            return self.inner.hosted_models()
+    sched.register(Flaky(flaky, fail_times=1))
+    sched.register(SimulatedBackend(seed=1))
+    res = sched.submit([Request("x", "proxy-8b", SCORE, request_id=1)])
+    assert len(res) == 1
+    assert sched.retries == 1
+
+
+def test_scheduler_exhausts_retries():
+    sched = Scheduler(max_retries=1)
+    class AlwaysDown:
+        def submit_batch(self, reqs):
+            raise EngineFailure("down")
+        def hosted_models(self):
+            return ["proxy-8b"]
+    sched.register(AlwaysDown())
+    with pytest.raises(SchedulerError):
+        sched.submit([Request("x", "proxy-8b", SCORE, request_id=1)])
+
+
+def test_scheduler_unknown_model():
+    sched = Scheduler()
+    sched.register(SimulatedBackend(models=["proxy-8b"]))
+    with pytest.raises(SchedulerError):
+        sched.submit([Request("x", "no-such-model", SCORE, request_id=1)])
+
+
+def test_elastic_register_deregister():
+    sched = Scheduler()
+    a, b = SimulatedBackend(seed=0), SimulatedBackend(seed=1)
+    sched.register(a)
+    sched.register(b)
+    assert len(sched.replicas("proxy-8b")) == 2
+    sched.deregister(a)
+    assert len(sched.replicas("proxy-8b")) == 1
+
+
+def test_client_metering():
+    sched = Scheduler()
+    sched.register(SimulatedBackend(seed=0))
+    client = CortexClient(sched)
+    before = client.snapshot()
+    client.filter_scores(["a", "b", "c"], model="oracle-70b")
+    delta = client.meter_delta(before)
+    assert delta["ai_calls"] == 3
+    assert delta["ai_credits"] > 0
+
+
+def test_credits_scale_with_model():
+    assert credits_for("oracle-70b", 1000) > credits_for("proxy-8b", 1000)
+
+
+def test_engine_client_end_to_end():
+    client = make_engine_client(("proxy-8b",), replicas=2)
+    scores = client.filter_scores(["row one", "row two"], model="proxy-8b")
+    assert scores.shape == (2,)
+    assert client.ai_calls == 2

@@ -1,0 +1,160 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.ops import flash_decode
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 384, 4, 1, 128),     # MQA, non-pow2 seq
+    (2, 128, 4, 4, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, S, H, hd), dtype)
+    k = _rand(ks[1], (B, S, KV, hd), dtype)
+    v = _rand(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, impl="interpret")
+    ref = flash_attention(q, k, v, causal=True, impl="reference")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_windowed(window):
+    B, S, H, hd = 1, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, H, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          impl="interpret")
+    ref = flash_attention(q, k, v, causal=True, window=window,
+                          impl="reference")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Smax,H,KV,hd", [
+    (2, 512, 4, 4, 64),
+    (3, 1024, 8, 2, 64),
+    (1, 768, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(B, Smax, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = _rand(ks[0], (B, 1, H, hd), dtype)
+    kc = _rand(ks[1], (B, Smax, KV, hd), dtype)
+    vc = _rand(ks[2], (B, Smax, KV, hd), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, Smax, B), jnp.int32)
+    out = flash_decode(q, kc, vc, lengths, impl="interpret")
+    ref = flash_decode(q, kc, vc, lengths, impl="reference")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """Kernel contract == the model's decode attention core."""
+    from repro.models.attention import decode_attention
+    B, Smax, H, KV, hd = 2, 256, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (B, 1, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, KV, hd), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, KV, hd), jnp.float32)
+    lengths = jnp.asarray([100, 256], jnp.int32)
+    out = flash_decode(q, kc, vc, lengths, impl="interpret")
+    ref = decode_attention(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,W", [(2, 64, 256), (1, 200, 512), (3, 33, 128)])
+def test_rglru_scan(B, S, W):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    a = jax.nn.sigmoid(_rand(ks[0], (B, S, W), jnp.float32))
+    b = _rand(ks[1], (B, S, W), jnp.float32)
+    h0 = _rand(ks[2], (B, W), jnp.float32)
+    hs, hT = rglru_scan(a, b, h0, impl="interpret")
+    hs_r, hT_r = rglru_scan(a, b, h0, impl="reference")
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 64, 2, 32), (2, 96, 4, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(B, S, H, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    r = _rand(ks[0], (B, S, H, hd), dtype)
+    k = _rand(ks[1], (B, S, H, hd), dtype)
+    v = _rand(ks[2], (B, S, H, hd), dtype)
+    w = jax.nn.sigmoid(_rand(ks[3], (B, S, H, hd), jnp.float32)) * 0.5 + 0.45
+    u = _rand(ks[4], (H, hd), jnp.float32)
+    s0 = _rand(ks[5], (B, H, hd, hd), jnp.float32) * 0.1
+    o, sT = rwkv6_scan(r, k, v, w.astype(dtype), u, s0, impl="interpret")
+    o_r, sT_r = rwkv6_scan(r, k, v, w.astype(dtype), u, s0, impl="reference")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_state_chaining():
+    """Running two halves with carried state == one full run."""
+    B, S, H, hd = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    r = _rand(ks[0], (B, S, H, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, H, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, H, hd), jnp.float32)
+    w = jax.nn.sigmoid(_rand(ks[3], (B, S, H, hd), jnp.float32))
+    u = _rand(ks[4], (H, hd), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    o_full, sT_full = rwkv6_scan(r, k, v, w, u, s0, impl="reference")
+    half = S // 2
+    o1, s_mid = rwkv6_scan(r[:, :half], k[:, :half], v[:, :half],
+                           w[:, :half], u, s0, impl="reference")
+    o2, sT = rwkv6_scan(r[:, half:], k[:, half:], v[:, half:],
+                        w[:, half:], u, s_mid, impl="reference")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_full),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,200 @@
+"""Sharding rules + the trip-count-aware HLO cost analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import hlo_cost as H
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh
+
+
+def host_mesh():
+    return make_host_mesh()     # (data=1, model=1) on CPU
+
+
+def test_param_spec_rules():
+    mesh = host_mesh()
+    # on a 1x1 mesh every axis divides; check the axis CHOICE
+    cases = {
+        "embed/w": ((1024, 64), P("model", "data")),
+        "lm_head/w": ((64, 1024), P("data", "model")),
+        "periods/b0/attn/wq": ((4, 64, 128), P(None, "data", "model")),
+        "periods/b0/attn/wk": ((4, 64, 32), P(None, "data", None)),
+        "periods/b0/attn/wo": ((4, 128, 64), P(None, "model", "data")),
+        "periods/b0/mlp/wi": ((4, 64, 256), P(None, "data", "model")),
+        "periods/b0/mlp/wo": ((4, 256, 64), P(None, "model", "data")),
+        "periods/b0/moe/experts/wi": ((4, 8, 64, 128),
+                                      P(None, "model", "data", None)),
+        "periods/b0/moe/router/w": ((4, 64, 8), P(None, "data", None)),
+        "periods/b0/rec/in_x": ((4, 64, 128), P(None, "data", "model")),
+        "periods/b0/rwkv/tmix/wr": ((4, 64, 64), P(None, "data", "model")),
+        "periods/b0/rwkv/tmix/wo": ((4, 64, 64), P(None, "model", "data")),
+        "final_norm/scale": ((64,), P()),
+    }
+    for key, (shape, want) in cases.items():
+        got = shd.param_spec(mesh, key, shape, fsdp="data", tp="model")
+        assert got == want, (key, got, want)
+
+
+def test_param_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1,), ("model",))
+    # vocab 51865 doesn't divide 16; on this mesh size 1 divides everything,
+    # so emulate by checking the helper directly
+    spec = shd._fit(mesh, (51865, 512), ["model", None])
+    assert spec == P("model", None)   # size-1 axis always divides
+    # emulate a 16-way axis via raw check
+    assert 51865 % 16 != 0
+
+
+def test_moment_specs_match_param_specs():
+    mesh = host_mesh()
+    p = shd.param_spec(mesh, "periods/b0/mlp/wi", (4, 64, 256),
+                       fsdp="data", tp="model")
+    m = shd.param_spec(mesh, "mu/periods/b0/mlp/wi", (4, 64, 256),
+                       fsdp="data", tp="model")
+    assert p == m
+
+
+def test_batch_and_cache_specs():
+    mesh = host_mesh()
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    bs = shd.batch_specs(mesh, batch)
+    assert bs["tokens"] == P("data", None)
+    cache = {"periods": {"b0": {"k": jax.ShapeDtypeStruct(
+        (4, 8, 128, 2, 16), jnp.bfloat16)}},
+        "len": jax.ShapeDtypeStruct((8,), jnp.int32)}
+    cs = shd.cache_specs_tree(mesh, cache)
+    assert cs["periods"]["b0"]["k"] == P(None, "data", "model", None, None)
+    assert cs["len"] == P("data")
+
+
+def test_state_specs_cover_all_leaves():
+    from repro.launch.steps import _abstract_state
+    from repro.models import model_zoo
+    mesh = host_mesh()
+    for arch in ("minitron-8b", "qwen2-moe-a2.7b", "recurrentgemma-9b",
+                 "rwkv6-1.6b", "whisper-base"):
+        model = model_zoo.build(arch, smoke=True)
+        state = _abstract_state(model)
+        specs = shd.state_specs(mesh, state)
+        n_leaves = len(jax.tree.leaves(state))
+        n_specs = len(jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_specs == n_leaves
+
+
+# ---------------------------------------------------------------------------
+# HLO cost analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_cost_counts_scan_trip_counts():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=8)
+        return h
+    x = jnp.zeros((64, 128), jnp.float32)
+    w = jnp.zeros((128, 128), jnp.float32)
+    scan_cost = H.analyze_hlo(jax.jit(f).lower(x, w).compile().as_text())
+
+    def g(x, w):
+        for _ in range(8):
+            x = jnp.tanh(x @ w)
+        return x
+    unrolled = H.analyze_hlo(jax.jit(g).lower(x, w).compile().as_text())
+    dot_flops = 8 * 2 * 64 * 128 * 128
+    assert scan_cost.flops >= dot_flops
+    assert abs(scan_cost.flops - unrolled.flops) / unrolled.flops < 0.1
+    assert abs(scan_cost.bytes - unrolled.bytes) / unrolled.bytes < 0.5
+
+
+def test_hlo_cost_nested_scans():
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return jnp.tanh(g @ w), None
+            g, _ = jax.lax.scan(inner, h, None, length=4)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h
+    x = jnp.zeros((64, 128), jnp.float32)
+    w = jnp.zeros((128, 128), jnp.float32)
+    cost = H.analyze_hlo(jax.jit(f).lower(x, w).compile().as_text())
+    assert cost.flops >= 12 * 2 * 64 * 128 * 128
+
+
+def test_hlo_cost_shape_parse():
+    assert H.shape_elems_bytes("bf16[2,3]{1,0}") == (6, 12)
+    assert H.shape_elems_bytes("(f32[4], s32[2])") == (6, 24)
+    assert H.shape_elems_bytes("pred[]")[0] == 1
+
+
+def test_wire_bytes_model():
+    # ring all-reduce moves 2(n-1)/n of the buffer
+    assert H._wire_bytes("all-reduce", 1000, 1000, 4) == pytest.approx(1500)
+    assert H._wire_bytes("all-gather", 1600, 100, 16) == pytest.approx(1500)
+    assert H._wire_bytes("all-reduce", 1000, 1000, 1) == 0.0
+
+
+def test_sharded_decode_path_matches_dense():
+    """With the shard context armed (1-device host mesh), the shard-local
+    KV write + logsumexp-combined decode must equal the dense path."""
+    import numpy as np
+    from repro.kernels.decode_attention import ops as dec
+    from repro.models import attention as attn
+    from repro.models import shardctx
+
+    mesh = make_host_mesh()
+    B, Smax, H, KV, hd = 2, 64, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, Smax, KV, hd), jnp.float32)
+    cv = jax.random.normal(ks[2], (B, Smax, KV, hd), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, 1, KV, hd), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, 1, KV, hd), jnp.float32)
+    lengths = jnp.asarray([10, 33], jnp.int32)
+
+    # dense reference
+    ck_d, cv_d = attn.write_kv(ck, cv, kn, vn, lengths - 1)
+    out_d = attn.decode_attention(q, ck_d, cv_d, lengths)
+
+    shardctx.enable(mesh)
+    try:
+        assert attn.seq_sharded_decode_ready(ck)
+        with mesh:
+            out_s, ck_s, cv_s = attn.sharded_cache_decode(
+                q, ck, cv, kn, vn, lengths)
+    finally:
+        shardctx.disable()
+    np.testing.assert_allclose(np.asarray(ck_s), np.asarray(ck_d),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_head_padding_is_exact(monkeypatch):
+    """Zero-padded head sharding (28 -> 32 style) must not change outputs."""
+    import dataclasses
+    import numpy as np
+    from repro.configs import base as cfgs
+    from repro.models import blocks
+
+    # head count (7) that a multi-way model axis wouldn't divide
+    cfg = dataclasses.replace(
+        cfgs.get_smoke_config("qwen2-vl-7b"), num_heads=7, num_kv_heads=1,
+        d_model=7 * 16, head_dim=16, mrope_sections=())
+    key = jax.random.PRNGKey(0)
+    params = blocks.block_init("attn", key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (2, 8))
+    ctx = blocks.Ctx(cfg=cfg, mode="train", positions=pos)
+    y_plain, _, _ = blocks.block_apply("attn", params, x, ctx)
+    # force the padded path (as a 2-way model axis would)
+    monkeypatch.setattr(blocks, "_padded_heads", lambda c: 8)
+    y_padded, _, _ = blocks.block_apply("attn", params, x, ctx)
+    np.testing.assert_allclose(np.asarray(y_padded), np.asarray(y_plain),
+                               rtol=1e-5, atol=1e-5)
