@@ -64,12 +64,17 @@ class HierarchicalAggregator:
     def _task_clause(self, instruction: Optional[str]) -> str:
         return f"\nTask: {instruction}" if instruction else ""
 
-    def _extract(self, rows: List[str], instruction) -> str:
-        self.telemetry.extract_calls += 1
-        prompt = _EXTRACT_TMPL.format(task=self._task_clause(instruction),
-                                      rows="\n".join(rows))
-        return self.client.complete([prompt], model=self.cfg.model,
-                                    max_tokens=self.cfg.max_tokens_out)[0]
+    def _extract_all(self, buffers: List[List[str]], instruction
+                     ) -> List[str]:
+        """One batched Extract pass over every row buffer (buffer
+        boundaries are pure token arithmetic, so all Extract calls are
+        independent and ride a single engine batch)."""
+        prompts = [_EXTRACT_TMPL.format(task=self._task_clause(instruction),
+                                        rows="\n".join(rows))
+                   for rows in buffers]
+        self.telemetry.extract_calls += len(prompts)
+        return self.client.complete(prompts, model=self.cfg.model,
+                                    max_tokens=self.cfg.max_tokens_out)
 
     def _combine(self, states: List[str], instruction) -> List[str]:
         """Merge as many states as fit one context window per call."""
@@ -104,6 +109,16 @@ class HierarchicalAggregator:
     # ------------------------------------------------------------------
     def aggregate(self, texts: Sequence[str],
                   instruction: Optional[str] = None) -> str:
+        """Algorithm 1 as a batched three-phase fold.
+
+        Rows are partitioned into BATCH_SIZE-bounded buffers up front (a
+        pure token computation), so the Extract phase is ONE batched LLM
+        call over all buffers instead of a sequential per-buffer fold;
+        Combine then reduces the intermediate states level by level (each
+        level one batched call).  Call counts match the incremental fold;
+        the batching is what lets the request pipeline coalesce an entire
+        aggregation into a handful of engine batches.
+        """
         texts = [str(t) for t in texts]
         self.telemetry = AggTelemetry()
         total = sum(_tokens(t) for t in texts)
@@ -112,24 +127,26 @@ class HierarchicalAggregator:
             self.telemetry.short_circuited = True
             return self._summarize("\n".join(texts), instruction)
 
-        R: List[str] = []      # row buffer
-        S: List[str] = []      # intermediate-state buffer
-        r_tokens = 0
+        # phase 1: partition rows into token-budget buffers, batch-extract
+        buffers: List[List[str]] = []
+        cur: List[str] = []
+        used = 0
         for t in texts:
-            if R and r_tokens + _tokens(t) > self.cfg.batch_size_tokens:
-                S.append(self._extract(R, instruction))
-                R, r_tokens = [], 0
-            R.append(t)
-            r_tokens += _tokens(t)
-            while sum(_tokens(s) for s in S) > self.cfg.batch_size_tokens:
-                S = self._combine(S, instruction)
-                if len(S) == 1:
-                    break
-        if R:
-            S.append(self._extract(R, instruction))
-        # the naive three-phase path always invokes Combine (the per-phase
-        # API overhead the §5.4 short-circuit eliminates)
+            if cur and used + _tokens(t) > self.cfg.batch_size_tokens:
+                buffers.append(cur)
+                cur, used = [], 0
+            cur.append(t)
+            used += _tokens(t)
+        if cur:
+            buffers.append(cur)
+        S = self._extract_all(buffers, instruction)
+        # phase 2: combine tree.  The naive three-phase path always invokes
+        # Combine at least once (the per-phase API overhead the §5.4
+        # short-circuit eliminates).
         S = self._combine(S, instruction)
         while len(S) > 1:
-            S = self._combine(S, instruction)
+            nxt = self._combine(S, instruction)
+            if len(nxt) >= len(S):      # states no longer shrink: force-merge
+                nxt = ["\n".join(nxt)]
+            S = nxt
         return self._summarize(S[0], instruction)

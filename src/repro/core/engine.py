@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional  # noqa: F401 (QueryReport fields)
 
 from repro.core import plan as P
 from repro.core import sqlparse
@@ -35,6 +35,10 @@ class QueryReport:
     ai_credits: float
     ai_seconds: float
     rows_out: int
+    # semantic-operator runtime telemetry (None on an eager client):
+    # batch-size histogram, dedup hit counts/rate, queue-wait seconds,
+    # submitted vs dispatched request counts, flush causes
+    pipeline: Optional[Dict[str, Any]] = None
 
 
 class AisqlEngine:
@@ -66,13 +70,15 @@ class AisqlEngine:
         t0 = time.perf_counter()
         node = self.plan(sql)
         out = self.exec.execute(node)
+        self.client.flush()        # drain any still-queued pipeline work
         dt = time.perf_counter() - t0
         delta = self.client.meter_delta(before)
         self.last_report = QueryReport(
             sql=sql, plan=node.pretty(), optimizer_trace=list(self.opt.trace),
             est_llm_cost=self.cost.est_llm_cost(node), wall_seconds=dt,
             ai_calls=delta["ai_calls"], ai_credits=delta["ai_credits"],
-            ai_seconds=delta["ai_seconds"], rows_out=out.num_rows)
+            ai_seconds=delta["ai_seconds"], rows_out=out.num_rows,
+            pipeline=delta.get("pipeline"))
         return out
 
     # telemetry passthroughs ------------------------------------------------

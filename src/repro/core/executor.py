@@ -14,6 +14,17 @@ Runtime behaviour mirrored from the paper:
     multi-label AI_CLASSIFY per left row (chunked over the label set)
     instead of |L|·|R| AI_FILTER calls.
 
+Semantic-operator runtime: every AI call site assembles its requests
+through one typed builder, `SemanticOp`, and awaits `SemanticHandle`
+futures instead of blocking per-site client calls.  With a pipelined
+client (``client.pipeline`` set) independent micro-batches — label chunks
+of a semantic join, hybrid-join passes, multiple projection items — are
+submitted *before* any is awaited, so the RequestPipeline coalesces them
+into right-sized engine batches; filters switch from chunk-major to
+predicate-major evaluation (all surviving rows of one predicate in one
+coalesced pass) trading mid-stream reordering for batching.  With an
+eager client the exact seed behaviour (and telemetry) is preserved.
+
 Ground-truth plumbing: hidden columns (leaf name starting with ``_``) are
 never returned by ``SELECT *`` but travel with rows and are forwarded as
 request metadata (``_truth`` → truth, ``_difficulty`` → difficulty,
@@ -35,6 +46,8 @@ from repro.core.aggregate import AggConfig, HierarchicalAggregator
 from repro.core.cascade import CascadeConfig, SupgItCascade
 from repro.core.cost import Catalog, CostModel
 from repro.inference.api import CortexClient
+from repro.inference.backend import CLASSIFY, COMPLETE, SCORE, Request
+from repro.inference.pipeline import ResultFuture
 from repro.tables.table import Table, _hash_join_indices
 
 
@@ -74,6 +87,91 @@ def row_metadata(table: Table, rows: np.ndarray,
     return out
 
 
+# ---------------------------------------------------------------------------
+# SemanticOp: the one request-builder behind every AI call site
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SemanticOp:
+    """Typed request assembly for one semantic-operator micro-batch.
+
+    Replaces the five per-site copies of prompt/metadata/model plumbing
+    (plain AI_FILTER, cascade AI_FILTER, SemanticJoinClassify, projection
+    AI_CLASSIFY / AI_COMPLETE, AI_AGG text phases).  ``submit`` hands the
+    typed batch to the client and returns an awaitable `SemanticHandle`.
+    """
+    kind: str                              # SCORE | CLASSIFY | COMPLETE
+    prompts: List[str]
+    metadata: List[Dict[str, Any]]
+    model: str
+    labels: Tuple[str, ...] = ()
+    multi_label: bool = False
+    max_tokens: int = 32
+
+    # -- factories ------------------------------------------------------
+    @classmethod
+    def scores(cls, prompts: Sequence[str],
+               metadata: Sequence[Dict[str, Any]], model: str) -> "SemanticOp":
+        return cls(SCORE, list(prompts), list(metadata), model)
+
+    @classmethod
+    def from_filter(cls, pred: E.AIFilter, table: Table, rows: np.ndarray,
+                    model: str) -> "SemanticOp":
+        prompts = pred.prompt.render(table, rows)
+        args = [E.eval_expr(a, table, rows) for a in pred.prompt.args]
+        md = row_metadata(table, rows, args)
+        return cls(SCORE, list(prompts), md, model)
+
+    @classmethod
+    def classify(cls, prompts: Sequence[str],
+                 metadata: Sequence[Dict[str, Any]],
+                 labels: Sequence[str], model: str,
+                 multi_label: bool) -> "SemanticOp":
+        labels = tuple(labels)
+        md = [{**m, "candidate_labels": labels} for m in metadata]
+        return cls(CLASSIFY, list(prompts), md, model, labels=labels,
+                   multi_label=multi_label)
+
+    @classmethod
+    def complete(cls, prompts: Sequence[str],
+                 metadata: Sequence[Dict[str, Any]], model: str,
+                 max_tokens: int) -> "SemanticOp":
+        return cls(COMPLETE, list(prompts), list(metadata), model,
+                   max_tokens=max_tokens)
+
+    # -- submission -----------------------------------------------------
+    def requests(self) -> List[Request]:
+        return [Request(p, self.model, self.kind, max_tokens=self.max_tokens,
+                        labels=self.labels or None,
+                        multi_label=self.multi_label, metadata=m)
+                for p, m in zip(self.prompts, self.metadata)]
+
+    def submit(self, client: CortexClient) -> "SemanticHandle":
+        return SemanticHandle(self.kind, client.submit_async(self.requests()))
+
+
+class SemanticHandle:
+    """Typed view over a batch of result futures (awaits on first access)."""
+
+    def __init__(self, kind: str, futures: List[ResultFuture]):
+        self.kind = kind
+        self.futures = futures
+
+    def results(self):
+        return [f.result() for f in self.futures]
+
+    def scores(self) -> np.ndarray:
+        return np.asarray([r.score for r in self.results()], np.float64)
+
+    def chosen_labels(self) -> List[Tuple[str, ...]]:
+        return [tuple(r.labels or ((r.label,) if r.label else ()))
+                for r in self.results()]
+
+    def texts(self) -> List[str]:
+        return [r.text for r in self.results()]
+
+
 @dataclasses.dataclass
 class ExecConfig:
     use_cascade: bool = False
@@ -88,6 +186,9 @@ class ExecConfig:
     # selection drops true labels independently per pass, so recall
     # improves ~1-(1-R1)^k at k× the (still O(L)) call cost.
     classify_passes: int = 1
+    # None: predicate-major batched filter evaluation iff the client has a
+    # RequestPipeline; True/False force it on/off.
+    pipeline_filters: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -126,6 +227,12 @@ class Executor:
         self.cascades: Dict[str, SupgItCascade] = {}
         self.agg_telemetry = None
         self.reorder_events: List[str] = []
+
+    @property
+    def pipelined(self) -> bool:
+        if self.cfg.pipeline_filters is not None:
+            return self.cfg.pipeline_filters
+        return self.client.pipeline is not None
 
     # ------------------------------------------------------------------
     def execute(self, node: P.PlanNode) -> Table:
@@ -168,6 +275,11 @@ class Executor:
         return self.pred_stats.setdefault(self._pred_key(pred),
                                           PredicateStats())
 
+    def _filter_model(self, pred: E.AIFilter) -> str:
+        return pred.model or (
+            self.cost.multimodal_model if pred.multimodal
+            else self.client.default_model)
+
     def _exec_filter(self, node: P.Filter) -> Table:
         table = self._exec(node.child)
         mask = self.eval_predicates(table, list(node.predicates))
@@ -176,9 +288,30 @@ class Executor:
     def eval_predicates(self, table: Table, preds: List[E.Expr]
                         ) -> np.ndarray:
         n = table.num_rows
-        mask = np.ones(n, dtype=bool)
         if not preds:
-            return mask
+            return np.ones(n, dtype=bool)
+        if self.pipelined:
+            return self._eval_predicates_batched(table, preds)
+        return self._eval_predicates_chunked(table, preds)
+
+    def _timed_pred(self, pred: E.Expr, table: Table, rows: np.ndarray
+                    ) -> np.ndarray:
+        """Evaluate one predicate over rows, folding cost into its stats."""
+        st = self._stats_for(pred)
+        t0 = time.perf_counter()
+        c0 = self.client.ai_credits
+        res = self._eval_pred(pred, table, rows)
+        st.seconds += time.perf_counter() - t0
+        st.credits += self.client.ai_credits - c0
+        st.evaluated += len(rows)
+        st.passed += int(res.sum())
+        return res
+
+    def _eval_predicates_chunked(self, table: Table, preds: List[E.Expr]
+                                 ) -> np.ndarray:
+        """Chunk-major evaluation with adaptive mid-stream reordering."""
+        n = table.num_rows
+        mask = np.ones(n, dtype=bool)
         order = list(preds)            # compile-time order from the optimizer
         chunk = self.cfg.chunk_rows if self.cfg.adaptive_reorder else n
         chunk = max(chunk, 1)
@@ -188,14 +321,7 @@ class Executor:
             for pred in order:
                 if len(alive) == 0:
                     break
-                st = self._stats_for(pred)
-                t0 = time.perf_counter()
-                c0 = self.client.ai_credits
-                res = self._eval_pred(pred, table, alive)
-                st.seconds += time.perf_counter() - t0
-                st.credits += self.client.ai_credits - c0
-                st.evaluated += len(alive)
-                st.passed += int(res.sum())
+                res = self._timed_pred(pred, table, alive)
                 alive = alive[res]
             sel = np.zeros(hi - lo, dtype=bool)
             sel[alive - lo] = True
@@ -210,6 +336,32 @@ class Executor:
                     order = ranked
         return mask
 
+    def _eval_predicates_batched(self, table: Table, preds: List[E.Expr]
+                                 ) -> np.ndarray:
+        """Predicate-major evaluation for the pipelined runtime: each
+        predicate scans all surviving rows in one coalesced pass (the
+        pipeline right-sizes the engine batches), trading mid-stream
+        reordering for batching.  Row results are per-row deterministic,
+        so the output mask matches chunk-major evaluation exactly for
+        exact (non-cascade) predicates."""
+        n = table.num_rows
+        order = list(preds)
+        alive = np.arange(n)
+        for pred in order:
+            if len(alive) == 0:
+                break
+            res = self._timed_pred(pred, table, alive)
+            alive = alive[res]
+        mask = np.zeros(n, dtype=bool)
+        mask[alive] = True
+        if self.cfg.adaptive_reorder:
+            ranked = sorted(order, key=lambda p: self._stats_for(p).rank)
+            if ranked != order:           # observational: next query's hint
+                self.reorder_events.append(
+                    "batched: observed rank -> "
+                    + ", ".join(self._pred_key(p) for p in ranked))
+        return mask
+
     def _eval_pred(self, pred: E.Expr, table: Table, rows: np.ndarray
                    ) -> np.ndarray:
         if isinstance(pred, E.AIFilter):
@@ -221,30 +373,24 @@ class Executor:
     # -- AI_FILTER with optional cascade --
     def _eval_ai_filter(self, pred: E.AIFilter, table: Table,
                         rows: np.ndarray) -> np.ndarray:
-        prompts = pred.prompt.render(table, rows)
-        args = [E.eval_expr(a, table, rows) for a in pred.prompt.args]
-        md = row_metadata(table, rows, args)
-        model = pred.model or (
-            self.cost.multimodal_model if pred.multimodal
-            else self.client.default_model)
+        model = self._filter_model(pred)
+        op = SemanticOp.from_filter(pred, table, rows, model)
         if not self.cfg.use_cascade:
-            scores = self.client.filter_scores(prompts, model=model,
-                                               metadata=md)
-            return scores >= 0.5
+            return op.submit(self.client).scores() >= 0.5
         proxy = self.cfg.proxy_model or self.client.proxy_model
         cascade = self.cascades.setdefault(
             self._pred_key(pred), SupgItCascade(self.cfg.cascade))
-        items = list(zip(prompts, md))
+        items = list(zip(op.prompts, op.metadata))
 
         def proxy_scores(batch):
-            return self.client.filter_scores(
-                [p for p, _ in batch], model=proxy,
-                metadata=[m for _, m in batch])
+            return SemanticOp.scores(
+                [p for p, _ in batch], [m for _, m in batch],
+                proxy).submit(self.client).scores()
 
         def oracle_labels(batch):
-            s = self.client.filter_scores(
-                [p for p, _ in batch], model=model,
-                metadata=[m for _, m in batch])
+            s = SemanticOp.scores(
+                [p for p, _ in batch], [m for _, m in batch],
+                model).submit(self.client).scores()
             return s >= 0.5
 
         return cascade.run(items, proxy_scores, oracle_labels)
@@ -312,7 +458,10 @@ class Executor:
         chunks = [uniq[i:i + chunk] for i in range(0, len(uniq), chunk)]
         instruction = node.prompt.template
         md_rows = row_metadata(left, left_rows)
-        selected: List[set] = [set() for _ in range(left.num_rows)]
+        model = node.model or self.client.default_model
+        # submit every (pass × label-chunk) micro-batch before awaiting any:
+        # the pipeline coalesces them into right-sized engine batches
+        handles: List[SemanticHandle] = []
         for pass_no in range(max(self.cfg.classify_passes, 1)):
             tag = "" if pass_no == 0 else (
                 f" (pass {pass_no + 1}: select any additional matches)")
@@ -320,13 +469,14 @@ class Executor:
                 prompts = [
                     ("Select every label that satisfies: "
                      f"{instruction}{tag}\ninput: {t}") for t in left_text]
-                chosen = self.client.classify(
-                    prompts, tuple(labels), model=node.model,
-                    multi_label=self.cfg.classify_multi_label,
-                    metadata=[{**m, "candidate_labels": tuple(labels)}
-                              for m in md_rows])
-                for i, labs in enumerate(chosen):
-                    selected[i].update(labs)
+                op = SemanticOp.classify(
+                    prompts, md_rows, labels, model,
+                    self.cfg.classify_multi_label)
+                handles.append(op.submit(self.client))
+        selected: List[set] = [set() for _ in range(left.num_rows)]
+        for handle in handles:
+            for i, labs in enumerate(handle.chosen_labels()):
+                selected[i].update(labs)
         pairs_l: List[int] = []
         pairs_r: List[int] = []
         for i, labs in enumerate(selected):
@@ -362,6 +512,23 @@ class Executor:
             return out
         raise KeyError(name)
 
+    def _agg_type(self, agg: E.AggCall, table: Table) -> Optional[str]:
+        name = agg.name
+        if name == "COUNT":
+            return "int"
+        if name in ("SUM", "AVG"):
+            return "float"
+        if name in ("AI_AGG", "AI_SUMMARIZE_AGG"):
+            return "str"
+        if name in ("MIN", "MAX") and agg.args \
+                and isinstance(agg.args[0], E.Column):
+            try:
+                return table.types[
+                    E.resolve_column(table, agg.args[0].name)]
+            except KeyError:
+                return None
+        return None
+
     def _item_name(self, item: E.SelectItem, i: int) -> str:
         if item.alias:
             return item.alias
@@ -385,6 +552,7 @@ class Executor:
     def _exec_aggregate(self, node: P.Aggregate) -> Table:
         table = self._exec(node.child)
         aggregator = HierarchicalAggregator(self.client, self.cfg.agg)
+        key0 = None
         if node.group_by:
             try:
                 key0 = E.resolve_column(table, node.group_by[0])
@@ -400,27 +568,65 @@ class Executor:
         else:
             groups = {None: np.arange(table.num_rows)}
         cols: Dict[str, List[Any]] = {}
+        types: Dict[str, str] = {}
         for gkey, rows in groups.items():
             for i, item in enumerate(node.items):
                 name = self._item_name(item, i)
                 e = item.expr
+                t: Optional[str] = None
                 if isinstance(e, E.AggCall):
                     v = self._agg_value(e, table, rows, aggregator)
+                    t = self._agg_type(e, table)
                 elif isinstance(e, E.Column):
-                    v = table.column(E.resolve_column(table, e.name))[rows[0]]
+                    c = E.resolve_column(table, e.name)
+                    v = table.column(c)[rows[0]]
+                    t = table.types[c]
                 elif isinstance(e, E.Star):
                     v = gkey
+                    t = table.types.get(key0) if key0 is not None else None
                 elif name in table:          # materialized alias column
                     v = table.column(name)[rows[0]]
+                    t = table.types.get(name)
                 else:
                     v = E.eval_expr(e, table, rows[:1])[0]
                 cols.setdefault(name, []).append(v)
-        return Table(cols)
-
+                if t:
+                    types[name] = t
+        # never force a dtype onto a column that carries NULLs (e.g. the
+        # MIN/MAX of an empty group)
+        types = {k: t for k, t in types.items()
+                 if all(v is not None for v in cols[k])}
+        return Table(cols, types or None)
 
     def _exec_project(self, node: P.Project) -> Table:
         table = self._exec(node.child)
         rows = np.arange(table.num_rows)
+        # phase 1: assemble + submit every semantic item up front so the
+        # pipeline can coalesce across projection items (cross-operator)
+        handles: Dict[int, SemanticHandle] = {}
+        item_labels: Dict[int, Tuple[str, ...]] = {}
+        for i, item in enumerate(node.items):
+            e = item.expr
+            if isinstance(e, E.AIComplete):
+                prompts = e.prompt.render(table, rows)
+                md = row_metadata(table, rows)
+                op = SemanticOp.complete(
+                    prompts, md, e.model or self.client.default_model,
+                    e.max_tokens)
+                handles[i] = op.submit(self.client)
+            elif isinstance(e, E.AIClassify):
+                prompts = e.text.render(table, rows)
+                md = row_metadata(table, rows)
+                labels = e.labels
+                if e.labels_expr is not None:
+                    lv = E.eval_expr(e.labels_expr, table, rows[:1])
+                    labels = tuple(lv[0]) if len(lv) else ()
+                item_labels[i] = tuple(labels)
+                op = SemanticOp.classify(
+                    prompts, md, labels, e.model or self.client.default_model,
+                    e.multi_label)
+                handles[i] = op.submit(self.client)
+        # phase 2: await + materialize columns
         cols: Dict[str, Any] = {}
         types: Dict[str, str] = {}
         for i, item in enumerate(node.items):
@@ -433,25 +639,10 @@ class Executor:
                 continue
             name = self._item_name(item, i)
             if isinstance(e, E.AIComplete):
-                prompts = e.prompt.render(table, rows)
-                md = row_metadata(table, rows)
-                cols[name] = np.asarray(
-                    self.client.complete(prompts, model=e.model,
-                                         max_tokens=e.max_tokens,
-                                         metadata=md), dtype=object)
+                cols[name] = np.asarray(handles[i].texts(), dtype=object)
                 types[name] = "str"
             elif isinstance(e, E.AIClassify):
-                prompts = e.text.render(table, rows)
-                md = row_metadata(table, rows)
-                labels = e.labels
-                if e.labels_expr is not None:
-                    lv = E.eval_expr(e.labels_expr, table, rows[:1])
-                    labels = tuple(lv[0]) if len(lv) else ()
-                chosen = self.client.classify(
-                    prompts, tuple(labels), model=e.model,
-                    multi_label=e.multi_label,
-                    metadata=[{**m, "candidate_labels": tuple(labels)}
-                              for m in md])
+                chosen = handles[i].chosen_labels()
                 if e.multi_label:
                     cols[name] = np.asarray([tuple(c) for c in chosen],
                                             dtype=object)

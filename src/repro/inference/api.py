@@ -1,17 +1,38 @@
 """Cortex Platform API Service (paper §2): the front-end the SQL engine
 talks to.  Applies business logic (request ids, budget guards, credit
-metering), forwards to the Scheduler, and exposes typed convenience calls
-used by the AISQL operators.
+metering), forwards to the RequestPipeline / Scheduler, and exposes typed
+convenience calls used by the AISQL operators.
+
+Two execution modes share one code path:
+
+  * **eager** (``pipeline=None``): ``submit_async`` dispatches each batch
+    immediately and returns already-resolved futures — the seed engine's
+    per-call-site behaviour, bit-identical telemetry included;
+  * **pipelined** (``pipeline=`` a `RequestPipeline` or `PipelineConfig`):
+    ``submit_async`` enqueues into coalescing per-model queues and returns
+    pending futures; work is dispatched on flush (size threshold or the
+    first ``result()`` barrier), with identical requests deduplicated.
+
+The sync convenience methods (``complete`` / ``filter_scores`` /
+``classify``) are thin wrappers: submit async, then await — so legacy
+callers (cascades, aggregators, notebooks) transparently ride the
+pipeline's batching and memoization.
+
+Credit metering happens **on dispatch**, not on submission: a request
+served from the dedup cache costs zero AI credits, which is exactly the
+saving the paper's §4 cost analysis wants surfaced.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, Request,
                                      Result)
+from repro.inference.pipeline import (PipelineConfig, RequestPipeline,
+                                      ResultFuture)
 from repro.inference.scheduler import Scheduler
 
 
@@ -19,7 +40,9 @@ class CortexClient:
     """What a virtual warehouse holds: a handle to the Cortex API service."""
 
     def __init__(self, scheduler: Scheduler, *, default_model: str = "oracle-70b",
-                 proxy_model: str = "proxy-8b"):
+                 proxy_model: str = "proxy-8b",
+                 pipeline: Union[None, bool, PipelineConfig,
+                                 RequestPipeline] = None):
         self.scheduler = scheduler
         self.default_model = default_model
         self.proxy_model = proxy_model
@@ -29,19 +52,41 @@ class CortexClient:
         self.ai_credits = 0.0
         self.ai_seconds = 0.0
         self.calls_by_model: Dict[str, int] = {}
+        if pipeline is True:
+            pipeline = PipelineConfig()
+        if isinstance(pipeline, PipelineConfig):
+            pipeline = RequestPipeline(scheduler, pipeline,
+                                       on_dispatch=self._meter)
+        elif isinstance(pipeline, RequestPipeline):
+            pipeline.on_dispatch = self._meter
+        self.pipeline: Optional[RequestPipeline] = pipeline or None
 
     # ------------------------------------------------------------------
-    def _submit(self, requests: List[Request]) -> List[Result]:
-        for r in requests:
-            r.request_id = next(self._ids)
-        results = self.scheduler.submit(requests)
+    def _meter(self, results: Sequence[Result]) -> None:
         self.ai_calls += len(results)
         for res in results:
             self.ai_credits += res.credits
             self.ai_seconds += res.latency_s
             self.calls_by_model[res.model] = \
                 self.calls_by_model.get(res.model, 0) + 1
-        return results
+
+    def submit_async(self, requests: List[Request]) -> List[ResultFuture]:
+        """Queue requests; returns one future per request (input order)."""
+        for r in requests:
+            r.request_id = next(self._ids)
+        if self.pipeline is not None:
+            return self.pipeline.submit_many(requests)
+        results = self.scheduler.submit(requests)
+        self._meter(results)
+        return [ResultFuture.resolved(res) for res in results]
+
+    def flush(self) -> None:
+        """Barrier: force-dispatch everything queued in the pipeline."""
+        if self.pipeline is not None:
+            self.pipeline.flush()
+
+    def _submit(self, requests: List[Request]) -> List[Result]:
+        return [f.result() for f in self.submit_async(requests)]
 
     # ------------------------------------------------------------------
     def complete(self, prompts: Sequence[str], *, model: Optional[str] = None,
@@ -80,31 +125,54 @@ class CortexClient:
 
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
-        return {"ai_calls": self.ai_calls, "ai_credits": self.ai_credits,
-                "ai_seconds": self.ai_seconds,
-                "calls_by_model": dict(self.calls_by_model)}
+        out = {"ai_calls": self.ai_calls, "ai_credits": self.ai_credits,
+               "ai_seconds": self.ai_seconds,
+               "calls_by_model": dict(self.calls_by_model)}
+        if self.pipeline is not None:
+            out["pipeline"] = self.pipeline.stats.snapshot()
+        return out
 
     def meter_delta(self, before: Dict[str, Any]) -> Dict[str, Any]:
-        return {
+        out = {
             "ai_calls": self.ai_calls - before["ai_calls"],
             "ai_credits": self.ai_credits - before["ai_credits"],
             "ai_seconds": self.ai_seconds - before["ai_seconds"],
         }
+        if self.pipeline is not None and "pipeline" in before:
+            out["pipeline"] = self.pipeline.stats.delta(before["pipeline"])
+        return out
+
+
+def _make_pipeline(pipelined: bool,
+                   pipeline: Union[None, PipelineConfig, RequestPipeline]
+                   ) -> Union[None, PipelineConfig, RequestPipeline]:
+    if pipeline is not None:
+        return pipeline
+    return PipelineConfig() if pipelined else None
 
 
 def make_simulated_client(*, seed: int = 0, default_model: str = "oracle-70b",
-                          proxy_model: str = "proxy-8b") -> CortexClient:
+                          proxy_model: str = "proxy-8b",
+                          pipelined: bool = False,
+                          pipeline: Union[None, PipelineConfig,
+                                          RequestPipeline] = None
+                          ) -> CortexClient:
     """Convenience: a CortexClient over the calibrated simulator."""
     from repro.inference.simulator import SimulatedBackend
     sched = Scheduler()
     sched.register(SimulatedBackend(seed=seed))
     return CortexClient(sched, default_model=default_model,
-                        proxy_model=proxy_model)
+                        proxy_model=proxy_model,
+                        pipeline=_make_pipeline(pipelined, pipeline))
 
 
 def make_engine_client(archs: Sequence[str] = ("proxy-8b", "oracle-70b"), *,
                        seed: int = 0, replicas: int = 1,
-                       default_model: Optional[str] = None) -> CortexClient:
+                       default_model: Optional[str] = None,
+                       pipelined: bool = False,
+                       pipeline: Union[None, PipelineConfig,
+                                       RequestPipeline] = None
+                       ) -> CortexClient:
     """Convenience: a CortexClient over real JAX engines (smoke-size)."""
     from repro.inference.engine import JaxInferenceEngine
     sched = Scheduler()
@@ -113,4 +181,5 @@ def make_engine_client(archs: Sequence[str] = ("proxy-8b", "oracle-70b"), *,
             sched.register(JaxInferenceEngine(
                 arch, engine_id=f"{arch}#{rep}", seed=seed + rep))
     return CortexClient(sched, default_model=default_model or archs[-1],
-                        proxy_model=archs[0])
+                        proxy_model=archs[0],
+                        pipeline=_make_pipeline(pipelined, pipeline))

@@ -163,8 +163,16 @@ class JaxInferenceEngine:
                 flat_labels.append(lb)
                 owners.append(i)
         if not flat_prompts:
-            return [Result(r.request_id, self.arch, CLASSIFY, label=None)
-                    for r in requests]
+            # no candidate labels: still a served (and metered) request —
+            # prompt tokens were shipped even though no label was scored
+            out = []
+            for r in requests:
+                ti = len(tok.encode(r.prompt, max_len=self.max_seq))
+                out.append(Result(
+                    r.request_id, self.arch, CLASSIFY, label=None, labels=(),
+                    tokens_in=ti, credits=credits_for(self.arch, ti),
+                    engine_id=self.engine_id))
+            return out
         lps, tokens_used = self._sequence_logprob(flat_prompts, flat_labels)
         per_req: Dict[int, List[Tuple[str, float]]] = {}
         for o, lb, lp in zip(owners, flat_labels, lps):
@@ -174,6 +182,15 @@ class JaxInferenceEngine:
             tokens_per_req[o] = tokens_per_req.get(o, 0) + t
         for i, r in enumerate(requests):
             pairs = per_req.get(i, [])
+            if not pairs:
+                # label-less request coalesced into a labeled batch: serve
+                # (and meter) it like the all-empty early-return path
+                ti = len(tok.encode(r.prompt, max_len=self.max_seq))
+                results.append(Result(
+                    r.request_id, self.arch, CLASSIFY, label=None, labels=(),
+                    tokens_in=ti, credits=credits_for(self.arch, ti),
+                    engine_id=self.engine_id))
+                continue
             lbls = [p[0] for p in pairs]
             lp = np.asarray([p[1] for p in pairs])
             probs = np.exp(lp - lp.max())
@@ -307,6 +324,10 @@ class JaxInferenceEngine:
 
     def hosted_models(self) -> List[str]:
         return [self.arch]
+
+    def capacity_hint(self) -> int:
+        """Preferred per-dispatch batch size (scheduler right-sizing)."""
+        return self.max_batch
 
 
 def cache_sig(cache):

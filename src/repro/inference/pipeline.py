@@ -1,0 +1,274 @@
+"""Batched async request pipeline — the semantic-operator runtime core.
+
+Every AI call site in the engine (filters, cascades, joins, projections,
+aggregations) funnels `Request`s through one `RequestPipeline` instead of
+issuing blocking per-call-site scheduler submits.  The pipeline
+
+  * **coalesces** micro-batches across chunks / predicates / operators
+    into right-sized engine batches: requests accumulate in per-model
+    queues and are dispatched together, so ten 50-row label chunks become
+    one 500-row engine batch;
+  * **deduplicates** identical work: two requests with the same
+    ``(model, kind, prompt, labels, multi_label, max_tokens)`` fingerprint
+    share a single engine execution.  Duplicates arriving while the
+    primary is queued attach to it in-flight; duplicates arriving after it
+    completed are served from a bounded memoized result cache (repeated
+    prompts recur across adaptive-reorder chunks, hybrid-join passes,
+    cascade escalation, and — in production — across repeated queries);
+  * **meters honestly**: only dispatched requests reach the
+    ``on_dispatch`` hook (the CortexClient's credit meter), so dedup
+    savings show up directly in AI-credit telemetry;
+  * **reports**: batch-size histogram, dedup/cache hit counts, queue-wait
+    seconds, and flush causes (size vs barrier) via `PipelineStats`.
+
+Flush policy: a model queue flushes when it reaches ``max_batch``
+requests (*size*), or when any future's ``result()`` is demanded or
+``flush()`` is called (*barrier*).  The synchronous harness makes futures
+deterministic: forcing one unresolved future flushes every queue, so
+results never deadlock and arrival order never changes query semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.inference.backend import Request, Result
+from repro.inference.scheduler import Scheduler
+
+
+def request_fingerprint(r: Request) -> Tuple:
+    """Dedup key: everything that determines the engine's answer.
+
+    Real engines answer from (model, kind, prompt, labels, max_tokens)
+    alone, but the calibrated simulator also grounds results in request
+    metadata (truth, difficulty, bias knobs) — so the metadata is folded
+    into the key.  In every intended dedup case (re-scored rows across
+    adaptive-reorder chunks, cascade escalation, repeated queries) the
+    duplicate carries the same row metadata, so this only prevents
+    *false* sharing between distinct rows with identical text.
+    """
+    md = tuple(sorted((k, str(v)) for k, v in r.metadata.items())) \
+        if r.metadata else ()
+    return (r.model, r.kind, r.prompt, r.labels, r.multi_label,
+            r.max_tokens, md)
+
+
+class ResultFuture:
+    """Handle for one in-flight request.  ``result()`` forces a barrier
+    flush of the owning pipeline if the request has not been dispatched."""
+
+    __slots__ = ("_pipeline", "_result")
+
+    def __init__(self, pipeline: Optional["RequestPipeline"] = None):
+        self._pipeline = pipeline
+        self._result: Optional[Result] = None
+
+    @classmethod
+    def resolved(cls, result: Result) -> "ResultFuture":
+        f = cls(None)
+        f._result = result
+        return f
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def _resolve(self, result: Result) -> None:
+        self._result = result
+
+    def result(self) -> Result:
+        if self._result is None:
+            if self._pipeline is None:
+                raise RuntimeError("unresolved future with no pipeline")
+            self._pipeline.flush()
+        if self._result is None:      # pragma: no cover - defensive
+            raise RuntimeError("pipeline flush did not resolve future")
+        return self._result
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    max_batch: int = 512          # flush-on-size threshold / dispatch size
+    dedup: bool = True
+    cache_size: int = 65536       # memoized results (FIFO eviction)
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    submitted: int = 0            # requests entering the pipeline
+    dispatched: int = 0           # requests actually sent to the scheduler
+    batches: int = 0              # scheduler submits issued
+    dedup_hits: int = 0           # total coalesced duplicates (both kinds)
+    inflight_hits: int = 0        # attached to a queued identical request
+    cache_hits: int = 0           # served from the memoized result cache
+    flushes_on_size: int = 0
+    flushes_on_barrier: int = 0
+    queue_wait_s: float = 0.0     # sum over dispatched reqs of queue time
+    batch_size_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def dedup_hit_rate(self) -> float:
+        return self.dedup_hits / self.submitted if self.submitted else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["batch_size_hist"] = dict(self.batch_size_hist)
+        return d
+
+    def delta(self, before: Dict[str, Any]) -> Dict[str, Any]:
+        """Per-query telemetry: stats accumulated since ``before``."""
+        now = self.snapshot()
+        out: Dict[str, Any] = {}
+        for k, v in now.items():
+            if isinstance(v, dict):
+                prev = before.get(k, {})
+                out[k] = {sz: n - prev.get(sz, 0) for sz, n in v.items()
+                          if n - prev.get(sz, 0)}
+            else:
+                out[k] = v - before.get(k, 0)
+        sub = out.get("submitted", 0)
+        out["dedup_hit_rate"] = out["dedup_hits"] / sub if sub else 0.0
+        return out
+
+
+class _QueueItem:
+    __slots__ = ("request", "futures", "enqueued_at")
+
+    def __init__(self, request: Request, future: ResultFuture, t: float):
+        self.request = request
+        self.futures = [future]
+        self.enqueued_at = t
+
+
+class RequestPipeline:
+    """Coalescing, deduplicating request queue in front of the Scheduler."""
+
+    def __init__(self, scheduler: Scheduler,
+                 cfg: Optional[PipelineConfig] = None, *,
+                 on_dispatch: Optional[Callable[[List[Result]], None]] = None):
+        self.scheduler = scheduler
+        self.cfg = cfg or PipelineConfig()
+        self.on_dispatch = on_dispatch
+        self.stats = PipelineStats()
+        self._queues: Dict[str, List[_QueueItem]] = {}
+        self._inflight: Dict[Tuple, _QueueItem] = {}
+        self._cache: Dict[Tuple, Result] = {}
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Request) -> ResultFuture:
+        return self.submit_many([request])[0]
+
+    def submit_many(self, requests: Sequence[Request]) -> List[ResultFuture]:
+        now = time.perf_counter()
+        futures: List[ResultFuture] = []
+        touched: List[str] = []
+        for r in requests:
+            self.stats.submitted += 1
+            key = request_fingerprint(r) if self.cfg.dedup else None
+            if key is not None:
+                cached = self._cache.get(key)
+                if cached is not None:
+                    self.stats.dedup_hits += 1
+                    self.stats.cache_hits += 1
+                    futures.append(ResultFuture.resolved(cached))
+                    continue
+                pending = self._inflight.get(key)
+                if pending is not None:
+                    f = ResultFuture(self)
+                    pending.futures.append(f)
+                    self.stats.dedup_hits += 1
+                    self.stats.inflight_hits += 1
+                    futures.append(f)
+                    continue
+            f = ResultFuture(self)
+            item = _QueueItem(r, f, now)
+            self._queues.setdefault(r.model, []).append(item)
+            if key is not None:
+                self._inflight[key] = item
+            futures.append(f)
+            touched.append(r.model)
+        for model in dict.fromkeys(touched):
+            if len(self._queues.get(model, ())) >= self.cfg.max_batch:
+                self.stats.flushes_on_size += 1
+                self._flush_model(model)
+        return futures
+
+    # ------------------------------------------------------------------
+    # flushing / dispatch
+    # ------------------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def flush(self, model: Optional[str] = None) -> None:
+        """Barrier: dispatch every queued request (or one model's queue)."""
+        models = [model] if model is not None else list(self._queues)
+        flushed_any = False
+        for m in models:
+            if self._queues.get(m):
+                flushed_any = True
+                self._flush_model(m)
+        if flushed_any:
+            self.stats.flushes_on_barrier += 1
+
+    def _flush_model(self, model: str) -> None:
+        size = max(self.cfg.max_batch, 1)
+        queue = self._queues.get(model)
+        while queue:
+            # pop one chunk at a time so a dispatch failure leaves the
+            # rest of the queue intact (re-flushable) instead of orphaned
+            items, self._queues[model] = queue[:size], queue[size:]
+            queue = self._queues[model]
+            if not queue:
+                self._queues.pop(model, None)
+            self._dispatch(items)
+
+    def _dispatch(self, items: List[_QueueItem]) -> None:
+        if not items:
+            return
+        t0 = time.perf_counter()
+        try:
+            results = self.scheduler.submit([it.request for it in items])
+        except Exception:
+            # the error propagates to the caller awaiting the barrier; drop
+            # the in-flight fingerprints so later identical requests don't
+            # attach to these (now unreachable) queue items
+            if self.cfg.dedup:
+                for it in items:
+                    self._inflight.pop(request_fingerprint(it.request), None)
+            raise
+        self.stats.batches += 1
+        self.stats.dispatched += len(items)
+        self.stats.batch_size_hist[len(items)] = \
+            self.stats.batch_size_hist.get(len(items), 0) + 1
+        if self.on_dispatch is not None:
+            self.on_dispatch(results)
+        for it, res in zip(items, results):
+            self.stats.queue_wait_s += t0 - it.enqueued_at
+            key = request_fingerprint(it.request) if self.cfg.dedup else None
+            if key is not None:
+                self._inflight.pop(key, None)
+                self._remember(key, res)
+            for f in it.futures:
+                f._resolve(res)
+
+    # ------------------------------------------------------------------
+    # memoized result cache
+    # ------------------------------------------------------------------
+
+    def _remember(self, key: Tuple, result: Result) -> None:
+        cap = self.cfg.cache_size
+        if cap <= 0:
+            return
+        if len(self._cache) >= cap:
+            # FIFO eviction of the oldest half (dict preserves insertion)
+            for k in list(self._cache)[:max(cap // 2, 1)]:
+                del self._cache[k]
+        self._cache[key] = result
+
+    def clear_cache(self) -> None:
+        self._cache.clear()

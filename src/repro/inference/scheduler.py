@@ -2,13 +2,25 @@
 
 Responsibilities mirrored from the paper:
   * model-affinity routing — a request for model M goes to an engine that
-    already hosts M (round-robin across replicas);
+    already hosts M, picked **least-loaded first**: replicas are ranked by
+    accumulated busy-seconds plus queued work, so a slow or straggling
+    replica naturally receives less traffic than pure round-robin would
+    give it (round-robin order breaks ties);
+  * batch right-sizing — a batch larger than a replica's capacity hint is
+    split across healthy replicas and the partial results are merged in
+    request order;
   * fault tolerance — EngineFailure triggers bounded retry on another
     replica (or the same one if it is the only replica);
-  * straggler mitigation — per-batch deadline; a batch that exceeds it is
-    re-dispatched to the fastest healthy replica;
+  * straggler mitigation — per-batch deadline; a batch that exceeds it
+    adds a load penalty to the offending replica so subsequent picks
+    prefer its peers;
   * elastic scaling hooks — replicas can be registered/deregistered at any
     time (the autoscaler in api.py uses queue depth).
+
+Request ids must be unique within one ``submit`` call; colliding ids
+(e.g. the all-zero default) are transparently re-assigned for the
+duration of the call and restored afterwards, instead of silently
+dropping all but one result per id.
 """
 from __future__ import annotations
 
@@ -18,6 +30,17 @@ from typing import Dict, List, Optional, Sequence
 from repro.inference.backend import (EngineFailure, InferenceBackend, Request,
                                      Result)
 
+_DEFAULT_CAPACITY = 32
+
+
+def _capacity_of(engine: InferenceBackend) -> int:
+    hint = getattr(engine, "capacity_hint", None)
+    if callable(hint):
+        hint = hint()
+    if hint is None:
+        hint = getattr(engine, "max_batch", None)
+    return int(hint) if hint else _DEFAULT_CAPACITY
+
 
 class SchedulerError(RuntimeError):
     pass
@@ -25,29 +48,46 @@ class SchedulerError(RuntimeError):
 
 class Scheduler:
     def __init__(self, *, max_retries: int = 2,
-                 straggler_deadline_s: Optional[float] = None):
+                 straggler_deadline_s: Optional[float] = None,
+                 straggler_penalty_s: float = 1.0):
         self._replicas: Dict[str, List[InferenceBackend]] = {}
         self._rr: Dict[str, int] = {}
+        # per-engine load accounting for least-loaded routing
+        self._busy_s: Dict[int, float] = {}
+        self._depth: Dict[int, int] = {}
         self.max_retries = max_retries
         self.straggler_deadline_s = straggler_deadline_s
+        self.straggler_penalty_s = straggler_penalty_s
         # telemetry
         self.retries = 0
         self.redispatches = 0
+        self.splits = 0
+        self.submits = 0           # submit() calls (what the pipeline saves)
+        self.dispatches = 0        # engine submit_batch calls
 
     # ---- registry / elasticity ----
     def register(self, engine: InferenceBackend) -> None:
         for m in engine.hosted_models():
             self._replicas.setdefault(m, []).append(engine)
+        self._busy_s.setdefault(id(engine), 0.0)
+        self._depth.setdefault(id(engine), 0)
 
     def deregister(self, engine: InferenceBackend) -> None:
         for m in list(self._replicas):
             self._replicas[m] = [e for e in self._replicas[m] if e is not engine]
+        self._busy_s.pop(id(engine), None)
+        self._depth.pop(id(engine), None)
 
     def replicas(self, model: str) -> List[InferenceBackend]:
         return list(self._replicas.get(model, ()))
 
     def hosted_models(self) -> List[str]:
         return list(self._replicas)
+
+    def engine_load(self, engine: InferenceBackend) -> float:
+        """Load score: accumulated busy seconds + queued request count."""
+        return (self._busy_s.get(id(engine), 0.0)
+                + float(self._depth.get(id(engine), 0)))
 
     # ---- routing ----
     def _pick(self, model: str, exclude=None) -> InferenceBackend:
@@ -56,42 +96,87 @@ class Scheduler:
             raise SchedulerError(f"no engine hosts model {model!r}; "
                                  f"hosted: {self.hosted_models()}")
         candidates = [e for e in reps if e is not exclude] or reps
-        i = self._rr.get(model, 0) % len(candidates)
+        lo = min(self.engine_load(e) for e in candidates)
+        tied = [e for e in candidates if self.engine_load(e) <= lo + 1e-12]
+        i = self._rr.get(model, 0) % len(tied)     # round-robin tie-break
         self._rr[model] = i + 1
-        return candidates[i]
+        return tied[i]
 
     def submit(self, requests: Sequence[Request]) -> List[Result]:
         """Route a mixed-model batch; preserves input order."""
-        by_model: Dict[str, List[Request]] = {}
-        for r in requests:
-            by_model.setdefault(r.model, []).append(r)
-        results: Dict[int, Result] = {}
-        for model, reqs in by_model.items():
-            for res in self._submit_one_model(model, reqs):
-                results[res.request_id] = res
-        return [results[r.request_id] for r in requests]
+        self.submits += 1
+        originals = self._ensure_unique_ids(requests)
+        try:
+            by_model: Dict[str, List[Request]] = {}
+            for r in requests:
+                by_model.setdefault(r.model, []).append(r)
+            results: Dict[int, Result] = {}
+            for model, reqs in by_model.items():
+                for part in self._partition(model, reqs):
+                    for res in self._submit_one_model(model, part):
+                        results[res.request_id] = res
+            out = [results[r.request_id] for r in requests]
+        finally:
+            if originals is not None:
+                for r, rid in zip(requests, originals):
+                    r.request_id = rid
+        if originals is not None:
+            for res, r in zip(out, requests):
+                res.request_id = r.request_id
+        return out
+
+    def _ensure_unique_ids(self, requests: Sequence[Request]
+                           ) -> Optional[List[int]]:
+        """Colliding request ids would silently drop results (the results
+        map is id-keyed) — re-assign unique temporary ids when needed."""
+        ids = [r.request_id for r in requests]
+        if len(set(ids)) == len(requests):
+            return None
+        for i, r in enumerate(requests):
+            r.request_id = i + 1
+        return ids
+
+    def _partition(self, model: str, reqs: List[Request]
+                   ) -> List[List[Request]]:
+        """Split an oversized batch across replicas (capacity hints)."""
+        reps = self._replicas.get(model, ())
+        if len(reps) <= 1 or not reqs:
+            return [reqs]
+        per_replica = max(min(_capacity_of(e) for e in reps), 1)
+        n_parts = min(len(reps), -(-len(reqs) // per_replica))
+        if n_parts <= 1:
+            return [reqs]
+        self.splits += n_parts - 1
+        size = -(-len(reqs) // n_parts)
+        return [reqs[i:i + size] for i in range(0, len(reqs), size)]
 
     def _submit_one_model(self, model: str, reqs: Sequence[Request]
                           ) -> List[Result]:
         last_exc: Optional[Exception] = None
         engine = self._pick(model)
         for attempt in range(self.max_retries + 1):
+            eid = id(engine)
+            self._depth[eid] = self._depth.get(eid, 0) + len(reqs)
             try:
                 t0 = time.perf_counter()
+                self.dispatches += 1
                 out = engine.submit_batch(reqs)
                 dt = time.perf_counter() - t0
+                self._busy_s[eid] = self._busy_s.get(eid, 0.0) + dt
                 if (self.straggler_deadline_s is not None
                         and dt > self.straggler_deadline_s
                         and len(self._replicas.get(model, ())) > 1
                         and attempt < self.max_retries):
-                    # straggler: result arrived but too late — re-dispatch
-                    # the NEXT batches elsewhere by rotating this replica out
+                    # straggler: result arrived but too late — penalize the
+                    # slow replica so least-loaded picks route around it
                     self.redispatches += 1
-                    engine = self._pick(model, exclude=engine)
+                    self._busy_s[eid] += self.straggler_penalty_s
                 return out
             except EngineFailure as e:
                 last_exc = e
                 self.retries += 1
                 engine = self._pick(model, exclude=engine)
+            finally:
+                self._depth[eid] = max(self._depth.get(eid, 0) - len(reqs), 0)
         raise SchedulerError(
             f"model {model}: exhausted {self.max_retries} retries") from last_exc

@@ -78,6 +78,11 @@ class SimulatedBackend:
     def hosted_models(self) -> List[str]:
         return list(self.models)
 
+    def capacity_hint(self) -> int:
+        """Preferred per-dispatch batch size (scheduler right-sizing):
+        modelled parallel slots × a queueing factor."""
+        return self.batch_parallelism * 32
+
     def submit_batch(self, requests: Sequence[Request]) -> List[Result]:
         out: List[Result] = []
         batch_s = 0.0

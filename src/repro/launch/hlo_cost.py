@@ -107,7 +107,61 @@ _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS_RE = re.compile(r"\(([^()]*)\)")   # operand names never nest parens
+
+
+def _operand_str(op: "Op") -> str:
+    """Text inside the operand parens of the op invocation.
+
+    Handles both untyped (`dot(%a, %b)`) and typed
+    (`dot(f32[64,128]{1,0} %a, ...)`) operand prints, and tuple-typed
+    operands whose *types* nest parens (`gte((s32[], f32[2]) %t)`).
+    Anchored after the `=` so a `%dot.3 = ... dot(...)` instruction name
+    doesn't shadow the opcode.
+    """
+    eq = op.line.find("=")
+    i = op.line.find(op.kind + "(", eq + 1)
+    if i < 0:
+        return ""
+    start = i + len(op.kind) + 1
+    depth = 1
+    j = start
+    line = op.line
+    while j < len(line) and depth:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    return line[start:j - 1]
+
+
+def _split_top(s: str):
+    """Split on commas not nested inside (), [], or {}."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _operand_names(op: "Op"):
+    """Operand instruction names, in order (typed or untyped prints)."""
+    names = []
+    for part in _split_top(_operand_str(op)):
+        part = part.strip()
+        if not part:
+            continue
+        names.append(part.split()[-1].lstrip("%"))
+    return names
 
 
 def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
@@ -180,10 +234,14 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     relems, _ = shape_elems_bytes(op.shape)
     contract = 1
     cm = _CONTRACT_RE.search(op.line)
-    om = _OPERANDS_RE.search(op.line[op.line.index(op.kind):])
-    if cm and om:
-        lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
-        lhs_shape = comp.shapes.get(lhs_name, "")
+    names = _operand_names(op)
+    if cm and names:
+        lhs_shape = comp.shapes.get(names[0], "")
+        # typed operand prints carry the shape inline: fall back to it
+        if not lhs_shape:
+            parts = _split_top(_operand_str(op))
+            if parts:
+                lhs_shape = parts[0]
         sm = _SHAPE_RE.search(lhs_shape)
         if sm:
             dims = [int(d) for d in sm.group(2).split(",") if d]
@@ -196,14 +254,8 @@ def _dot_flops(op: Op, comp: Computation) -> float:
 
 
 def _op_operand_bytes(op: Op, comp: Computation) -> int:
-    om = _OPERANDS_RE.search(op.line[op.line.index(op.kind):])
-    if not om:
-        return 0
     total = 0
-    for nm in om.group(1).split(","):
-        nm = nm.strip().lstrip("%")
-        if not nm:
-            continue
+    for nm in _operand_names(op):
         sh = comp.shapes.get(nm)
         if sh:
             total += shape_elems_bytes(sh)[1]
@@ -211,11 +263,8 @@ def _op_operand_bytes(op: Op, comp: Computation) -> int:
 
 
 def _first_operand(op: Op) -> Optional[str]:
-    om = _OPERANDS_RE.search(op.line[op.line.index(op.kind):])
-    if not om:
-        return None
-    parts = om.group(1).split(",")
-    return parts[0].strip().lstrip("%") if parts else None
+    names = _operand_names(op)
+    return names[0] if names else None
 
 
 def _unwrap(comp: Computation, op: Op, kinds=("convert", "bitcast", "copy")
@@ -246,11 +295,9 @@ def _dus_update_bytes(comp: Computation) -> Optional[float]:
     if root.kind == "dynamic-update-slice":
         dus_ops = [root]
     elif root.kind == "tuple":
-        om = _OPERANDS_RE.search(root.line[root.line.index("tuple"):])
-        if om:
-            names = {n.strip().lstrip("%") for n in om.group(1).split(",")}
-            dus_ops = [o for o in comp.ops
-                       if o.name in names and o.kind == "dynamic-update-slice"]
+        names = set(_operand_names(root))
+        dus_ops = [o for o in comp.ops
+                   if o.name in names and o.kind == "dynamic-update-slice"]
         if not dus_ops:
             return None
     else:
@@ -258,10 +305,7 @@ def _dus_update_bytes(comp: Computation) -> Optional[float]:
     by_name = {o.name: o for o in comp.ops}
     total = 0.0
     for o in dus_ops:
-        om = _OPERANDS_RE.search(o.line[o.line.index(o.kind):])
-        if not om:
-            return None
-        names = [n.strip().lstrip("%") for n in om.group(1).split(",")]
+        names = _operand_names(o)
         if len(names) < 2:
             return None
         upd_op = by_name.get(names[1])
@@ -322,20 +366,15 @@ def _fusion_traffic(op: Op, comp: Computation, callee: Computation,
                     if pm:
                         aliased_idx = int(pm.group(1))
     total = 2.0 * upd if upd is not None else float(rbytes)
-    om = _OPERANDS_RE.search(op.line[op.line.index("fusion"):])
-    if om:
-        for i, nm in enumerate(om.group(1).split(",")):
-            nm = nm.strip().lstrip("%")
-            if not nm:
-                continue
-            if i == aliased_idx:
-                continue                      # in-place: no full read/write
-            if i in slice_reads:
-                total += 2.0 * slice_reads[i]
-                continue
-            sh = comp.shapes.get(nm)
-            if sh:
-                total += shape_elems_bytes(sh)[1]
+    for i, nm in enumerate(_operand_names(op)):
+        if i == aliased_idx:
+            continue                      # in-place: no full read/write
+        if i in slice_reads:
+            total += 2.0 * slice_reads[i]
+            continue
+        sh = comp.shapes.get(nm)
+        if sh:
+            total += shape_elems_bytes(sh)[1]
     return total
 
 
@@ -351,13 +390,11 @@ def _traffic_bytes(op: Op, comp: Computation, rbytes: int,
     if kind == "reshape" or kind == "bitcast":
         return 0.0
     if kind == "dynamic-update-slice":
-        om = _OPERANDS_RE.search(op.line[op.line.index(kind):])
-        if om:
-            names = [n.strip().lstrip("%") for n in om.group(1).split(",")]
-            if len(names) > 1:
-                upd = comp.shapes.get(names[1])
-                if upd:
-                    return 2.0 * shape_elems_bytes(upd)[1]
+        names = _operand_names(op)
+        if len(names) > 1:
+            upd = comp.shapes.get(names[1])
+            if upd:
+                return 2.0 * shape_elems_bytes(upd)[1]
         return float(rbytes)
     if kind == "fusion" and comps is not None:
         cm = _CALLS_RE.search(op.line)

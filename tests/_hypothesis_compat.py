@@ -1,0 +1,38 @@
+"""Import indirection for hypothesis-based property tests.
+
+The tier-1 environment does not ship `hypothesis`; importing it at module
+scope used to kill collection of every test in the importing file.  This
+shim degrades gracefully: with hypothesis installed (see
+requirements-dev.txt) the real API is re-exported; without it, ``@given``
+turns the property test into a clean skip and the example-based tests in
+the same file keep running.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                           # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Accept any strategy construction; values are never drawn."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (see requirements-dev.txt)"
+            )(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

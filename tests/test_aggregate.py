@@ -1,7 +1,7 @@
 """Hierarchical AI aggregation (Algorithm 1) + §5.4 short-circuit."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregate import AggConfig, HierarchicalAggregator
 

@@ -1,7 +1,7 @@
 """SUPG-IT cascade: budget, quality, threshold and streaming invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cascade import (CalibratedCascade, CascadeConfig,
                                 SupgItCascade)

@@ -1,7 +1,7 @@
 """AISQL core: parser, plan, optimizer, executor correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (AisqlEngine, Catalog, CostModel, ExecConfig,
                         Optimizer, OptimizerConfig)
