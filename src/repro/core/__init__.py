@@ -1,5 +1,9 @@
 """AISQL core: the paper's contribution (operators + AI-aware engine)."""
-from repro.core.engine import AisqlEngine, QueryReport           # noqa: F401
+from repro.core.engine import (AisqlEngine, OperatorReport,      # noqa: F401
+                               QueryReport)
+from repro.core.stats import (PredObservation, StatsStore,       # noqa: F401
+                              predicate_fingerprint)
+from repro.core.cost import CostDefaults                         # noqa: F401
 from repro.core.cascade import (CascadeConfig, SupgItCascade,    # noqa: F401
                                 CalibratedCascade)
 from repro.core.optimizer import Optimizer, OptimizerConfig      # noqa: F401

@@ -60,6 +60,11 @@ class CascadeStats:
 
     @property
     def delegation_rate(self) -> float:
+        """Oracle escalations per routed row.  The executor folds this
+        into the `StatsStore` after each query; once it is observed near
+        1.0 the runtime bypasses the cascade entirely (the proxy is not
+        separating this predicate) — see ``ExecConfig.
+        cascade_bypass_delegation``."""
         return self.oracle_calls / max(self.rows, 1)
 
 

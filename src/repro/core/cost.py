@@ -1,28 +1,72 @@
-"""Cost model for AI-aware query optimization (paper §5.1).
+"""Cost model for AI-aware query optimization (paper §5.1) + learned stats.
 
 The key departure from classical optimizers: the objective is the number /
-price of LLM invocations, not join cardinality.  AI-operator selectivity is
-unknown at compile time (default 0.5); cost per row is estimable from the
-average token length of the referenced columns and the per-model price —
+price of LLM invocations, not join cardinality.  AI-operator selectivity
+is unknown at compile time; cost per row is estimable from the average
+token length of the referenced columns and the per-model price —
 multimodal predicates (FILE args) are priced on the multimodal model tier.
+
+Two estimate sources, consulted in order:
+
+  1. **observed statistics** — when a `StatsStore` is attached and holds
+     enough evidence for a predicate's fingerprint (pilot samples or past
+     queries), selectivity and cost-per-row come from real executions,
+     Bayes-blended with the static prior while the sample is small;
+  2. **static defaults** — the classical fallbacks, all named and
+     configurable on `CostDefaults` (reachable via
+     ``OptimizerConfig.cost_defaults``) instead of inline literals.
+
+Units used throughout this module:
+
+  * **credits** — the paper's §4 billing unit; ``CREDITS_PER_MTOK[model]
+    × tokens / 1e6``.  All ``*_cost_per_row`` / ``est_llm_cost`` values.
+  * **tokens** — model-input tokens, estimated as ``chars / 4``.
+  * **rows** — table cardinalities; ``est_rows`` returns fractional
+    expected rows, not integers.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional
 
 from repro.core import expr as E
 from repro.core import plan as P
+from repro.core.stats import StatsStore, predicate_fingerprint
 from repro.inference.backend import CREDITS_PER_MTOK
 from repro.tables.table import Table
 
-# relative per-row evaluation cost of non-AI predicates (arbitrary tiny unit:
-# one numpy comparison vs an LLM call is ~6-9 orders of magnitude)
-REL_PRED_COST = 1e-7
+@dataclasses.dataclass
+class CostDefaults:
+    """Named fallback constants for every estimate the model cannot derive
+    from catalog statistics or the `StatsStore`.
+
+    Exposed on ``OptimizerConfig.cost_defaults`` so a workload can tune
+    the planner's priors without touching code.  Units: selectivities are
+    fractions in [0, 1]; ``rel_pred_cost`` is credits per row (kept many
+    orders of magnitude below any LLM call); lengths are characters.
+    """
+    ai_selectivity: float = 0.5        # AI predicate pass rate, unknown a priori
+    rel_pred_cost: float = 1e-7        # credits/row of a numpy comparison
+    unknown_ndv: int = 100             # NDV of an unknown column
+    unknown_avg_chars: float = 64.0    # avg value length of an unknown column
+    min_tokens_per_value: float = 2.0  # floor on per-value token estimates
+    eq_selectivity: float = 0.1        # "=" with a non-column left side
+    inequality_selectivity: float = 1.0 / 3.0   # < <= > >= !=
+    between_selectivity: float = 0.25
+    in_list_selectivity: float = 0.5   # IN over a non-column expression
+    func_selectivity: float = 0.5      # scalar builtins (FL_IS_IMAGE, ...)
+    default_selectivity: float = 0.5   # anything else
+    labels_per_left_row: float = 1.5   # SemanticJoinClassify fan-out
+    # -- learned-stats trust policy -----------------------------------
+    stats_min_rows: int = 24           # below this, observations are ignored
+    stats_prior_strength: float = 16.0  # pseudo-rows backing the static prior
 
 
 @dataclasses.dataclass
 class TableStats:
+    """Per-table catalog statistics: row count, per-column NDV (distinct
+    values) and average value length in characters."""
     rows: int
     ndv: Dict[str, int]
     avg_len: Dict[str, float]
@@ -36,28 +80,64 @@ class TableStats:
 
 @dataclasses.dataclass
 class Catalog:
+    """The engine's table registry.
+
+    Maps table name -> `Table` and eagerly computes `TableStats` for each
+    (``self.stats``); both the optimizer's NDV/length estimates and the
+    rewrite oracle's sample-value probes read through here.  Tables added
+    after construction are not re-scanned — build a new Catalog instead.
+    """
     tables: Dict[str, Table]
 
     def __post_init__(self):
         self.stats = {k: TableStats.of(v) for k, v in self.tables.items()}
 
     def table(self, name: str) -> Table:
+        """Return the registered `Table`; raises ``KeyError`` if absent."""
         return self.tables[name]
 
 
 class CostModel:
+    """Estimates rows, per-predicate selectivity/cost, and total LLM spend.
+
+    Args:
+        catalog: table registry supplying row counts / NDV / lengths.
+        default_model: model priced for AI predicates that name none.
+        multimodal_model: model priced for FILE-typed (multimodal) args.
+        ai_selectivity_default: legacy override of
+            ``defaults.ai_selectivity`` (kept for callers that predate
+            `CostDefaults`).
+        defaults: the static fallback constants (`CostDefaults`).
+        stats: optional `StatsStore`; when set, observed selectivity and
+            cost-per-row take precedence over the static defaults as soon
+            as a fingerprint accumulates ``defaults.stats_min_rows``
+            evaluated rows (blended with the prior below that — see
+            `predicate_selectivity`).
+
+    All costs are in **credits**, cardinalities in **rows**, token
+    figures in **model-input tokens** (chars / 4).
+    """
+
     def __init__(self, catalog: Catalog, *, default_model: str = "oracle-70b",
                  multimodal_model: str = "qwen2-vl-7b",
-                 ai_selectivity_default: float = 0.5):
+                 ai_selectivity_default: Optional[float] = None,
+                 defaults: Optional[CostDefaults] = None,
+                 stats: Optional[StatsStore] = None):
         self.catalog = catalog
         self.default_model = default_model
         self.multimodal_model = multimodal_model
-        self.ai_sel = ai_selectivity_default
+        self.defaults = defaults or CostDefaults()
+        if ai_selectivity_default is not None:
+            self.defaults = dataclasses.replace(
+                self.defaults, ai_selectivity=ai_selectivity_default)
+        self.stats = stats
         # alias -> table stats resolved at plan time
         self._alias_stats: Dict[str, TableStats] = {}
 
     # ------------------------------------------------------------------
     def bind_alias(self, alias: str, table_name: str) -> None:
+        """Associate a query alias with a catalog table's statistics (done
+        automatically while walking Scans in `est_rows`)."""
         self._alias_stats[alias] = self.catalog.stats[table_name]
 
     def _col_stats(self, qualified: str):
@@ -72,50 +152,118 @@ class CostModel:
         return st, col
 
     def ndv(self, qualified: str) -> int:
+        """Number of distinct values of an (alias-qualified) column;
+        ``defaults.unknown_ndv`` when the column cannot be resolved."""
         st, col = self._col_stats(qualified)
-        return st.ndv.get(col, 100) if st else 100
+        return st.ndv.get(col, self.defaults.unknown_ndv) if st \
+            else self.defaults.unknown_ndv
 
     def avg_tokens(self, qualified: str) -> float:
+        """Average per-value token count of a column (chars / 4, floored
+        at ``defaults.min_tokens_per_value``)."""
         st, col = self._col_stats(qualified)
-        chars = st.avg_len.get(col, 64.0) if st else 64.0
-        return max(chars / 4.0, 2.0)
+        chars = st.avg_len.get(col, self.defaults.unknown_avg_chars) if st \
+            else self.defaults.unknown_avg_chars
+        return max(chars / 4.0, self.defaults.min_tokens_per_value)
+
+    # ------------------------------------------------------------------
+    # observed-stats plumbing
+    # ------------------------------------------------------------------
+
+    def observed(self, pred: E.Expr):
+        """The predicate's `PredObservation`, or None without a store."""
+        if self.stats is None:
+            return None
+        return self.stats.get(predicate_fingerprint(pred))
+
+    def _blend(self, observed: float, n_obs: float, prior: float) -> float:
+        """Bayes-style shrinkage: observed mean backed by ``n_obs`` rows
+        against a prior worth ``stats_prior_strength`` pseudo-rows."""
+        n0 = self.defaults.stats_prior_strength
+        return (observed * n_obs + prior * n0) / (n_obs + n0)
+
+    def estimate_source(self, pred: E.Expr) -> str:
+        """Provenance of this predicate's estimates: ``"observed"``
+        (store is confident), ``"blended"`` (some evidence, shrunk toward
+        the prior) or ``"default"`` (static fallback only)."""
+        if not isinstance(pred, (E.AIFilter, E.AIClassify)):
+            return "default"
+        obs = self.observed(pred)
+        if obs is None or not obs.evaluated:
+            return "default"
+        if obs.evaluated >= self.defaults.stats_min_rows:
+            return "observed"
+        return "blended"
 
     # ------------------------------------------------------------------
     # per-predicate estimates
     # ------------------------------------------------------------------
 
     def predicate_cost_per_row(self, pred: E.Expr) -> float:
-        """Credits per evaluated row."""
+        """Credits per evaluated row.
+
+        AI predicates: observed credits/row from the `StatsStore` when
+        available (prior-blended below ``stats_min_rows``), else the
+        static token estimate ``price(model) × (template + arg tokens)``.
+        Non-AI predicates: ``defaults.rel_pred_cost``.
+        """
+        if isinstance(pred, (E.AIFilter, E.AIClassify)):
+            static = self._static_ai_cost_per_row(pred)
+            obs = self.observed(pred)
+            if obs is not None and obs.evaluated:
+                if obs.evaluated >= self.defaults.stats_min_rows:
+                    return obs.cost_per_row
+                return self._blend(obs.cost_per_row, obs.evaluated, static)
+            return static
+        return self.defaults.rel_pred_cost
+
+    def _static_ai_cost_per_row(self, pred: E.Expr) -> float:
         if isinstance(pred, E.AIFilter):
             model = pred.model or (
-                self.multimodal_model if pred.multimodal else self.default_model)
+                self.multimodal_model if pred.multimodal
+                else self.default_model)
             toks = len(pred.prompt.template) / 4.0 + sum(
                 self.avg_tokens(r) for r in pred.refs())
             return CREDITS_PER_MTOK.get(model, 0.5) * toks / 1e6
-        if isinstance(pred, E.AIClassify):
-            model = pred.model or self.default_model
-            toks = sum(self.avg_tokens(r) for r in pred.refs()) + \
-                4.0 * max(len(pred.labels), 4)
-            return CREDITS_PER_MTOK.get(model, 0.5) * toks / 1e6
-        return REL_PRED_COST
+        model = pred.model or self.default_model
+        toks = sum(self.avg_tokens(r) for r in pred.refs()) + \
+            4.0 * max(len(pred.labels), 4)
+        return CREDITS_PER_MTOK.get(model, 0.5) * toks / 1e6
 
     def predicate_selectivity(self, pred: E.Expr) -> float:
+        """Expected pass fraction of the predicate, in [0, 1].
+
+        AI predicates consult the `StatsStore` first: with at least
+        ``defaults.stats_min_rows`` observed rows the observed pass rate
+        is returned as-is; with fewer it is shrunk toward the static
+        prior (``defaults.ai_selectivity``) by ``stats_prior_strength``
+        pseudo-rows; with none the prior is returned — so a cold-start
+        plan is exactly the static plan.  Relational predicates use the
+        classical NDV-based rules with `CostDefaults` fallbacks.
+        """
+        d = self.defaults
         if isinstance(pred, (E.AIFilter, E.AIClassify)):
-            return self.ai_sel                     # unknown at compile time
+            obs = self.observed(pred)
+            if obs is not None and obs.evaluated:
+                if obs.evaluated >= d.stats_min_rows:
+                    return obs.selectivity
+                return self._blend(obs.selectivity, obs.evaluated,
+                                   d.ai_selectivity)
+            return d.ai_selectivity
         if isinstance(pred, E.InList):
             if isinstance(pred.expr, E.Column):
                 nd = self.ndv(pred.expr.name)
                 return min(1.0, len(pred.values) / max(nd, 1))
-            return 0.5
+            return d.in_list_selectivity
         if isinstance(pred, E.Between):
-            return 0.25
+            return d.between_selectivity
         if isinstance(pred, E.BinOp):
             if pred.op == "=":
                 lc = pred.left if isinstance(pred.left, E.Column) else None
                 if lc is not None:
                     return 1.0 / max(self.ndv(lc.name), 1)
-                return 0.1
-            return 1.0 / 3.0
+                return d.eq_selectivity
+            return d.inequality_selectivity
         if isinstance(pred, E.Not):
             return 1.0 - self.predicate_selectivity(pred.arg)
         if isinstance(pred, E.BoolOp):
@@ -131,14 +279,38 @@ class CostModel:
                 out = 1.0 - inv
             return out
         if isinstance(pred, E.FuncCall):
-            return 0.5
-        return 0.5
+            return d.func_selectivity
+        return d.default_selectivity
+
+    def predicate_rank(self, pred: E.Expr) -> float:
+        """Hellerstein expensive-predicate rank: ``cost_per_row / (1 -
+        selectivity)`` in credits — evaluation order ascending by rank
+        minimises expected filter cost.  Uses observed stats when the
+        store has them (same precedence as the underlying estimates)."""
+        c = self.predicate_cost_per_row(pred)
+        s = self.predicate_selectivity(pred)
+        return c / max(1.0 - s, 1e-9)
+
+    def selectivity_interval(self, pred: E.Expr):
+        """``(lo, hi)`` Wilson confidence interval on an AI predicate's
+        selectivity from observed evidence; ``(0.0, 1.0)`` when the store
+        has nothing (maximum uncertainty — the cold-start case)."""
+        obs = self.observed(pred) if isinstance(
+            pred, (E.AIFilter, E.AIClassify)) else None
+        if obs is None or not obs.evaluated:
+            return 0.0, 1.0
+        return obs.selectivity_ci()
 
     # ------------------------------------------------------------------
     # plan-level cardinality & LLM-cost estimation
     # ------------------------------------------------------------------
 
     def est_rows(self, node: P.PlanNode) -> float:
+        """Expected output cardinality of a plan subtree, in rows.
+
+        Walking Scans binds aliases to table stats as a side effect, so
+        call this on the root before per-predicate estimates.
+        """
         if isinstance(node, P.Scan):
             self.bind_alias(node.alias, node.table)
             return float(self.catalog.stats[node.table].rows)
@@ -161,7 +333,7 @@ class CostModel:
             return out
         if isinstance(node, P.SemanticJoinClassify):
             l = self.est_rows(node.left)
-            return l * 1.5                        # avg labels per row
+            return l * self.defaults.labels_per_left_row
         if isinstance(node, (P.Project, P.Aggregate, P.Limit)):
             r = self.est_rows(node.children()[0])
             if isinstance(node, P.Aggregate) and node.group_by:
@@ -172,7 +344,8 @@ class CostModel:
         raise TypeError(node)
 
     def est_llm_cost(self, node: P.PlanNode) -> float:
-        """Total expected LLM credits of the plan (the §5.1 objective)."""
+        """Total expected LLM **credits** of the plan — the §5.1 objective
+        every optimizer rewrite minimises."""
         total = 0.0
         if isinstance(node, P.Filter):
             rows = self.est_rows(node.child)
@@ -190,9 +363,10 @@ class CostModel:
         if isinstance(node, P.SemanticJoinClassify):
             l = self.est_rows(node.left)
             r = self.est_rows(node.right)
-            import math
             calls_per_row = max(1.0, math.ceil(r / node.max_labels_per_call))
-            fake = E.AIClassify(node.prompt, labels=())
+            # the same surrogate the executor records observations under,
+            # so cross-query feedback reaches the rewrite decision
+            fake = E.AIClassify(node.prompt, labels=(), model=node.model)
             total += l * calls_per_row * self.predicate_cost_per_row(fake)
         for c in node.children():
             total += self.est_llm_cost(c)

@@ -14,6 +14,18 @@ Runtime behaviour mirrored from the paper:
     multi-label AI_CLASSIFY per left row (chunked over the label set)
     instead of |L|·|R| AI_FILTER calls.
 
+  * **pilot sampling + mid-query re-optimization** — before a Filter with
+    cold AI predicates runs in full, each such predicate is evaluated on a
+    small evenly-spaced row sample; observed selectivity / cost-per-row
+    land in the shared `StatsStore` and the remaining evaluation order is
+    re-ranked with real numbers (the paper's "cost and selectivity are
+    unknown during query compilation" closed as a feedback loop).  The
+    pilot's per-row results are carried into the full pass — pilot rows
+    are never re-submitted or re-billed — and predicates the store is
+    already confident about skip the pilot entirely (warm start).
+    Learned cascade delegation rates can also *bypass* a cascade whose
+    proxy has proven useless (delegation ≈ 1).
+
 Semantic-operator runtime: every AI call site assembles its requests
 through one typed builder, `SemanticOp`, and awaits `SemanticHandle`
 futures instead of blocking per-site client calls.  With a pipelined
@@ -45,6 +57,7 @@ from repro.core import plan as P
 from repro.core.aggregate import AggConfig, HierarchicalAggregator
 from repro.core.cascade import CascadeConfig, SupgItCascade
 from repro.core.cost import Catalog, CostModel
+from repro.core.stats import StatsStore, predicate_fingerprint
 from repro.inference.api import CortexClient
 from repro.inference.backend import CLASSIFY, COMPLETE, SCORE, Request
 from repro.inference.pipeline import ResultFuture
@@ -62,19 +75,42 @@ _MD_MAP = {"_truth": "truth", "_difficulty": "difficulty",
 
 
 def row_metadata(table: Table, rows: np.ndarray,
-                 label_args: Sequence[np.ndarray] = ()) -> List[Dict[str, Any]]:
+                 label_args: Sequence[np.ndarray] = (),
+                 arg_cols: Sequence[str] = ()) -> List[Dict[str, Any]]:
     """Simulator grounding: hidden columns -> per-row request metadata.
 
     ``label_args``: rendered per-row values of prompt args; when the row
     carries a ``_labels`` truth set, pairwise truth is derived as "any arg
     value is one of the true labels" (used by cross-join AI_FILTER so that
     baseline and rewrite share identical ground truth).
+
+    ``arg_cols``: unqualified column names the predicate references.
+    A hidden column ``_truth__<col>`` carries *column-scoped* ground
+    truth: it becomes the request's ``truth`` only for predicates that
+    reference ``<col>``, so two AI predicates over different columns of
+    one table can have independent (skewed) selectivities.  Scoped truth
+    wins over a table-wide ``_truth``.
     """
     hidden: Dict[str, np.ndarray] = {}
+    arg_set = {c.rsplit(".", 1)[-1] for c in arg_cols}
+    scoped_truth: List[np.ndarray] = []
     for c in table.column_names:
         leaf = c.rsplit(".", 1)[-1]
-        if leaf in _MD_MAP:
+        if leaf.startswith("_truth__"):
+            if leaf[len("_truth__"):] in arg_set:
+                scoped_truth.append(table.column(c)[rows])
+        elif leaf in _MD_MAP:
+            # last matching column wins (pre-existing contract for joined
+            # tables that carry several hidden columns of the same leaf)
             hidden[_MD_MAP[leaf]] = table.column(c)[rows]
+    if scoped_truth:
+        # scoped truth wins over table-wide _truth; a predicate that
+        # references several scoped-truth columns is true iff all are
+        # (deterministic regardless of column order)
+        agg = scoped_truth[0].astype(bool)
+        for t in scoped_truth[1:]:
+            agg = agg & t.astype(bool)
+        hidden["truth"] = agg
     n = len(rows)
     out: List[Dict[str, Any]] = []
     for i in range(n):
@@ -120,7 +156,7 @@ class SemanticOp:
                     model: str) -> "SemanticOp":
         prompts = pred.prompt.render(table, rows)
         args = [E.eval_expr(a, table, rows) for a in pred.prompt.args]
-        md = row_metadata(table, rows, args)
+        md = row_metadata(table, rows, args, arg_cols=sorted(pred.refs()))
         return cls(SCORE, list(prompts), md, model)
 
     @classmethod
@@ -178,6 +214,19 @@ class ExecConfig:
     cascade: CascadeConfig = dataclasses.field(default_factory=CascadeConfig)
     adaptive_reorder: bool = True
     chunk_rows: int = 256            # runtime-adaptation granularity
+    # -- pilot sampling (adaptive re-optimization) ----------------------
+    # rows per cold AI predicate scored up-front to learn selectivity /
+    # cost before committing to an evaluation order; 0 disables the pilot
+    pilot_rows: int = 48
+    # tables smaller than this skip the pilot (it cannot pay for itself)
+    min_rows_for_pilot: int = 192
+    # -- learned cascade bypass -----------------------------------------
+    # skip the SUPG-IT cascade (straight to the oracle) once the store has
+    # seen >= cascade_bypass_min_rows cascaded rows for a predicate with a
+    # delegation rate at or above this threshold: a proxy that escalates
+    # nearly everything only adds its own calls on top of the oracle's
+    cascade_bypass_delegation: float = 0.9
+    cascade_bypass_min_rows: int = 64
     agg: AggConfig = dataclasses.field(default_factory=AggConfig)
     proxy_model: Optional[str] = None    # default: client.proxy_model
     classify_multi_label: bool = True    # semantic-join rewrite labels
@@ -217,16 +266,25 @@ class PredicateStats:
 class Executor:
     def __init__(self, catalog: Catalog, client: CortexClient, *,
                  cfg: Optional[ExecConfig] = None,
-                 cost: Optional[CostModel] = None):
+                 cost: Optional[CostModel] = None,
+                 stats: Optional[StatsStore] = None):
         self.catalog = catalog
         self.client = client
         self.cfg = cfg or ExecConfig()
         self.cost = cost or CostModel(catalog)
+        # the learned-statistics feedback loop: every evaluation writes
+        # observations here; the (shared) cost model reads them back
+        self.stats = stats if stats is not None else StatsStore()
+        if self.cost.stats is None:
+            self.cost.stats = self.stats
         # telemetry of the last execute()
         self.pred_stats: Dict[str, PredicateStats] = {}
         self.cascades: Dict[str, SupgItCascade] = {}
         self.agg_telemetry = None
         self.reorder_events: List[str] = []
+        self.reoptimizations: List[str] = []
+        self.pilot_telemetry: Optional[Dict[str, Any]] = None
+        self._fp_by_key: Dict[str, str] = {}
 
     @property
     def pipelined(self) -> bool:
@@ -239,7 +297,23 @@ class Executor:
         self.pred_stats = {}
         self.cascades = {}
         self.reorder_events = []
-        return self._exec(node)
+        self.reoptimizations = []
+        self.pilot_telemetry = None
+        self._fp_by_key: Dict[str, str] = {}
+        out = self._exec(node)
+        self._fold_cascade_stats()
+        self.stats.note_query(set(self._fp_by_key.values()))
+        return out
+
+    def _fold_cascade_stats(self) -> None:
+        """Record per-predicate cascade routing volume into the store so
+        future queries can re-decide the proxy-vs-direct choice."""
+        for key, cascade in self.cascades.items():
+            fp = self._fp_by_key.get(key)
+            if fp is not None and cascade.stats.rows:
+                self.stats.observe_cascade(
+                    fp, rows=cascade.stats.rows,
+                    oracle_calls=cascade.stats.oracle_calls)
 
     def _exec(self, node: P.PlanNode) -> Table:
         if isinstance(node, _Materialized):
@@ -272,8 +346,10 @@ class Executor:
         return f"{type(pred).__name__}:{abs(hash(pred)) % 10 ** 8}"
 
     def _stats_for(self, pred: E.Expr) -> PredicateStats:
-        return self.pred_stats.setdefault(self._pred_key(pred),
-                                          PredicateStats())
+        key = self._pred_key(pred)
+        if key not in self._fp_by_key:
+            self._fp_by_key[key] = predicate_fingerprint(pred)
+        return self.pred_stats.setdefault(key, PredicateStats())
 
     def _filter_model(self, pred: E.AIFilter) -> str:
         return pred.model or (
@@ -290,25 +366,159 @@ class Executor:
         n = table.num_rows
         if not preds:
             return np.ones(n, dtype=bool)
+        preds, known = self._maybe_pilot(table, list(preds))
         if self.pipelined:
-            return self._eval_predicates_batched(table, preds)
-        return self._eval_predicates_chunked(table, preds)
+            return self._eval_predicates_batched(table, preds, known)
+        return self._eval_predicates_chunked(table, preds, known)
 
-    def _timed_pred(self, pred: E.Expr, table: Table, rows: np.ndarray
-                    ) -> np.ndarray:
-        """Evaluate one predicate over rows, folding cost into its stats."""
-        st = self._stats_for(pred)
+    # ------------------------------------------------------------------
+    # pilot sampling: learn cost/selectivity, then re-optimize mid-query
+    # ------------------------------------------------------------------
+
+    def _maybe_pilot(self, table: Table, preds: List[E.Expr]
+                     ) -> Tuple[List[E.Expr], Dict[str, Dict[int, bool]]]:
+        """Score cold AI predicates on a small row sample, fold the
+        observations into the `StatsStore`, and re-rank the conjunct
+        order with real numbers before the full evaluation commits.
+
+        Returns the (possibly re-ordered) predicate list plus the
+        pilot's per-row results (pred key -> {row: passed}), which the
+        full pass consumes via `_timed_pred` instead of re-evaluating —
+        so each pilot row is paid for exactly once, on eager and
+        pipelined clients alike.  Skipped when the table is small, the
+        pilot is disabled, there is nothing to re-order, or every AI
+        predicate is already confidently known (warm start: the store
+        answers from past queries).
+        """
+        cfg = self.cfg
+        n = table.num_rows
+        ai_preds = [p for p in preds if isinstance(p, E.AIFilter)]
+        if (not cfg.adaptive_reorder or cfg.pilot_rows <= 0
+                or n < cfg.min_rows_for_pilot or len(preds) < 2
+                or not ai_preds):
+            return preds, {}
+        min_rows = self.cost.defaults.stats_min_rows
+        cold = [p for p in ai_preds
+                if not self.stats.confident(
+                    predicate_fingerprint(p), min_rows=min_rows)]
         t0 = time.perf_counter()
-        c0 = self.client.ai_credits
-        res = self._eval_pred(pred, table, rows)
-        st.seconds += time.perf_counter() - t0
-        st.credits += self.client.ai_credits - c0
-        st.evaluated += len(rows)
-        st.passed += int(res.sum())
-        return res
+        sampled: Dict[str, Dict[str, float]] = {}
+        known: Dict[str, Dict[int, bool]] = {}
+        n_sampled = 0
+        if cold:
+            k = min(cfg.pilot_rows, n)
+            idx = np.unique(np.linspace(0, n - 1, k).astype(np.int64))
+            n_sampled = int(len(idx))
+            # submit every pilot batch before awaiting any, so the
+            # pipeline coalesces across predicates
+            c0 = self.client.ai_credits
+            handles = [(p, SemanticOp.from_filter(
+                p, table, idx, self._filter_model(p)).submit(self.client))
+                for p in cold]
+            per_pred = []
+            for pred, handle in handles:
+                results = handle.results()
+                passes = [r.score >= 0.5 for r in results]
+                # raw result credits apportion the dispatch-metered spend
+                # across predicates; dedup-served results cost nothing at
+                # dispatch, so the apportioned total matches real spend
+                per_pred.append((pred, passes,
+                                 float(sum(r.credits for r in results)),
+                                 float(sum(r.latency_s for r in results))))
+            spent = self.client.ai_credits - c0
+            raw_total = sum(raw for _, _, raw, _ in per_pred)
+            scale = spent / raw_total if raw_total > 0 else 0.0
+            for pred, passes, raw, seconds in per_pred:
+                passed = int(sum(passes))
+                credits = raw * scale
+                key = self._pred_key(pred)
+                known[key] = dict(zip(idx.tolist(), passes))
+                st = self._stats_for(pred)
+                st.evaluated += len(idx)
+                st.passed += passed
+                st.credits += credits
+                st.seconds += seconds
+                obs = self.stats.observe_predicate(
+                    self._fp_by_key[key],
+                    evaluated=len(idx), passed=passed,
+                    credits=credits, seconds=seconds)
+                lo, hi = obs.selectivity_ci()
+                sampled[key] = {
+                    "rows": int(len(idx)), "selectivity": obs.selectivity,
+                    "selectivity_ci": (round(lo, 4), round(hi, 4)),
+                    "cost_per_row": obs.cost_per_row}
+        # re-rank with the stats-informed cost model: observed numbers
+        # for piloted/warm AI predicates, static estimates elsewhere
+        ranked = sorted(preds, key=self.cost.predicate_rank)
+        reordered = ranked != preds
+        if reordered:
+            event = ("pilot reorder: "
+                     + " -> ".join(self._pred_key(p) for p in ranked))
+            self.reorder_events.append(event)
+            self.reoptimizations.append(event)
+        entry = {
+            "sampled_rows": n_sampled,
+            "cold_predicates": len(cold),
+            "warm_predicates": len(ai_preds) - len(cold),
+            "reordered": reordered,
+            "seconds": time.perf_counter() - t0,
+            "predicates": sampled,
+        }
+        if self.pilot_telemetry is None:
+            self.pilot_telemetry = entry
+        else:                      # several Filter nodes piloted: merge
+            agg = self.pilot_telemetry
+            for k in ("sampled_rows", "cold_predicates", "warm_predicates",
+                      "seconds"):
+                agg[k] += entry[k]
+            agg["reordered"] = agg["reordered"] or reordered
+            agg["predicates"].update(sampled)
+        return ranked, known
 
-    def _eval_predicates_chunked(self, table: Table, preds: List[E.Expr]
-                                 ) -> np.ndarray:
+    def _timed_pred(self, pred: E.Expr, table: Table, rows: np.ndarray,
+                    known: Optional[Dict[str, Dict[int, bool]]] = None
+                    ) -> np.ndarray:
+        """Evaluate one predicate over rows, folding cost into its stats
+        (per-query telemetry) and into the persistent `StatsStore` (the
+        cross-query learned-statistics feedback loop).
+
+        ``known`` carries per-row results the pilot phase already paid
+        for (pred key -> {row index: passed}); those rows are answered
+        from it — never re-submitted, never re-counted — so pilot rows
+        are billed and recorded exactly once even on an eager client.
+        """
+        st = self._stats_for(pred)
+        rows = np.asarray(rows)
+        km = (known or {}).get(self._pred_key(pred))
+        if km:
+            in_known = np.isin(rows, np.fromiter(km, dtype=np.int64))
+        else:
+            in_known = np.zeros(len(rows), dtype=bool)
+        out = np.zeros(len(rows), dtype=bool)
+        if km:
+            out[in_known] = [km[int(r)] for r in rows[in_known]]
+        unk = rows[~in_known]
+        if len(unk):
+            t0 = time.perf_counter()
+            c0 = self.client.ai_credits
+            res = np.asarray(self._eval_pred(pred, table, unk), dtype=bool)
+            seconds = time.perf_counter() - t0
+            credits = self.client.ai_credits - c0
+            st.seconds += seconds
+            st.credits += credits
+            st.evaluated += len(unk)
+            st.passed += int(res.sum())
+            if pred.is_ai():
+                self.stats.observe_predicate(
+                    self._fp_by_key[self._pred_key(pred)],
+                    evaluated=len(unk), passed=int(res.sum()),
+                    credits=credits, seconds=seconds)
+            out[~in_known] = res
+        return out
+
+    def _eval_predicates_chunked(self, table: Table, preds: List[E.Expr],
+                                 known: Optional[Dict[str, Dict[int, bool]]]
+                                 = None) -> np.ndarray:
         """Chunk-major evaluation with adaptive mid-stream reordering."""
         n = table.num_rows
         mask = np.ones(n, dtype=bool)
@@ -321,7 +531,7 @@ class Executor:
             for pred in order:
                 if len(alive) == 0:
                     break
-                res = self._timed_pred(pred, table, alive)
+                res = self._timed_pred(pred, table, alive, known)
                 alive = alive[res]
             sel = np.zeros(hi - lo, dtype=bool)
             sel[alive - lo] = True
@@ -336,8 +546,9 @@ class Executor:
                     order = ranked
         return mask
 
-    def _eval_predicates_batched(self, table: Table, preds: List[E.Expr]
-                                 ) -> np.ndarray:
+    def _eval_predicates_batched(self, table: Table, preds: List[E.Expr],
+                                 known: Optional[Dict[str, Dict[int, bool]]]
+                                 = None) -> np.ndarray:
         """Predicate-major evaluation for the pipelined runtime: each
         predicate scans all surviving rows in one coalesced pass (the
         pipeline right-sizes the engine batches), trading mid-stream
@@ -350,7 +561,7 @@ class Executor:
         for pred in order:
             if len(alive) == 0:
                 break
-            res = self._timed_pred(pred, table, alive)
+            res = self._timed_pred(pred, table, alive, known)
             alive = alive[res]
         mask = np.zeros(n, dtype=bool)
         mask[alive] = True
@@ -371,11 +582,31 @@ class Executor:
         return np.asarray(E.eval_expr(pred, table, rows), dtype=bool)
 
     # -- AI_FILTER with optional cascade --
+    def _cascade_bypass(self, pred: E.AIFilter) -> bool:
+        """Learned re-decision: skip the cascade for a predicate whose
+        observed delegation rate shows the proxy escalates (nearly)
+        everything — running it would only add proxy calls on top of the
+        oracle calls.  Requires enough evidence in the store."""
+        obs = self.stats.get(predicate_fingerprint(pred))
+        if obs is None or obs.cascade_rows < self.cfg.cascade_bypass_min_rows:
+            return False
+        return obs.delegation_rate >= self.cfg.cascade_bypass_delegation
+
     def _eval_ai_filter(self, pred: E.AIFilter, table: Table,
                         rows: np.ndarray) -> np.ndarray:
         model = self._filter_model(pred)
         op = SemanticOp.from_filter(pred, table, rows, model)
         if not self.cfg.use_cascade:
+            return op.submit(self.client).scores() >= 0.5
+        if self._cascade_bypass(pred):
+            key = self._pred_key(pred)
+            obs = self.stats.get(predicate_fingerprint(pred))
+            event = (f"cascade-bypass: {key} observed delegation "
+                     f"{obs.delegation_rate:.2f} >= "
+                     f"{self.cfg.cascade_bypass_delegation:.2f}, "
+                     "routing straight to the oracle")
+            if event not in self.reoptimizations:
+                self.reoptimizations.append(event)
             return op.submit(self.client).scores() >= 0.5
         proxy = self.cfg.proxy_model or self.client.proxy_model
         cascade = self.cascades.setdefault(
@@ -461,6 +692,8 @@ class Executor:
         model = node.model or self.client.default_model
         # submit every (pass × label-chunk) micro-batch before awaiting any:
         # the pipeline coalesces them into right-sized engine batches
+        c0 = self.client.ai_credits
+        s0 = self.client.ai_seconds
         handles: List[SemanticHandle] = []
         for pass_no in range(max(self.cfg.classify_passes, 1)):
             tag = "" if pass_no == 0 else (
@@ -474,9 +707,30 @@ class Executor:
                     self.cfg.classify_multi_label)
                 handles.append(op.submit(self.client))
         selected: List[set] = [set() for _ in range(left.num_rows)]
+        calls = passed = 0
         for handle in handles:
             for i, labs in enumerate(handle.chosen_labels()):
                 selected[i].update(labs)
+                calls += 1
+                passed += bool(labs)
+        # dispatch-metered deltas: dedup-served repeats cost (and record)
+        # nothing, matching the _timed_pred / StatsStore contract
+        credits = self.client.ai_credits - c0
+        seconds = self.client.ai_seconds - s0
+        if calls:
+            # recorded under the same surrogate AIClassify the cost model
+            # prices the rewrite with, so the next query's rewrite-vs-
+            # cross-join decision runs on observed per-call numbers
+            fake = E.AIClassify(node.prompt, labels=(), model=node.model)
+            self._stats_for(fake)          # registers key -> fingerprint
+            st = self.pred_stats[self._pred_key(fake)]
+            st.evaluated += calls
+            st.passed += passed
+            st.credits += credits
+            st.seconds += seconds
+            self.stats.observe_predicate(
+                self._fp_by_key[self._pred_key(fake)], evaluated=calls,
+                passed=passed, credits=credits, seconds=seconds)
         pairs_l: List[int] = []
         pairs_r: List[int] = []
         for i, labs in enumerate(selected):

@@ -29,7 +29,7 @@ from typing import List, Optional, Sequence, Set, Tuple
 
 from repro.core import expr as E
 from repro.core import plan as P
-from repro.core.cost import Catalog, CostModel
+from repro.core.cost import Catalog, CostDefaults, CostModel
 from repro.core.plan import refs_aliases
 
 MODES = ("ai_aware", "always_pushdown", "always_pullup", "none")
@@ -37,15 +37,48 @@ MODES = ("ai_aware", "always_pushdown", "always_pullup", "none")
 
 @dataclasses.dataclass
 class OptimizerConfig:
+    """Planner policy knobs.
+
+    Args:
+        mode: one of `MODES`.  ``"ai_aware"`` (default) enumerates AI
+            predicate placement by estimated LLM cost; ``"always_pushdown"``
+            / ``"always_pullup"`` force the classical extremes (the paper's
+            Fig. 7 baselines); ``"none"`` returns the plan untouched.
+        enable_reorder: sort Filter conjuncts by `Optimizer.rank`
+            (cheap/selective first; units: credits per surviving row).
+        enable_join_placement: allow AI conjuncts to move across joins.
+        enable_semantic_join_rewrite: allow the §5.3 join -> multi-label
+            AI_CLASSIFY rewrite (still subject to the oracle and, when
+            ``cost_gate_semantic_rewrite``, an estimated-cost comparison).
+        cost_gate_semantic_rewrite: only apply the §5.3 rewrite when the
+            rewritten plan's estimated LLM credits are lower than the
+            original's — with a warm `StatsStore` this re-decides the
+            rewrite from *observed* per-call costs instead of priors.
+        max_labels_per_call: AI_CLASSIFY context-window chunking — label
+            sets larger than this are split across calls (count of labels).
+        label_ndv_max: rewrite-oracle gate — a side whose join column has
+            more distinct values than this cannot be the label set.
+        label_avg_len_max: rewrite-oracle gate — average label length cap
+            in characters (labels are short phrases, not documents).
+        min_pairs_for_rewrite: joins with fewer |L|×|R| candidate pairs
+            than this are left alone (rewrite overhead won't pay off).
+        cost_defaults: every static fallback constant the `CostModel`
+            uses when neither catalog statistics nor the learned
+            `StatsStore` can answer (see `CostDefaults` for units).
+    """
     mode: str = "ai_aware"
     enable_reorder: bool = True
     enable_join_placement: bool = True
     enable_semantic_join_rewrite: bool = True
+    cost_gate_semantic_rewrite: bool = True
     max_labels_per_call: int = 250      # AI_CLASSIFY context-window chunking
     # rewrite-oracle gates
     label_ndv_max: int = 512            # label sets are small-cardinality
     label_avg_len_max: float = 120.0    # labels are short strings
     min_pairs_for_rewrite: int = 64     # tiny joins are left alone
+    # static fallback constants for the cost model (named, not inline)
+    cost_defaults: CostDefaults = dataclasses.field(
+        default_factory=CostDefaults)
 
 
 @dataclasses.dataclass
@@ -80,6 +113,22 @@ class RewriteOracle:
         self.llm_judge = llm_judge
 
     def decide(self, node: P.Join, pred: E.AIFilter) -> RewriteDecision:
+        """Judge whether ``pred`` over ``node`` is a classification join.
+
+        Args:
+            node: a non-equi `Join` whose residual is exactly ``pred``.
+            pred: the two-side `AIFilter` (its prompt must reference one
+                column from each join side).
+
+        Returns:
+            A `RewriteDecision`; ``applicable=True`` names the label side
+            (``"left"``/``"right"``), the label column (alias-qualified),
+            and a human-readable reason including the evidence score.
+            Scores accumulate from schema naming (+2), NDV-vs-rows (+1),
+            short labels (+1) and clean sample values (+1); below 2.0 the
+            rewrite is refused.  An optional ``llm_judge(template,
+            label_col, samples) -> bool`` hook can veto borderline wins.
+        """
         sides = self._split_prompt_args(node, pred)
         if sides is None:
             return RewriteDecision(False, reason="prompt does not reference "
@@ -174,17 +223,43 @@ def _walk(node: P.PlanNode):
 
 
 class Optimizer:
+    """AI-aware plan rewriter (paper §5.1 / §5.3).
+
+    Args:
+        catalog: the engine's `Catalog` (row counts, NDV, sample values).
+        cfg: policy knobs; defaults to `OptimizerConfig()` (ai_aware).
+        cost: a shared `CostModel`.  Pass the engine's instance so the
+            optimizer, executor and EXPLAIN output agree on estimates —
+            and so a `StatsStore` attached to it feeds re-optimization.
+            When omitted a fresh model is built from
+            ``cfg.cost_defaults`` (no learned stats).
+        llm_judge: optional rewrite-oracle veto hook, see
+            `RewriteOracle.decide`.
+
+    After each `optimize` call, ``self.trace`` holds one human-readable
+    line per rewrite decision (surfaced via ``EXPLAIN`` and
+    `QueryReport.optimizer_trace`).
+    """
+
     def __init__(self, catalog: Catalog, *,
                  cfg: Optional[OptimizerConfig] = None,
                  cost: Optional[CostModel] = None, llm_judge=None):
         self.cfg = cfg or OptimizerConfig()
         assert self.cfg.mode in MODES, self.cfg.mode
-        self.cost = cost or CostModel(catalog)
+        self.cost = cost or CostModel(catalog,
+                                      defaults=self.cfg.cost_defaults)
         self.oracle = RewriteOracle(self.cost, self.cfg, llm_judge)
         self.trace: List[str] = []
 
     # ------------------------------------------------------------------
     def optimize(self, root: P.PlanNode) -> P.PlanNode:
+        """Rewrite ``root`` to minimise estimated LLM credits.
+
+        Applies, in order: semantic-join rewrite (§5.3), filter pushdown,
+        AI-predicate placement across joins (§5.1), and conjunct
+        reordering.  Returns a new plan tree (nodes are immutable);
+        ``self.trace`` is reset and filled as a side effect.
+        """
         self.trace = []
         self.cost.est_rows(root)        # bind aliases for stats lookups
         if self.cfg.mode == "none":
@@ -249,10 +324,11 @@ class Optimizer:
     # ------------------------------------------------------------------
 
     def rank(self, pred: E.Expr) -> float:
-        """Hellerstein-style rank: cost per row / (1 - selectivity)."""
-        c = self.cost.predicate_cost_per_row(pred)
-        s = self.cost.predicate_selectivity(pred)
-        return c / max(1.0 - s, 1e-9)
+        """Hellerstein-style rank ``cost_per_row / (1 - selectivity)`` in
+        credits; filters evaluate ascending by rank.  Delegates to
+        `CostModel.predicate_rank`, so observed stats (when a `StatsStore`
+        is attached) take precedence over static defaults."""
+        return self.cost.predicate_rank(pred)
 
     def _reorder_filters(self, node: P.PlanNode) -> P.PlanNode:
         node = _map_children(node, self._reorder_filters)
@@ -347,11 +423,23 @@ class Optimizer:
         else:
             left, right = node.right, node.left
             l_col = self.oracle._split_prompt_args(node, pred)[1]
-        return P.SemanticJoinClassify(
+        rewritten = P.SemanticJoinClassify(
             left=left, right=right, prompt=pred.prompt,
             left_arg=E.Column(l_col), label_col=dec.label_col,
             model=pred.model,
             max_labels_per_call=self.cfg.max_labels_per_call)
+        if self.cfg.cost_gate_semantic_rewrite:
+            # re-decide with real numbers: with a warm StatsStore both
+            # sides of this comparison use observed per-call costs and
+            # selectivities, so a rewrite that lost last time is undone
+            c_orig = self.cost.est_llm_cost(node)
+            c_new = self.cost.est_llm_cost(rewritten)
+            self.trace.append(
+                f"rewrite-cost: classify {c_new:.6g} vs cross-join "
+                f"{c_orig:.6g} credits")
+            if c_new >= c_orig:
+                return node
+        return rewritten
 
 
 # ---------------------------------------------------------------------------

@@ -23,10 +23,17 @@ class PlanNode:
             out |= c.out_aliases()
         return out
 
-    def pretty(self, indent: int = 0) -> str:
+    def pretty(self, indent: int = 0, annotate=None) -> str:
+        """Indented tree rendering.  ``annotate(node) -> str`` (optional)
+        appends a per-node suffix — EXPLAIN ANALYZE uses it to attach
+        estimated-vs-actual rows/cost to each operator."""
         pad = "  " * indent
         line = pad + self._describe()
-        return "\n".join([line] + [c.pretty(indent + 1)
+        if annotate is not None:
+            suffix = annotate(self)
+            if suffix:
+                line += f"  {suffix}"
+        return "\n".join([line] + [c.pretty(indent + 1, annotate)
                                    for c in self.children()])
 
     def _describe(self) -> str:

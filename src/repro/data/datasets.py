@@ -205,6 +205,29 @@ def nyt_articles(n: int = 1000, *, seed: int = 0,
     }, name="ny_articles")
 
 
+def skewed_articles(n: int = 2000, *, seed: int = 0,
+                    sel_broad: float = 0.95, sel_narrow: float = 0.05
+                    ) -> Table:
+    """Adaptive-reoptimization workload: two equal-length text columns
+    whose AI predicates have wildly different true selectivities.
+
+    ``headline`` and ``summary`` have the same average length (so static
+    token-based cost estimates cannot tell the predicates apart), but the
+    column-scoped ground truth ``_truth__headline`` passes ``sel_broad``
+    of rows while ``_truth__summary`` passes ``sel_narrow`` — the
+    skewed-selectivity case where the static default (0.5 for every AI
+    predicate) is badly wrong in both directions."""
+    rng = _rng((seed, 909))
+    return Table({
+        "id": np.arange(n),
+        "headline": [f"[hl:{i}] " + _sentence(rng, 12) for i in range(n)],
+        "summary": [f"[sm:{i}] " + _sentence(rng, 12) for i in range(n)],
+        "_truth__headline": rng.random(n) < sel_broad,
+        "_truth__summary": rng.random(n) < sel_narrow,
+        "_difficulty": np.full(n, 0.05),
+    }, name="articles")
+
+
 def nyt_join_pair(n_left: int = 400, *, out_in_ratio: float = 1.0,
                   seed: int = 0, ai_selectivity: float = 0.3
                   ) -> Tuple[Table, Table]:

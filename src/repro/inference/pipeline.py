@@ -105,6 +105,9 @@ class PipelineStats:
     flushes_on_barrier: int = 0
     queue_wait_s: float = 0.0     # sum over dispatched reqs of queue time
     batch_size_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # submissions per request kind (score/classify/complete): lets the
+    # stats store / docs attribute dedup wins to operator families
+    kind_hist: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def dedup_hit_rate(self) -> float:
@@ -167,6 +170,8 @@ class RequestPipeline:
         touched: List[str] = []
         for r in requests:
             self.stats.submitted += 1
+            self.stats.kind_hist[r.kind] = \
+                self.stats.kind_hist.get(r.kind, 0) + 1
             key = request_fingerprint(r) if self.cfg.dedup else None
             if key is not None:
                 cached = self._cache.get(key)

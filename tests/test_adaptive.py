@@ -1,0 +1,334 @@
+"""Adaptive re-optimization: StatsStore, pilot sampling, learned CostModel."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AisqlEngine, Catalog, CostDefaults, CostModel,
+                        ExecConfig, Optimizer, OptimizerConfig, StatsStore,
+                        predicate_fingerprint)
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core import sqlparse
+from repro.core.stats import PredObservation, wilson_interval
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+
+
+def _ai(template="p {0}", col="t.text", model=None):
+    return E.AIFilter(E.Prompt(template, (E.Column(col),)), model=model)
+
+
+def _catalog(n=400, seed=0):
+    return Catalog({"articles": D.skewed_articles(n, seed=seed)})
+
+
+# ---------------------------------------------------------------------------
+# StatsStore: fingerprints, intervals, persistence
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_across_aliases():
+    """Equivalent predicates written against different aliases share one
+    fingerprint; different templates/models do not."""
+    a = _ai("is {0} happy?", "a.body")
+    b = _ai("is {0} happy?", "reviews.body")
+    assert predicate_fingerprint(a) == predicate_fingerprint(b)
+    assert predicate_fingerprint(a) != predicate_fingerprint(
+        _ai("is {0} sad?", "a.body"))
+    assert predicate_fingerprint(a) != predicate_fingerprint(
+        _ai("is {0} happy?", "a.body", model="proxy-8b"))
+    assert predicate_fingerprint(a) != predicate_fingerprint(
+        _ai("is {0} happy?", "a.title"))
+
+
+def test_statsstore_roundtrip(tmp_path):
+    path = str(tmp_path / "stats.json")
+    store = StatsStore(path)
+    key = predicate_fingerprint(_ai())
+    store.observe_predicate(key, evaluated=80, passed=20, credits=0.4,
+                            seconds=1.5, new_query=True)
+    store.observe_cascade(key, rows=80, oracle_calls=60)
+    store.observe_pipeline(submitted=100, dedup_hits=25)
+    store.save()
+
+    loaded = StatsStore(path)
+    obs = loaded.get(key)
+    assert obs is not None
+    assert obs.evaluated == 80 and obs.passed == 20
+    assert obs.selectivity == pytest.approx(0.25)
+    assert obs.cost_per_row == pytest.approx(0.4 / 80)
+    assert obs.delegation_rate == pytest.approx(0.75)
+    assert loaded.get("__pipeline__").dedup_hit_rate == pytest.approx(0.25)
+    # loading into a non-empty store merges counts instead of overwriting
+    loaded.load(path)
+    assert loaded.get(key).evaluated == 160
+
+
+def test_wilson_interval_brackets_rate():
+    lo, hi = wilson_interval(20, 80)
+    assert 0.0 < lo < 0.25 < hi < 1.0
+    assert wilson_interval(0, 0) == (0.0, 1.0)
+    lo_small, hi_small = wilson_interval(2, 8)
+    assert hi_small - lo_small > hi - lo      # less data, wider interval
+
+
+# ---------------------------------------------------------------------------
+# CostModel: observed stats before defaults; named fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_costmodel_consults_observed_stats():
+    cat = _catalog()
+    store = StatsStore()
+    pred = _ai("x {0}", "a.headline")
+    cost = CostModel(cat, stats=store)
+    static_sel = cost.predicate_selectivity(pred)
+    assert static_sel == cost.defaults.ai_selectivity
+    # enough evidence: observed values are used verbatim
+    store.observe_predicate(predicate_fingerprint(pred),
+                            evaluated=200, passed=10, credits=0.002)
+    assert cost.predicate_selectivity(pred) == pytest.approx(0.05)
+    assert cost.predicate_cost_per_row(pred) == pytest.approx(0.002 / 200)
+    assert cost.estimate_source(pred) == "observed"
+
+
+def test_costmodel_blends_small_samples_toward_prior():
+    cat = _catalog()
+    store = StatsStore()
+    pred = _ai("x {0}", "a.headline")
+    cost = CostModel(cat, stats=store)
+    store.observe_predicate(predicate_fingerprint(pred),
+                            evaluated=4, passed=0, credits=0.0)
+    sel = cost.predicate_selectivity(pred)
+    assert 0.0 < sel < cost.defaults.ai_selectivity   # shrunk, not 0
+    assert cost.estimate_source(pred) == "blended"
+
+
+def test_cost_defaults_are_configurable():
+    cat = _catalog()
+    d = CostDefaults(ai_selectivity=0.9, between_selectivity=0.5)
+    cost = CostModel(cat, defaults=d)
+    assert cost.predicate_selectivity(_ai()) == pytest.approx(0.9)
+    bet = E.Between(E.Column("a.id"), E.Literal(1), E.Literal(5))
+    assert cost.predicate_selectivity(bet) == pytest.approx(0.5)
+    # OptimizerConfig carries the defaults into a fresh cost model
+    opt = Optimizer(cat, cfg=OptimizerConfig(cost_defaults=d))
+    assert opt.cost.defaults.ai_selectivity == pytest.approx(0.9)
+
+
+def test_cold_start_plan_is_static_plan():
+    """With an empty store the optimizer must emit exactly the plan it
+    emitted before learned statistics existed."""
+    cat = _catalog()
+    sql = ("SELECT * FROM articles AS a WHERE "
+           "AI_FILTER(PROMPT('n? {0}', a.headline)) AND a.id < 100")
+    node = P.build_plan(sqlparse.parse(sql))
+    bare = Optimizer(cat, cost=CostModel(cat)).optimize(node)
+    cold = Optimizer(cat, cost=CostModel(cat, stats=StatsStore())
+                     ).optimize(node)
+    assert bare.pretty() == cold.pretty()
+    assert [type(p).__name__ for p in _first_filter(bare).predicates] == \
+        [type(p).__name__ for p in _first_filter(cold).predicates]
+
+
+def _first_filter(node):
+    if isinstance(node, P.Filter):
+        return node
+    for c in node.children():
+        f = _first_filter(c)
+        if f is not None:
+            return f
+    return None
+
+
+# ---------------------------------------------------------------------------
+# pilot sampling + mid-query re-ordering
+# ---------------------------------------------------------------------------
+
+# statically the short 'broad?' template ranks first; its true
+# selectivity (~0.95) makes that the worst order
+SKEWED_SQL = ("SELECT * FROM articles AS a WHERE "
+              "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+              "AI_FILTER(PROMPT('does this text concern database "
+              "research? {0}', a.summary))")
+
+
+def _run(store, *, pilot, n=400, pipelined=True):
+    cat = _catalog(n=n)
+    client = make_simulated_client(pipelined=pipelined)
+    eng = AisqlEngine(cat, client,
+                      executor=ExecConfig(adaptive_reorder=pilot,
+                                          pilot_rows=48 if pilot else 0,
+                                          min_rows_for_pilot=64),
+                      stats=store)
+    out = eng.sql(SKEWED_SQL)
+    return eng, out
+
+
+def test_pilot_reorders_when_stats_contradict_static():
+    static_eng, static_out = _run(StatsStore(), pilot=False)
+    adaptive_eng, adaptive_out = _run(StatsStore(), pilot=True)
+    rep = adaptive_eng.last_report
+    # the pilot fired, observed the skew, and flipped the order mid-query
+    assert rep.pilot is not None and rep.pilot["sampled_rows"] > 0
+    assert rep.pilot["reordered"]
+    assert any("pilot reorder" in ev for ev in rep.reoptimizations)
+    # same answer, fewer LLM calls than the static order
+    assert sorted(adaptive_out.column("a.id").tolist()) == \
+        sorted(static_out.column("a.id").tolist())
+    assert rep.ai_calls < static_eng.last_report.ai_calls
+
+
+def test_warm_store_skips_pilot_and_preorders():
+    store = StatsStore()
+    _run(store, pilot=True)                      # query 1 learns
+    eng, _ = _run(store, pilot=True)             # query 2 is warm
+    rep = eng.last_report
+    assert rep.pilot["cold_predicates"] == 0
+    assert rep.pilot["sampled_rows"] == 0
+    # compile-time order already correct: no mid-query flip needed
+    assert not rep.pilot["reordered"]
+    # and the narrow predicate is planned first in the optimized plan
+    filt = _first_filter(eng.plan(SKEWED_SQL))
+    assert "database" in filt.predicates[0].prompt.template
+
+
+def test_estimated_vs_actual_in_report():
+    store = StatsStore()
+    eng, _ = _run(store, pilot=True)
+    ops = eng.last_report.operators
+    assert ops and all(op.actual_selectivity is not None for op in ops)
+    # cold estimates use the default source; the warm run's are observed
+    assert {op.est_source for op in ops} == {"default"}
+    eng2, _ = _run(store, pilot=True)
+    ops2 = eng2.last_report.operators
+    assert {op.est_source for op in ops2} == {"observed"}
+    for op in ops2:
+        assert abs(op.est_selectivity - op.actual_selectivity) < 0.15
+    text = eng2.last_report.explain_analyze()
+    assert "estimated vs actual" in text and "observed" in text
+
+
+def test_pilot_disabled_matches_seed_behaviour():
+    """pilot_rows=0 must leave results and call counts untouched."""
+    outs = {}
+    for pilot in (False, True):
+        cat = _catalog(n=300)
+        client = make_simulated_client()
+        eng = AisqlEngine(cat, client,
+                          executor=ExecConfig(pilot_rows=48 if pilot else 0,
+                                              min_rows_for_pilot=64))
+        out = eng.sql(SKEWED_SQL)
+        outs[pilot] = (sorted(out.column("a.id").tolist()),
+                       eng.last_report.ai_calls)
+    assert outs[False][0] == outs[True][0]
+    assert outs[True][1] != outs[False][1]   # pilot changed the schedule
+
+
+def test_cascade_bypass_after_high_delegation():
+    cat = _catalog(n=300)
+    store = StatsStore()
+    pred = E.AIFilter(E.Prompt("broad? {0}", (E.Column("a.headline"),)))
+    # fake history: the proxy escalated 95% of 200 cascaded rows
+    store.observe_cascade(predicate_fingerprint(pred),
+                          rows=200, oracle_calls=190)
+    client = make_simulated_client()
+    eng = AisqlEngine(cat, client,
+                      executor=ExecConfig(use_cascade=True, pilot_rows=0),
+                      stats=store)
+    eng.sql("SELECT * FROM articles AS a WHERE "
+            "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND a.id < 250")
+    assert any("cascade-bypass" in ev
+               for ev in eng.last_report.reoptimizations)
+    # bypass means no proxy model calls for this predicate
+    assert client.calls_by_model.get(client.proxy_model, 0) == 0
+
+
+def test_engine_stats_path_persists(tmp_path):
+    path = str(tmp_path / "learned.json")
+    cat = _catalog(n=300)
+    eng = AisqlEngine(cat, make_simulated_client(pipelined=True),
+                      executor=ExecConfig(min_rows_for_pilot=64),
+                      stats_path=path)
+    eng.sql(SKEWED_SQL)
+    # a fresh engine over the persisted file starts warm
+    eng2 = AisqlEngine(cat, make_simulated_client(pipelined=True),
+                       executor=ExecConfig(min_rows_for_pilot=64),
+                       stats_path=path)
+    eng2.sql(SKEWED_SQL)
+    assert eng2.last_report.pilot["cold_predicates"] == 0
+
+
+def test_semantic_join_records_observed_cost():
+    left, right, _ = D.join_tables("AGNEWS_100")
+    cat = Catalog({"l": left, "r": right})
+    store = StatsStore()
+    eng = AisqlEngine(cat, make_simulated_client(), stats=store)
+    eng.sql("SELECT * FROM l JOIN r ON "
+            "AI_FILTER(PROMPT('{0} is about {1}', l.content, r.label))")
+    classify_keys = [k for k in store.keys() if k.startswith("AI_CLASSIFY")]
+    assert classify_keys, f"no classify observation in {list(store.keys())}"
+    obs = store.get(classify_keys[0])
+    assert obs.evaluated > 0 and obs.credits > 0
+
+
+def test_pilot_rows_not_double_counted():
+    """Pilot results are carried into the full pass: the first predicate
+    evaluates exactly num_rows rows in total (never rows + pilot), on
+    eager and pipelined clients alike."""
+    n = 400
+    for pipelined in (False, True):
+        store = StatsStore()
+        eng, _ = _run(store, pilot=True, n=n, pipelined=pipelined)
+        evaluated = [op.actual_rows_in for op in eng.last_report.operators]
+        # the predicate evaluated first at runtime sees every row exactly
+        # once; no predicate ever sees more than the table has
+        assert max(evaluated) == n, (pipelined, evaluated)
+        assert all(e <= n for e in evaluated), (pipelined, evaluated)
+        obs = [store.get(k) for k in store.keys()
+               if k.startswith("AI_FILTER")]
+        assert max(o.evaluated for o in obs) == n
+        assert all(o.evaluated <= n for o in obs)
+
+
+def test_store_counts_contributing_queries():
+    store = StatsStore()
+    _run(store, pilot=True)
+    _run(store, pilot=True)
+    key = next(k for k in store.keys() if k.startswith("AI_FILTER"))
+    assert store.get(key).queries == 2
+
+
+def test_scoped_truth_for_multi_column_predicate_is_conjunction():
+    from repro.core.executor import row_metadata
+    t = D.skewed_articles(50)
+    rows = np.arange(50)
+    md = row_metadata(t, rows, arg_cols=["headline", "summary"])
+    want = (t.column("_truth__headline").astype(bool)
+            & t.column("_truth__summary").astype(bool))
+    got = np.asarray([m["truth"] for m in md])
+    assert (got == want).all()
+
+
+def test_operator_report_carries_confidence_interval():
+    store = StatsStore()
+    eng, _ = _run(store, pilot=True)
+    cold_ops = eng.last_report.operators
+    assert all(op.est_selectivity_ci == (0.0, 1.0) for op in cold_ops)
+    eng2, _ = _run(store, pilot=True)
+    for op in eng2.last_report.operators:
+        lo, hi = op.est_selectivity_ci
+        assert 0.0 <= lo <= op.est_selectivity <= hi <= 1.0
+        assert (lo, hi) != (0.0, 1.0)
+
+
+def test_operator_report_fields_match_dataclass():
+    """Guard for the docs: the estimated-vs-actual section promises these
+    exact fields."""
+    from repro.core import OperatorReport
+    names = {f.name for f in dataclasses.fields(OperatorReport)}
+    assert names == {"operator", "est_rows_in", "est_selectivity",
+                     "est_selectivity_ci", "est_cost_per_row", "est_source",
+                     "actual_rows_in", "actual_selectivity",
+                     "actual_cost_per_row", "actual_credits"}

@@ -1,0 +1,95 @@
+"""Docs stay honest: files exist, links resolve, documented fields exist."""
+import dataclasses
+import os
+import re
+import subprocess
+import sys
+
+from repro.core import OperatorReport, QueryReport
+from repro.inference.pipeline import PipelineStats
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(REPO, "docs")
+
+
+def _read(name):
+    with open(os.path.join(REPO, name)) as f:
+        return f.read()
+
+
+def test_docs_exist_and_linked_from_readme():
+    assert os.path.exists(os.path.join(DOCS, "architecture.md"))
+    assert os.path.exists(os.path.join(DOCS, "query-reference.md"))
+    readme = _read("README.md")
+    assert "docs/architecture.md" in readme
+    assert "docs/query-reference.md" in readme
+
+
+def test_docs_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs_links.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def _table_fields(text, heading):
+    """First-column backticked names of the markdown table under a
+    heading."""
+    section = text.split(heading, 1)[1]
+    fields = []
+    for line in section.splitlines():
+        m = re.match(r"\|\s*`([A-Za-z_][A-Za-z0-9_]*)`\s*\|", line)
+        if m:
+            fields.append(m.group(1))
+        elif fields and not line.startswith("|"):
+            break
+    return fields
+
+
+def test_every_documented_queryreport_field_exists():
+    text = _read("docs/query-reference.md")
+    documented = _table_fields(text, "## QueryReport")
+    actual = {f.name for f in dataclasses.fields(QueryReport)}
+    assert documented, "QueryReport table not found in query-reference.md"
+    missing = set(documented) - actual
+    assert not missing, f"documented but not in code: {missing}"
+    undocumented = actual - set(documented)
+    assert not undocumented, f"in code but not documented: {undocumented}"
+
+
+def test_every_documented_operatorreport_field_exists():
+    text = _read("docs/query-reference.md")
+    documented = _table_fields(text, "estimated vs actual")
+    actual = {f.name for f in dataclasses.fields(OperatorReport)}
+    assert set(documented) == actual, (set(documented), actual)
+
+
+def test_documented_pipeline_keys_exist():
+    text = _read("docs/query-reference.md")
+    documented = _table_fields(text, "### `QueryReport.pipeline`")
+    stat_fields = {f.name for f in dataclasses.fields(PipelineStats)}
+    # delta() adds the derived dedup_hit_rate key
+    valid = stat_fields | {"dedup_hit_rate"}
+    unknown = set(documented) - valid
+    assert documented and not unknown, (documented, unknown)
+    assert valid - set(documented) == set(), \
+        f"pipeline keys missing from docs: {valid - set(documented)}"
+
+
+def test_documented_pilot_keys_match_runtime():
+    from repro.core import AisqlEngine, Catalog, ExecConfig
+    from repro.data import datasets as D
+    from repro.inference.api import make_simulated_client
+
+    text = _read("docs/query-reference.md")
+    documented = _table_fields(text, "### `QueryReport.pilot`")
+    cat = Catalog({"articles": D.skewed_articles(240)})
+    eng = AisqlEngine(cat, make_simulated_client(),
+                      executor=ExecConfig(min_rows_for_pilot=64))
+    eng.sql("SELECT * FROM articles AS a WHERE "
+            "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+            "AI_FILTER(PROMPT('narrow topic? {0}', a.summary))")
+    pilot = eng.last_report.pilot
+    assert pilot is not None
+    assert set(documented) == set(pilot.keys()), (documented,
+                                                  sorted(pilot.keys()))

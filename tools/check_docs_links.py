@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Docs link checker: relative markdown links must resolve.
+
+Scans README.md and docs/*.md for ``[text](target)`` links and verifies
+that every relative target (optionally with a ``#anchor``) exists on
+disk.  External (``http(s)://``) and pure-anchor links are skipped.
+Also verifies that file paths mentioned in backticks under docs/ exist
+when they look like repo paths (``src/…``, ``benchmarks/…``, …).
+
+Exit code 0 when everything resolves; 1 otherwise (one line per broken
+link).  Run from anywhere:
+
+    python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_RE = re.compile(r"`((?:src|benchmarks|tests|docs|tools|examples|"
+                     r"results)/[A-Za-z0-9_./-]+)`")
+
+
+def doc_files():
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return out
+
+
+def check_file(path: str) -> list:
+    errors = []
+    base = os.path.dirname(path)
+    rel = os.path.relpath(path, REPO)
+    with open(path) as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        target_path = target.split("#", 1)[0]
+        if not target_path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, target_path))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: broken link -> {target}")
+    for target in PATH_RE.findall(text):
+        resolved = os.path.join(REPO, target.rstrip("/"))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: missing path reference -> `{target}`")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in doc_files():
+        errors += check_file(path)
+    for e in errors:
+        print(e)
+    if not errors:
+        print(f"docs links OK ({len(doc_files())} files checked)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
