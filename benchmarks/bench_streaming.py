@@ -1,0 +1,117 @@
+"""Partitioned streaming execution vs materialize-then-truncate.
+
+Workload 1 — **LIMIT-bounded AI_FILTER** (the paper's "stop buying
+inference you don't need" case): ``SELECT * … WHERE AI_FILTER(…) LIMIT
+k`` over 2000 articles.  The baseline executor materializes the full
+filter before `Limit` truncates, paying one oracle call per table row;
+the partition-pull loop drains ``partition_rows`` morsels until k
+surviving rows exist and cancels the unsubmitted partitions.  Identical
+result rows are asserted; the acceptance bar is **≥2× fewer LLM calls
+and credits**.
+
+Workload 2 — **semantic top-k** (ORDER BY AI_SCORE … DESC LIMIT k): the
+unfused plan scores every row with the ordering model and truncates;
+the fused `TopK` prefilters with the cheap proxy and escalates only
+``topk_candidate_factor × k`` candidates to the oracle.
+
+Artifacts -> results/bench_streaming.json.
+"""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, model_clock, save_result
+from repro.core import AisqlEngine, Catalog, ExecConfig, OptimizerConfig
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+
+LIMIT_SQL = ("SELECT * FROM ny_articles AS a WHERE "
+             "AI_FILTER(PROMPT('is this article newsworthy? {0}', a.body)) "
+             "LIMIT 10")
+TOPK_SQL = ("SELECT a.id FROM ny_articles AS a ORDER BY "
+            "AI_SCORE(PROMPT('how newsworthy is this article? {0}', a.body)) "
+            "DESC LIMIT 10")
+
+
+def _run(cat, sql, *, pipelined=False, partitioned=False,
+         lookahead=1, topk_fusion=True):
+    client = make_simulated_client(pipelined=pipelined)
+    eng = AisqlEngine(
+        cat, client,
+        optimizer=OptimizerConfig(enable_topk_fusion=topk_fusion),
+        executor=ExecConfig(partitioned=partitioned, partition_rows=128,
+                            partition_lookahead=lookahead))
+    out = eng.sql(sql)
+    rep = eng.last_report
+    p = rep.partitions or {}
+    return out, {
+        "rows_out": out.num_rows,
+        "llm_calls": rep.ai_calls,
+        "credits": round(rep.ai_credits, 5),
+        "model_clock_s": round(model_clock(client), 3),
+        "partitions": (f"{p.get('partitions_executed', '-')}/"
+                       f"{p.get('partitions_total', '-')}"
+                       if p else "-"),
+        "cancelled_reqs": p.get("cancelled_requests", 0),
+    }
+
+
+def run(n: int = 2000, seed: int = 0):
+    cat = Catalog({"ny_articles": D.nyt_articles(n, seed=seed,
+                                                 ai_selectivity=0.30)})
+
+    # -- workload 1: LIMIT-bounded AI_FILTER ---------------------------
+    base_out, base = _run(cat, LIMIT_SQL)
+    stream_out, stream = _run(cat, LIMIT_SQL, partitioned=True)
+    pipe_out, pipe = _run(cat, LIMIT_SQL, pipelined=True,
+                          partitioned=True, lookahead=2)
+    assert base_out.column("a.id").tolist() == \
+        stream_out.column("a.id").tolist(), "streaming changed the rows"
+    assert base_out.column("a.id").tolist() == \
+        pipe_out.column("a.id").tolist(), "pipelined streaming changed rows"
+    call_speedup = base["llm_calls"] / max(stream["llm_calls"], 1)
+    credit_speedup = base["credits"] / max(stream["credits"], 1e-12)
+    assert call_speedup >= 2.0, \
+        f"expected >=2x fewer LLM calls, got {call_speedup:.2f}x"
+    assert credit_speedup >= 2.0, \
+        f"expected >=2x fewer credits, got {credit_speedup:.2f}x"
+
+    rows = []
+    for name, r in (("materialize+truncate", base),
+                    ("partitioned", stream),
+                    ("partitioned+pipelined", pipe)):
+        rows.append({"config": name, **r})
+    print(f"\nLIMIT-bounded AI_FILTER over {n} rows (identical rows out):")
+    print(fmt_table(rows, ["config", "rows_out", "llm_calls", "credits",
+                           "model_clock_s", "partitions", "cancelled_reqs"]))
+    print(f"-> {call_speedup:.1f}x fewer LLM calls, "
+          f"{credit_speedup:.1f}x fewer credits")
+
+    # -- workload 2: semantic top-k ------------------------------------
+    _, full = _run(cat, TOPK_SQL, topk_fusion=False)
+    _, fused = _run(cat, TOPK_SQL, topk_fusion=True)
+    topk_rows = [{"config": "full-sort+truncate", **full},
+                 {"config": "TopK proxy-prefilter", **fused}]
+    print(f"\nsemantic ORDER BY ... LIMIT 10 over {n} rows:")
+    print(fmt_table(topk_rows, ["config", "rows_out", "llm_calls",
+                                "credits", "model_clock_s"]))
+    topk_credit_speedup = full["credits"] / max(fused["credits"], 1e-12)
+    print(f"-> {topk_credit_speedup:.1f}x fewer credits for top-k")
+
+    payload = {
+        "n": n,
+        "limit_workload": {"baseline": base, "partitioned": stream,
+                           "partitioned_pipelined": pipe,
+                           "call_speedup": round(call_speedup, 2),
+                           "credit_speedup": round(credit_speedup, 2)},
+        "topk_workload": {"full_sort": full, "fused_topk": fused,
+                          "credit_speedup": round(topk_credit_speedup, 2)},
+    }
+    save_result("bench_streaming", payload)
+    return payload
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

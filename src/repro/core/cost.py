@@ -58,6 +58,9 @@ class CostDefaults:
     func_selectivity: float = 0.5      # scalar builtins (FL_IS_IMAGE, ...)
     default_selectivity: float = 0.5   # anything else
     labels_per_left_row: float = 1.5   # SemanticJoinClassify fan-out
+    # top-k prefilter: candidates escalated to the ordering model are
+    # ``ceil(topk_candidate_factor * k)`` of the proxy's best rows
+    topk_candidate_factor: float = 3.0
     # -- learned-stats trust policy -----------------------------------
     stats_min_rows: int = 24           # below this, observations are ignored
     stats_prior_strength: float = 16.0  # pseudo-rows backing the static prior
@@ -120,12 +123,17 @@ class CostModel:
 
     def __init__(self, catalog: Catalog, *, default_model: str = "oracle-70b",
                  multimodal_model: str = "qwen2-vl-7b",
+                 proxy_model: str = "proxy-8b",
                  ai_selectivity_default: Optional[float] = None,
                  defaults: Optional[CostDefaults] = None,
                  stats: Optional[StatsStore] = None):
         self.catalog = catalog
         self.default_model = default_model
         self.multimodal_model = multimodal_model
+        self.proxy_model = proxy_model
+        # mirrors ExecConfig.topk_prefilter (the engine syncs it) so
+        # TopK estimates price the path the executor will actually take
+        self.topk_prefilter = True
         self.defaults = defaults or CostDefaults()
         if ai_selectivity_default is not None:
             self.defaults = dataclasses.replace(
@@ -186,7 +194,7 @@ class CostModel:
         """Provenance of this predicate's estimates: ``"observed"``
         (store is confident), ``"blended"`` (some evidence, shrunk toward
         the prior) or ``"default"`` (static fallback only)."""
-        if not isinstance(pred, (E.AIFilter, E.AIClassify)):
+        if not isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify)):
             return "default"
         obs = self.observed(pred)
         if obs is None or not obs.evaluated:
@@ -207,7 +215,7 @@ class CostModel:
         static token estimate ``price(model) × (template + arg tokens)``.
         Non-AI predicates: ``defaults.rel_pred_cost``.
         """
-        if isinstance(pred, (E.AIFilter, E.AIClassify)):
+        if isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify)):
             static = self._static_ai_cost_per_row(pred)
             obs = self.observed(pred)
             if obs is not None and obs.evaluated:
@@ -218,9 +226,10 @@ class CostModel:
         return self.defaults.rel_pred_cost
 
     def _static_ai_cost_per_row(self, pred: E.Expr) -> float:
-        if isinstance(pred, E.AIFilter):
+        if isinstance(pred, (E.AIFilter, E.AIScore)):
             model = pred.model or (
-                self.multimodal_model if pred.multimodal
+                self.multimodal_model
+                if isinstance(pred, E.AIFilter) and pred.multimodal
                 else self.default_model)
             toks = len(pred.prompt.template) / 4.0 + sum(
                 self.avg_tokens(r) for r in pred.refs())
@@ -242,6 +251,8 @@ class CostModel:
         classical NDV-based rules with `CostDefaults` fallbacks.
         """
         d = self.defaults
+        if isinstance(pred, E.AIScore):
+            return 1.0                 # ORDER BY keys never filter rows
         if isinstance(pred, (E.AIFilter, E.AIClassify)):
             obs = self.observed(pred)
             if obs is not None and obs.evaluated:
@@ -334,7 +345,9 @@ class CostModel:
         if isinstance(node, P.SemanticJoinClassify):
             l = self.est_rows(node.left)
             return l * self.defaults.labels_per_left_row
-        if isinstance(node, (P.Project, P.Aggregate, P.Limit)):
+        if isinstance(node, P.TopK):
+            return min(self.est_rows(node.child), float(node.n))
+        if isinstance(node, (P.Project, P.Aggregate, P.Limit, P.Sort)):
             r = self.est_rows(node.children()[0])
             if isinstance(node, P.Aggregate) and node.group_by:
                 return min(r, self.ndv(node.group_by[0]))
@@ -368,6 +381,58 @@ class CostModel:
             # so cross-query feedback reaches the rewrite decision
             fake = E.AIClassify(node.prompt, labels=(), model=node.model)
             total += l * calls_per_row * self.predicate_cost_per_row(fake)
+        if isinstance(node, P.Sort):
+            rows = self.est_rows(node.child)
+            for sk in node.keys:
+                if isinstance(sk.expr, E.AIScore):
+                    total += rows * self.predicate_cost_per_row(
+                        self.resolved_score(sk.expr))
+        if isinstance(node, P.TopK):
+            rows = self.est_rows(node.child)
+            cand = self.topk_candidates(rows, node.n)
+            prefilter = self.topk_prefilter_applies(node, rows)
+            for i, sk in enumerate(node.keys):
+                if not isinstance(sk.expr, E.AIScore):
+                    continue
+                if prefilter and i == 0:
+                    # proxy scores the full input; only the candidates
+                    # are escalated to the ordering model
+                    total += rows * self.predicate_cost_per_row(
+                        self.resolved_score(sk.expr, self.proxy_model))
+                    total += cand * self.predicate_cost_per_row(
+                        self.resolved_score(sk.expr))
+                else:
+                    scored = cand if prefilter else rows
+                    total += scored * self.predicate_cost_per_row(
+                        self.resolved_score(sk.expr))
         for c in node.children():
             total += self.est_llm_cost(c)
         return total
+
+    # ------------------------------------------------------------------
+    # semantic ORDER BY helpers
+    # ------------------------------------------------------------------
+
+    def resolved_score(self, pred: E.AIScore,
+                       model: Optional[str] = None) -> E.AIScore:
+        """The surrogate the executor records observations under: an
+        `E.AIScore` with its model made explicit (the fingerprint keeps
+        proxy-prefilter and oracle scores as distinct populations)."""
+        return E.AIScore(pred.prompt,
+                         model=model or pred.model or self.default_model)
+
+    def topk_candidates(self, rows: float, n: int) -> float:
+        """Rows escalated to the ordering model by the top-k prefilter."""
+        return min(rows, float(max(
+            n, math.ceil(self.defaults.topk_candidate_factor * n))))
+
+    def topk_prefilter_applies(self, node: P.TopK, rows: float) -> bool:
+        """Whether the executor's proxy prefilter would run for this
+        TopK: enabled, AI-scored primary key, a proxy distinct from the
+        ordering model, and fewer candidates than input rows."""
+        if not (self.topk_prefilter and node.keys
+                and isinstance(node.keys[0].expr, E.AIScore)):
+            return False
+        oracle = node.keys[0].expr.model or self.default_model
+        return (oracle != self.proxy_model
+                and self.topk_candidates(rows, node.n) < rows)

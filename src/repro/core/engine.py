@@ -78,6 +78,10 @@ class QueryReport:
     # reordered flag, per-predicate observed selectivity (+ Wilson CI)
     # and cost_per_row; None when no Filter was piloted
     pilot: Optional[Dict[str, Any]] = None
+    # partition-pull telemetry (partitioned mode only): partitions
+    # total/executed/cancelled, rows scanned/emitted, early_terminated,
+    # cancelled (never-dispatched) request count; None otherwise
+    partitions: Optional[Dict[str, Any]] = None
 
     def explain_analyze(self) -> str:
         """EXPLAIN ANALYZE-style rendering: the optimized plan followed
@@ -112,6 +116,17 @@ class QueryReport:
                 f"{self.pilot['cold_predicates']} cold / "
                 f"{self.pilot['warm_predicates']} warm predicate(s), "
                 f"reordered={self.pilot['reordered']}")
+        if self.partitions:
+            p = self.partitions
+            suffix = " (early termination)" if p["early_terminated"] else ""
+            lines.append(
+                f"-- partitions: {p['partitions_executed']}/"
+                f"{p['partitions_total']} executed, "
+                f"{p['partitions_cancelled']} cancelled, "
+                f"{p['rows_scanned']} rows scanned -> "
+                f"{p['rows_emitted']} emitted, "
+                f"{p['cancelled_requests']} queued request(s) "
+                f"withdrawn{suffix}")
         return "\n".join(lines)
 
 
@@ -145,12 +160,15 @@ class AisqlEngine:
         self.stats_path = stats_path if stats is None else None
         self.stats = stats if stats is not None else StatsStore(stats_path)
         self.cost = CostModel(catalog, default_model=client.default_model,
+                              proxy_model=client.proxy_model,
                               defaults=opt_cfg.cost_defaults,
                               stats=self.stats)
         self.opt = Optimizer(catalog, cfg=opt_cfg, cost=self.cost,
                              llm_judge=llm_judge)
         self.exec = Executor(catalog, client, cfg=executor, cost=self.cost,
                              stats=self.stats)
+        # keep the planner's TopK pricing on the path the runtime takes
+        self.cost.topk_prefilter = self.exec.cfg.topk_prefilter
         self.last_report: Optional[QueryReport] = None
 
     # ------------------------------------------------------------------
@@ -202,6 +220,31 @@ class AisqlEngine:
                 calls = l * max(1.0, math.ceil(r / n.max_labels_per_call))
                 fake = E.AIClassify(n.prompt, labels=(), model=n.model)
                 out.append(self._op_estimate(fake, calls))
+            elif isinstance(n, (P.Sort, P.TopK)):
+                rows = self.cost.est_rows(n.child)
+                cand = (self.cost.topk_candidates(rows, n.n)
+                        if isinstance(n, P.TopK) else rows)
+                prefilters = (isinstance(n, P.TopK)
+                              and self.cost.topk_prefilter_applies(n, rows))
+                for i, sk in enumerate(n.keys):
+                    if not isinstance(sk.expr, E.AIScore):
+                        continue
+                    prefilter = prefilters and i == 0
+                    if prefilter:
+                        # proxy scores the full input, the ordering
+                        # model only the escalated candidates
+                        out.append(self._op_estimate(
+                            self.cost.resolved_score(
+                                sk.expr, self.cost.proxy_model), rows))
+                        out.append(self._op_estimate(
+                            self.cost.resolved_score(sk.expr), cand))
+                    else:
+                        # without the prefilter every key scores the
+                        # full input; with it, secondary keys score
+                        # only the escalated candidates
+                        out.append(self._op_estimate(
+                            self.cost.resolved_score(sk.expr),
+                            cand if prefilters else rows))
         visit(node)
         return out
 
@@ -251,7 +294,8 @@ class AisqlEngine:
             ai_seconds=delta["ai_seconds"], rows_out=out.num_rows,
             pipeline=pipe, operators=operators,
             reoptimizations=list(self.exec.reoptimizations),
-            pilot=self.exec.pilot_telemetry)
+            pilot=self.exec.pilot_telemetry,
+            partitions=self.exec.partition_telemetry)
         if self.stats_path is not None:
             self.stats.save(self.stats_path)
         return out

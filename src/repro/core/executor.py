@@ -14,6 +14,26 @@ Runtime behaviour mirrored from the paper:
     multi-label AI_CLASSIFY per left row (chunked over the label set)
     instead of |L|·|R| AI_FILTER calls.
 
+  * **partitioned streaming execution** — with ``ExecConfig.partitioned``
+    the driver loop switches from tree-recursive materialization to a
+    partition-pull model: the source splits into morsels of
+    ``partition_rows``, each morsel flows through the whole filter chain
+    (eager, pipelined and cascade paths alike) as an independently
+    submitted batch that the scheduler spreads across engine replicas,
+    and a `StreamingLimit` consumer drains partitions until a LIMIT's
+    ``n`` surviving rows are collected — then cancels unsubmitted
+    partitions, so LIMIT-bounded queries stop buying inference they do
+    not need.  ``partition_lookahead`` optionally prefetches the next
+    partitions' first AI predicate into the pipeline for cross-partition
+    coalescing (bounded speculation; still-queued prefetches are
+    cancelled on early termination and never billed);
+
+  * **semantic ORDER BY / top-k** — `Sort` keys may be AI_SCORE
+    expressions (scored via the SCORE request kind, recorded in the
+    `StatsStore` like every predicate); a fused `TopK` prefilters with
+    cheap proxy scores and escalates only the top candidates to the
+    ordering model;
+
   * **pilot sampling + mid-query re-optimization** — before a Filter with
     cold AI predicates runs in full, each such predicate is evaluated on a
     small evenly-spaced row sample; observed selectivity / cost-per-row
@@ -238,6 +258,56 @@ class ExecConfig:
     # None: predicate-major batched filter evaluation iff the client has a
     # RequestPipeline; True/False force it on/off.
     pipeline_filters: Optional[bool] = None
+    # -- partitioned streaming execution (the third execution mode) -----
+    # opt-in: split every filter scan into morsels of partition_rows and
+    # pull them through the predicate chain one partition at a time; a
+    # LIMIT above the chain terminates the pull as soon as n surviving
+    # rows exist (unsubmitted partitions are cancelled, not billed)
+    partitioned: bool = False
+    partition_rows: int = 256
+    # partitions whose *first* AI predicate is submitted into the
+    # pipeline ahead of need (1 = just-in-time, no speculation).  Higher
+    # values coalesce across partitions at the cost of up to
+    # lookahead - 1 speculative partitions on early termination;
+    # still-queued prefetches are cancelled and never billed.
+    partition_lookahead: int = 1
+    # -- semantic ORDER BY / top-k --------------------------------------
+    # fused TopK: score everything with the proxy model, escalate only
+    # ceil(topk_candidate_factor * k) candidates to the ordering model
+    topk_prefilter: bool = True
+
+
+class StreamingLimit:
+    """LIMIT-aware consumer of the partition-pull loop.
+
+    Collects surviving (global) row indices partition by partition;
+    ``satisfied`` flips once ``n`` rows exist, signalling the driver to
+    stop submitting partitions.  With ``n=None`` it degrades to a plain
+    accumulator (the no-LIMIT partitioned filter path).
+    """
+
+    def __init__(self, n: Optional[int] = None):
+        self.n = n
+        self._parts: List[np.ndarray] = []
+        self._count = 0
+
+    def add(self, rows: np.ndarray) -> None:
+        if len(rows):
+            self._parts.append(np.asarray(rows, dtype=np.int64))
+            self._count += len(rows)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def satisfied(self) -> bool:
+        return self.n is not None and self._count >= self.n
+
+    def take(self) -> np.ndarray:
+        out = (np.concatenate(self._parts) if self._parts
+               else np.empty(0, dtype=np.int64))
+        return out[:self.n] if self.n is not None else out
 
 
 @dataclasses.dataclass
@@ -284,13 +354,22 @@ class Executor:
         self.reorder_events: List[str] = []
         self.reoptimizations: List[str] = []
         self.pilot_telemetry: Optional[Dict[str, Any]] = None
+        self.partition_telemetry: Optional[Dict[str, Any]] = None
         self._fp_by_key: Dict[str, str] = {}
+        self._prefetch_spend: Dict[str, float] = {}
 
     @property
     def pipelined(self) -> bool:
         if self.cfg.pipeline_filters is not None:
             return self.cfg.pipeline_filters
         return self.client.pipeline is not None
+
+    @property
+    def mode(self) -> str:
+        """The execution mode this config+client combination selects."""
+        if self.cfg.partitioned:
+            return "partitioned"
+        return "pipelined" if self.pipelined else "eager"
 
     # ------------------------------------------------------------------
     def execute(self, node: P.PlanNode) -> Table:
@@ -299,6 +378,7 @@ class Executor:
         self.reorder_events = []
         self.reoptimizations = []
         self.pilot_telemetry = None
+        self.partition_telemetry = None
         self._fp_by_key: Dict[str, str] = {}
         out = self._exec(node)
         self._fold_cascade_stats()
@@ -330,8 +410,12 @@ class Executor:
             return self._exec_aggregate(node)
         if isinstance(node, P.Project):
             return self._exec_project(node)
+        if isinstance(node, P.Sort):
+            return self._exec_sort(node)
+        if isinstance(node, P.TopK):
+            return self._exec_topk(node)
         if isinstance(node, P.Limit):
-            return self._exec(node.child).head(node.n)
+            return self._exec_limit(node)
         raise TypeError(node)
 
     # ------------------------------------------------------------------
@@ -341,6 +425,11 @@ class Executor:
     def _pred_key(self, pred: E.Expr) -> str:
         if isinstance(pred, E.AIFilter):
             return f"AI_FILTER({pred.prompt.template[:40]!r})"
+        if isinstance(pred, E.AIScore):
+            # the model is part of the key: proxy-prefilter and oracle
+            # scores of one prompt are separate telemetry rows
+            model = pred.model or self.client.default_model
+            return f"AI_SCORE({pred.prompt.template[:40]!r}, {model})"
         if isinstance(pred, E.AIClassify):
             return f"AI_CLASSIFY({pred.text.template[:40]!r})"
         return f"{type(pred).__name__}:{abs(hash(pred)) % 10 ** 8}"
@@ -367,6 +456,11 @@ class Executor:
         if not preds:
             return np.ones(n, dtype=bool)
         preds, known = self._maybe_pilot(table, list(preds))
+        if self.cfg.partitioned:
+            sel = self._partition_pull(table, preds, known, limit=None)
+            mask = np.zeros(n, dtype=bool)
+            mask[sel] = True
+            return mask
         if self.pipelined:
             return self._eval_predicates_batched(table, preds, known)
         return self._eval_predicates_chunked(table, preds, known)
@@ -573,10 +667,311 @@ class Executor:
                     + ", ".join(self._pred_key(p) for p in ranked))
         return mask
 
+    # ------------------------------------------------------------------
+    # partition-pull streaming execution (the partitioned mode driver)
+    # ------------------------------------------------------------------
+
+    def _partition_pull(self, table: Table, preds: List[E.Expr],
+                        known: Optional[Dict[str, Dict[int, bool]]],
+                        limit: Optional[int]) -> np.ndarray:
+        """The partition-pull loop: morsels of ``partition_rows`` flow
+        through the whole predicate chain one partition at a time (each
+        an independently submitted batch the scheduler spreads across
+        replicas), feeding a `StreamingLimit` consumer.  With a limit the
+        loop stops — and cancels still-queued prefetches — as soon as
+        ``n`` surviving rows exist.  Returns the selected global row
+        indices in table order."""
+        n = table.num_rows
+        psize = max(self.cfg.partition_rows, 1)
+        starts = list(range(0, n, psize)) or [0]
+        consumer = StreamingLimit(limit)
+        order = list(preds)
+        prefetched: Dict[int, Tuple[str, np.ndarray, SemanticHandle]] = {}
+        # credits metered while *submitting* prefetches (a size-threshold
+        # flush can dispatch mid-submit); folded into the predicate's
+        # accounting at consume time so no spend is ever orphaned
+        self._prefetch_spend: Dict[str, float] = {}
+        tel = {"partitions_total": len(starts), "partitions_executed": 0,
+               "partitions_cancelled": 0, "partition_rows": psize,
+               "rows_scanned": 0, "rows_emitted": 0,
+               "early_terminated": False, "cancelled_requests": 0}
+        for i, lo in enumerate(starts):
+            part = np.arange(lo, min(lo + psize, n), dtype=np.int64)
+            tel["rows_scanned"] += int(len(part))
+            self._prefetch_first_pred(table, order, known, starts, i,
+                                      psize, n, prefetched)
+            alive = part
+            for pred in order:
+                if not len(alive):
+                    break
+                pf = prefetched.get(lo)
+                if pf is not None and pf[0] == self._pred_key(pred):
+                    _, rows, handle = prefetched.pop(lo)
+                    res = self._consume_prefetched(pred, rows, handle, alive)
+                else:
+                    res = self._timed_pred(pred, table, alive, known)
+                alive = alive[res]
+            # a prefetch this partition never reached (rows died first,
+            # or a reorder changed the chain): withdraw it
+            leftover = prefetched.pop(lo, None)
+            if leftover is not None:
+                tel["cancelled_requests"] += self._cancel_handles([leftover])
+            tel["partitions_executed"] += 1
+            consumer.add(alive)
+            # adaptive reordering between partitions (§5.1 runtime)
+            if self.cfg.adaptive_reorder and order and lo + psize < n:
+                ranked = sorted(order, key=lambda p: self._stats_for(p).rank)
+                if ranked != order:
+                    self.reorder_events.append(
+                        f"partition[{i}]: reorder -> "
+                        + ", ".join(self._pred_key(p) for p in ranked))
+                    order = ranked
+            if consumer.satisfied:
+                remaining = len(starts) - (i + 1)
+                if remaining or prefetched:
+                    tel["early_terminated"] = True
+                tel["partitions_cancelled"] = remaining
+                break
+        tel["cancelled_requests"] += self._cancel_handles(
+            prefetched.values())
+        prefetched.clear()
+        # spend of dispatched-but-never-consumed prefetches still belongs
+        # to the predicate (real credits, zero extra evaluated rows)
+        for key, spend in self._prefetch_spend.items():
+            if spend > 0.0:
+                st = self.pred_stats.setdefault(key, PredicateStats())
+                st.credits += spend
+                fp = self._fp_by_key.get(key)
+                if fp is not None:
+                    self.stats.observe_predicate(fp, evaluated=0, passed=0,
+                                                 credits=spend)
+        self._prefetch_spend = {}
+        out = consumer.take()
+        tel["rows_emitted"] = int(len(out))
+        self._note_partitions(tel)
+        return out
+
+    def _prefetch_first_pred(self, table: Table, order: List[E.Expr],
+                             known, starts: List[int], i: int, psize: int,
+                             n: int, prefetched: Dict[int, Tuple]) -> None:
+        """Speculatively queue the first AI predicate of the next
+        ``partition_lookahead`` partitions into the pipeline so their
+        rows coalesce into one engine batch (split across replicas by
+        the scheduler).  Bounded speculation: on early termination the
+        still-queued requests are cancelled, never dispatched or
+        billed."""
+        lookahead = self.cfg.partition_lookahead
+        if (lookahead <= 1 or self.client.pipeline is None or not order
+                or self.cfg.use_cascade):
+            return
+        pred = order[0]
+        if not isinstance(pred, E.AIFilter):
+            return
+        key = self._pred_key(pred)
+        if (known or {}).get(key):
+            return      # pilot already paid for rows; avoid recounting
+        c0 = self.client.ai_credits
+        for j in range(i, min(i + lookahead, len(starts))):
+            lo = starts[j]
+            if lo in prefetched:
+                continue
+            rows = np.arange(lo, min(lo + psize, n), dtype=np.int64)
+            op = SemanticOp.from_filter(pred, table, rows,
+                                        self._filter_model(pred))
+            prefetched[lo] = (key, rows, op.submit(self.client))
+        spent = self.client.ai_credits - c0
+        if spent > 0.0:       # a size-threshold flush dispatched mid-submit
+            self._prefetch_spend[key] = \
+                self._prefetch_spend.get(key, 0.0) + spent
+
+    def _consume_prefetched(self, pred: E.Expr, rows: np.ndarray,
+                            handle: SemanticHandle, alive: np.ndarray
+                            ) -> np.ndarray:
+        """Await a prefetched partition batch and fold its spend into the
+        same per-query telemetry and `StatsStore` rows as `_timed_pred`
+        (every prefetched row is billed and recorded exactly once)."""
+        st = self._stats_for(pred)
+        t0 = time.perf_counter()
+        c0 = self.client.ai_credits
+        passes = handle.scores() >= 0.5
+        seconds = time.perf_counter() - t0
+        credits = self.client.ai_credits - c0
+        # credits already metered while this (or a sibling) prefetch was
+        # being submitted belong to the same predicate: claim them here
+        # so learned cost-per-row reflects the real spend
+        credits += self._prefetch_spend.pop(self._pred_key(pred), 0.0)
+        st.evaluated += len(rows)
+        st.passed += int(passes.sum())
+        st.credits += credits
+        st.seconds += seconds
+        self.stats.observe_predicate(
+            self._fp_by_key[self._pred_key(pred)], evaluated=len(rows),
+            passed=int(passes.sum()), credits=credits, seconds=seconds)
+        by_row = dict(zip(rows.tolist(), passes.tolist()))
+        return np.asarray([by_row[int(r)] for r in alive], dtype=bool)
+
+    def _cancel_handles(self, entries) -> int:
+        """Cancel the still-queued futures of prefetched partition
+        batches; dispatched (already billed/resolved) work is left
+        alone.  Returns the number of requests withdrawn."""
+        pipe = self.client.pipeline
+        if pipe is None:
+            return 0
+        total = 0
+        for _, _, handle in entries:
+            pending = [f for f in handle.futures
+                       if not f.done() and not f.cancelled()]
+            if pending:
+                total += pipe.cancel(pending)
+        return total
+
+    def _note_partitions(self, tel: Dict[str, Any]) -> None:
+        if self.partition_telemetry is None:
+            self.partition_telemetry = tel
+            return
+        agg = self.partition_telemetry
+        for k in ("partitions_total", "partitions_executed",
+                  "partitions_cancelled", "rows_scanned", "rows_emitted",
+                  "cancelled_requests"):
+            agg[k] += tel[k]
+        agg["early_terminated"] = (agg["early_terminated"]
+                                   or tel["early_terminated"])
+
+    def _exec_limit(self, node: P.Limit) -> Table:
+        """LIMIT.  In partitioned mode a streamable spine underneath —
+        ``[Project] -> Filter* -> source`` — is pulled partition by
+        partition with early termination: the filter chain (and any AI
+        projection) runs only until ``n`` surviving rows exist instead
+        of materializing everything and truncating."""
+        if self.cfg.partitioned:
+            spine = self._streamable_spine(node.child)
+            if spine is not None:
+                project, preds, inner = spine
+                source = self._exec(inner)
+                if preds:
+                    preds, known = self._maybe_pilot(source, list(preds))
+                else:
+                    known = {}
+                sel = self._partition_pull(source, preds, known,
+                                           limit=node.n)
+                out = source.take(sel)
+                if project is not None:
+                    out = self._exec_project(
+                        P.Project(_Materialized(out), project.items))
+                return out.head(node.n)
+        return self._exec(node.child).head(node.n)
+
+    def _streamable_spine(self, child: P.PlanNode):
+        """Peel ``[Project] -> Filter* -> source`` under a Limit.
+        Returns ``(project|None, predicates, source)`` when streaming
+        can save work (a filter chain to early-terminate or a projection
+        to bound), else None.  Predicates are in evaluation order
+        (innermost filter first)."""
+        project: Optional[P.Project] = None
+        inner = child
+        if isinstance(inner, P.Project):
+            project, inner = inner, inner.child
+        preds: List[E.Expr] = []
+        while isinstance(inner, P.Filter):
+            preds = list(inner.predicates) + preds
+            inner = inner.child
+        if project is None and not preds:
+            return None
+        return project, preds, inner
+
+    # ------------------------------------------------------------------
+    # ORDER BY: Sort and fused TopK (semantic ordering)
+    # ------------------------------------------------------------------
+
+    def _exec_sort(self, node: P.Sort) -> Table:
+        table = self._exec(node.child)
+        rows = np.arange(table.num_rows, dtype=np.int64)
+        return table.take(self._order_rows(table, rows, node.keys))
+
+    def _exec_topk(self, node: P.TopK) -> Table:
+        """Fused ORDER BY + LIMIT.  With an AI-scored primary key the
+        proxy model scores every row first and only the best
+        ``topk_candidate_factor * k`` candidates are escalated to the
+        ordering model — the early-exit path for top-k search."""
+        table = self._exec(node.child)
+        n = node.n
+        rows = np.arange(table.num_rows, dtype=np.int64)
+        primary = node.keys[0] if node.keys else None
+        if (primary is not None and isinstance(primary.expr, E.AIScore)
+                and self.cfg.topk_prefilter and table.num_rows > n):
+            proxy = self.cfg.proxy_model or self.client.proxy_model
+            oracle = primary.expr.model or self.client.default_model
+            k_cand = int(self.cost.topk_candidates(float(table.num_rows), n))
+            if proxy != oracle and k_cand < table.num_rows:
+                pscores = self._ai_scores(primary.expr, table, rows, proxy)
+                perm = sorted(range(len(rows)),
+                              key=lambda i: pscores[i],
+                              reverse=primary.desc)
+                cand = np.sort(rows[np.asarray(perm[:k_cand],
+                                               dtype=np.int64)])
+                self.reoptimizations.append(
+                    f"topk-prefilter: {proxy} scored {len(rows)} rows, "
+                    f"escalated {len(cand)} candidates to {oracle} "
+                    f"(k={n})")
+                return table.take(self._order_rows(table, cand,
+                                                   node.keys)[:n])
+        return table.take(self._order_rows(table, rows, node.keys)[:n])
+
+    def _order_rows(self, table: Table, rows: np.ndarray,
+                    keys) -> np.ndarray:
+        """Stable multi-key ordering of ``rows``: repeated stable sorts
+        from the least-significant key up (Python's sort keeps ties in
+        input order even with ``reverse=True``)."""
+        idx = np.arange(len(rows))
+        for sk in reversed(list(keys)):
+            vals = self._sort_key_values(sk.expr, table, rows)
+            sub = vals[idx]
+            perm = sorted(range(len(sub)), key=lambda i: sub[i],
+                          reverse=sk.desc)
+            idx = idx[np.asarray(perm, dtype=np.int64)]
+        return rows[idx]
+
+    def _sort_key_values(self, expr: E.Expr, table: Table,
+                         rows: np.ndarray) -> np.ndarray:
+        if isinstance(expr, E.AIScore):
+            return self._ai_scores(expr, table, rows,
+                                   expr.model or self.client.default_model)
+        return np.asarray(E.eval_expr(expr, table, rows))
+
+    def _ai_scores(self, pred: E.AIScore, table: Table, rows: np.ndarray,
+                   model: str) -> np.ndarray:
+        """Score ``rows`` with the SCORE request kind, metering into the
+        per-query telemetry and the `StatsStore` under a model-resolved
+        surrogate (proxy and oracle scores are distinct populations)."""
+        surrogate = E.AIScore(pred.prompt, model=model)
+        st = self._stats_for(surrogate)
+        prompts = pred.prompt.render(table, rows)
+        args = [E.eval_expr(a, table, rows) for a in pred.prompt.args]
+        md = row_metadata(table, rows, args, arg_cols=sorted(pred.refs()))
+        t0 = time.perf_counter()
+        c0 = self.client.ai_credits
+        scores = SemanticOp.scores(prompts, md,
+                                   model).submit(self.client).scores()
+        seconds = time.perf_counter() - t0
+        credits = self.client.ai_credits - c0
+        st.evaluated += len(rows)
+        st.passed += int((scores >= 0.5).sum())
+        st.credits += credits
+        st.seconds += seconds
+        self.stats.observe_predicate(
+            self._fp_by_key[self._pred_key(surrogate)],
+            evaluated=len(rows), passed=int((scores >= 0.5).sum()),
+            credits=credits, seconds=seconds)
+        return scores
+
     def _eval_pred(self, pred: E.Expr, table: Table, rows: np.ndarray
                    ) -> np.ndarray:
         if isinstance(pred, E.AIFilter):
             return self._eval_ai_filter(pred, table, rows)
+        if isinstance(pred, E.AIScore):
+            raise NotImplementedError(
+                "AI_SCORE is an ORDER BY key, not a predicate; compare "
+                "with AI_FILTER instead")
         if isinstance(pred, E.AIClassify):
             raise NotImplementedError("AI_CLASSIFY as a predicate")
         return np.asarray(E.eval_expr(pred, table, rows), dtype=bool)
@@ -795,6 +1190,8 @@ class Executor:
             return "ai_complete"
         if isinstance(e, E.AIClassify):
             return "ai_classify"
+        if isinstance(e, E.AIScore):
+            return "ai_score"
         return f"col{i}"
 
     def _materialize_item(self, table: Table, item: E.SelectItem) -> Table:
@@ -907,6 +1304,10 @@ class Executor:
             elif isinstance(e, E.AIFilter):
                 cols[name] = self._eval_ai_filter(e, table, rows)
                 types[name] = "bool"
+            elif isinstance(e, E.AIScore):
+                cols[name] = self._ai_scores(
+                    e, table, rows, e.model or self.client.default_model)
+                types[name] = "float"
             else:
                 cols[name] = E.eval_expr(e, table, rows)
         if not cols:                      # SELECT over an empty item list

@@ -148,6 +148,20 @@ class AIFilter(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class AIScore(Expr):
+    """AI_SCORE(PROMPT(...)) — the model's confidence in [0, 1] that the
+    prompt's statement holds for the row.  The semantic ORDER BY key:
+    ``ORDER BY AI_SCORE(...) DESC LIMIT k`` is the paper's top-k search
+    workload.  Reuses the SCORE request kind of AI_FILTER but returns the
+    raw score instead of thresholding it."""
+    prompt: Prompt
+    model: Optional[str] = None
+
+    def refs(self):
+        return self.prompt.refs()
+
+
+@dataclasses.dataclass(frozen=True)
 class AIClassify(Expr):
     """AI_CLASSIFY(text, [labels...]) — §3.4."""
     text: Prompt
@@ -207,7 +221,7 @@ def ai_calls_in(e: Expr) -> List[Expr]:
     out: List[Expr] = []
 
     def walk(x):
-        if isinstance(x, (AIFilter, AIClassify, AIComplete)):
+        if isinstance(x, (AIFilter, AIScore, AIClassify, AIComplete)):
             out.append(x)
         if isinstance(x, AggCall) and x.name in ("AI_AGG", "AI_SUMMARIZE_AGG"):
             out.append(x)
@@ -314,7 +328,7 @@ def eval_expr(e: Expr, table: Table, rows: Optional[np.ndarray] = None
         if fn is None:
             raise KeyError(f"unknown function {e.name}")
         return fn(eval_expr(e.args[0], table, rows))
-    if isinstance(e, (AIFilter, AIClassify, AIComplete, AggCall)):
+    if isinstance(e, (AIFilter, AIScore, AIClassify, AIComplete, AggCall)):
         raise RuntimeError(f"AI/aggregate expression reached eval_expr: {e}; "
                            "the executor must handle it")
     raise TypeError(f"cannot evaluate {type(e).__name__}")

@@ -50,6 +50,10 @@ class OptimizerConfig:
         enable_semantic_join_rewrite: allow the §5.3 join -> multi-label
             AI_CLASSIFY rewrite (still subject to the oracle and, when
             ``cost_gate_semantic_rewrite``, an estimated-cost comparison).
+        enable_topk_fusion: fuse ``Limit(Sort(...))`` with an AI-scored
+            primary key into a `TopK` node, unlocking the executor's
+            proxy-score-prefilter early-exit path; applied only when the
+            fused plan's estimated LLM credits are not higher.
         cost_gate_semantic_rewrite: only apply the §5.3 rewrite when the
             rewritten plan's estimated LLM credits are lower than the
             original's — with a warm `StatsStore` this re-decides the
@@ -71,6 +75,7 @@ class OptimizerConfig:
     enable_join_placement: bool = True
     enable_semantic_join_rewrite: bool = True
     cost_gate_semantic_rewrite: bool = True
+    enable_topk_fusion: bool = True
     max_labels_per_call: int = 250      # AI_CLASSIFY context-window chunking
     # rewrite-oracle gates
     label_ndv_max: int = 512            # label sets are small-cardinality
@@ -279,6 +284,8 @@ class Optimizer:
             node = self._place_ai_predicates(node)
         if self.cfg.enable_reorder:
             node = self._reorder_filters(node)
+        if self.cfg.enable_topk_fusion:
+            node = self._fuse_topk(node)
         return node
 
     # ------------------------------------------------------------------
@@ -402,7 +409,39 @@ class Optimizer:
         return best
 
     # ------------------------------------------------------------------
-    # 3. semantic-join -> multi-label classification rewrite
+    # 3. top-k fusion: Limit over a semantic Sort -> TopK
+    # ------------------------------------------------------------------
+
+    def _fuse_topk(self, node: P.PlanNode) -> P.PlanNode:
+        """``Limit(Sort)`` / ``Limit(Project(Sort))`` with an AI-scored
+        primary key -> ``TopK`` (under the unchanged projection): only k
+        rows survive, so the projection and the prefilter both run on a
+        bounded row set.  Cost-gated like every other rewrite."""
+        node = _map_children(node, self._fuse_topk)
+        if not isinstance(node, P.Limit):
+            return node
+        project: Optional[P.Project] = None
+        sort = node.child
+        if isinstance(sort, P.Project):
+            project, sort = sort, sort.child
+        if not isinstance(sort, P.Sort):
+            return node
+        if not (sort.keys and isinstance(sort.keys[0].expr, E.AIScore)):
+            return node          # prefilter needs an AI-scored primary key
+        fused: P.PlanNode = P.TopK(sort.child, sort.keys, node.n)
+        if project is not None:
+            fused = P.Project(fused, project.items)
+        c_orig = self.cost.est_llm_cost(node)
+        c_new = self.cost.est_llm_cost(fused)
+        self.trace.append(
+            f"topk-fusion: TopK {c_new:.6g} vs sort-then-limit "
+            f"{c_orig:.6g} credits")
+        if c_new <= c_orig:
+            return fused
+        return node
+
+    # ------------------------------------------------------------------
+    # 4. semantic-join -> multi-label classification rewrite
     # ------------------------------------------------------------------
 
     def _rewrite_semantic_joins(self, node: P.PlanNode) -> P.PlanNode:
@@ -458,7 +497,7 @@ def _map_children(node: P.PlanNode, fn) -> P.PlanNode:
         return dataclasses.replace(node, child=new[0])
     if isinstance(node, (P.Join, P.SemanticJoinClassify)):
         return dataclasses.replace(node, left=new[0], right=new[1])
-    if isinstance(node, (P.Project, P.Aggregate, P.Limit)):
+    if isinstance(node, (P.Project, P.Aggregate, P.Limit, P.Sort, P.TopK)):
         return dataclasses.replace(node, child=new[0])
     raise TypeError(node)
 
@@ -479,6 +518,8 @@ def _strip_ai_filter(node: P.PlanNode) -> Tuple[List[E.Expr], P.PlanNode]:
 def _pname(p: E.Expr) -> str:
     if isinstance(p, E.AIFilter):
         return "AI_FILTER" + ("[mm]" if p.multimodal else "")
+    if isinstance(p, E.AIScore):
+        return "AI_SCORE"
     if isinstance(p, E.AIClassify):
         return "AI_CLASSIFY"
     return type(p).__name__

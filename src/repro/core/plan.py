@@ -126,6 +126,47 @@ class Aggregate(PlanNode):
 
 
 @dataclasses.dataclass(frozen=True)
+class SortKey:
+    """One ORDER BY key; ``expr`` may be a structured expression or an
+    `E.AIScore` (semantic ordering via the SCORE request kind)."""
+    expr: E.Expr
+    desc: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Sort(PlanNode):
+    child: PlanNode
+    keys: Tuple[SortKey, ...]
+
+    def children(self):
+        return (self.child,)
+
+    def _describe(self):
+        kinds = ["AI" if isinstance(k.expr, E.AIScore) else "rel"
+                 for k in self.keys]
+        dirs = ["DESC" if k.desc else "ASC" for k in self.keys]
+        return ("Sort [" + ", ".join(f"{k} {d}"
+                                     for k, d in zip(kinds, dirs)) + "]")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(PlanNode):
+    """Fused ORDER BY + LIMIT (optimizer rewrite of ``Limit(Sort(...))``
+    with an AI-scored primary key): the executor may prefilter with
+    cheap proxy scores and escalate only the top candidates to the
+    ordering model — the early-exit path for top-k search workloads."""
+    child: PlanNode
+    keys: Tuple[SortKey, ...]
+    n: int
+
+    def children(self):
+        return (self.child,)
+
+    def _describe(self):
+        return f"TopK {self.n} ({len(self.keys)} keys)"
+
+
+@dataclasses.dataclass(frozen=True)
 class Limit(PlanNode):
     child: PlanNode
     n: int
@@ -197,8 +238,29 @@ def build_plan(q: Query) -> PlanNode:
         isinstance(it.expr, E.AggCall) for it in q.select)
     if has_agg:
         node = Aggregate(node, tuple(q.group_by), tuple(q.select))
+        # ORDER BY above the aggregate: keys reference output columns
+        # (aliases, agg names) of the aggregate itself
+        if q.order_by:
+            node = Sort(node, tuple(SortKey(o.expr, o.desc)
+                                    for o in q.order_by))
     else:
+        # ORDER BY below the projection so keys can reference base
+        # columns the SELECT list drops; keys naming a select alias are
+        # substituted with the aliased expression first
+        if q.order_by:
+            node = Sort(node, tuple(
+                SortKey(_substitute_alias(o.expr, q.select), o.desc)
+                for o in q.order_by))
         node = Project(node, tuple(q.select))
     if q.limit is not None:
         node = Limit(node, q.limit)
     return node
+
+
+def _substitute_alias(e: E.Expr, items: Sequence[E.SelectItem]) -> E.Expr:
+    """ORDER BY <select-alias> names the aliased expression."""
+    if isinstance(e, E.Column):
+        for it in items:
+            if it.alias is not None and it.alias == e.name:
+                return it.expr
+    return e

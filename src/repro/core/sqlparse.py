@@ -4,12 +4,15 @@ Supported surface:
 
     SELECT <items> FROM t [AS] a
       [JOIN t2 [AS] b ON <expr>]*
-      [WHERE <expr>] [GROUP BY <cols>] [LIMIT n]
+      [WHERE <expr>] [GROUP BY <cols>]
+      [ORDER BY <expr> [ASC|DESC], ...] [LIMIT n]
 
-with the AI operators AI_COMPLETE, AI_FILTER, AI_CLASSIFY, AI_AGG,
-AI_SUMMARIZE_AGG, the PROMPT(...) object, FILE utilities (FL_IS_IMAGE...),
-BETWEEN/IN/AND/OR/NOT, array literals ['a','b'] for label sets, and an
-optional ``model => 'name'`` keyword argument on AI calls.
+with the AI operators AI_COMPLETE, AI_FILTER, AI_SCORE, AI_CLASSIFY,
+AI_AGG, AI_SUMMARIZE_AGG, the PROMPT(...) object, FILE utilities
+(FL_IS_IMAGE...), BETWEEN/IN/AND/OR/NOT, array literals ['a','b'] for
+label sets, and an optional ``model => 'name'`` keyword argument on AI
+calls.  ORDER BY accepts structured expressions and AI_SCORE(...) keys
+(semantic ordering); LIMIT requires a non-negative integer literal.
 """
 from __future__ import annotations
 
@@ -74,6 +77,13 @@ class JoinClause:
 
 
 @dataclasses.dataclass
+class OrderItem:
+    """One ORDER BY key: an expression plus sort direction."""
+    expr: E.Expr
+    desc: bool = False
+
+
+@dataclasses.dataclass
 class Query:
     select: List[E.SelectItem]
     table: TableRef
@@ -81,6 +91,7 @@ class Query:
     where: Optional[E.Expr]
     group_by: List[str]
     limit: Optional[int]
+    order_by: List[OrderItem] = dataclasses.field(default_factory=list)
 
 
 class Parser:
@@ -136,11 +147,32 @@ class Parser:
             group_by.append(self.qualified_name())
             while self.accept("op", ","):
                 group_by.append(self.qualified_name())
+        order_by: List[OrderItem] = []
+        if self.accept("kw", "ORDER"):
+            self.expect("kw", "BY")
+            order_by.append(self.order_item())
+            while self.accept("op", ","):
+                order_by.append(self.order_item())
         limit = None
         if self.accept("kw", "LIMIT"):
-            limit = int(self.expect("num").value)
+            tok = self.expect("num")
+            if "." in tok.value:
+                raise SyntaxError(f"LIMIT must be an integer, got {tok.value}")
+            limit = int(tok.value)
         self.expect("eof")
-        return Query(items, table, joins, where, group_by, limit)
+        return Query(items, table, joins, where, group_by, limit, order_by)
+
+    def order_item(self) -> OrderItem:
+        t = self.peek()
+        if t.kind in ("eof",) or (t.kind == "op" and t.value == ","):
+            raise SyntaxError("ORDER BY requires an expression")
+        ex = self.expr()
+        desc = False
+        if self.accept("kw", "DESC"):
+            desc = True
+        else:
+            self.accept("kw", "ASC")
+        return OrderItem(ex, desc)
 
     def select_item(self) -> E.SelectItem:
         if self.accept("op", "*"):
@@ -317,6 +349,14 @@ class Parser:
                 else:
                     p = E.Prompt("{0}", (p,))
             return E.AIFilter(p, model=model)
+        if uname == "AI_SCORE":
+            p = args[0]
+            if not isinstance(p, E.Prompt):
+                if isinstance(p, E.Literal):
+                    p = E.Prompt(str(p.value), tuple(args[1:]))
+                else:
+                    p = E.Prompt("{0}", (p,))
+            return E.AIScore(p, model=model)
         if uname == "AI_CLASSIFY":
             text = args[0]
             if not isinstance(text, E.Prompt):

@@ -85,6 +85,11 @@ def predicate_fingerprint(pred: E.Expr) -> str:
     if isinstance(pred, E.AIFilter):
         return (f"AI_FILTER|{pred.prompt.template}|{pred.model or ''}|"
                 f"{','.join(_canon(a) for a in pred.prompt.args)}")
+    if isinstance(pred, E.AIScore):
+        # the model is part of the identity: proxy-prefilter scores and
+        # oracle scores of the same prompt are distinct cost populations
+        return (f"AI_SCORE|{pred.prompt.template}|{pred.model or ''}|"
+                f"{','.join(_canon(a) for a in pred.prompt.args)}")
     if isinstance(pred, E.AIClassify):
         return (f"AI_CLASSIFY|{pred.text.template}|{pred.model or ''}|"
                 f"{','.join(sorted(pred.labels))}|"

@@ -56,13 +56,16 @@ def request_fingerprint(r: Request) -> Tuple:
 
 class ResultFuture:
     """Handle for one in-flight request.  ``result()`` forces a barrier
-    flush of the owning pipeline if the request has not been dispatched."""
+    flush of the owning pipeline if the request has not been dispatched.
+    A future whose request was cancelled before dispatch (see
+    `RequestPipeline.cancel`) raises on ``result()``."""
 
-    __slots__ = ("_pipeline", "_result")
+    __slots__ = ("_pipeline", "_result", "_cancelled")
 
     def __init__(self, pipeline: Optional["RequestPipeline"] = None):
         self._pipeline = pipeline
         self._result: Optional[Result] = None
+        self._cancelled = False
 
     @classmethod
     def resolved(cls, result: Result) -> "ResultFuture":
@@ -73,10 +76,15 @@ class ResultFuture:
     def done(self) -> bool:
         return self._result is not None
 
+    def cancelled(self) -> bool:
+        return self._cancelled
+
     def _resolve(self, result: Result) -> None:
         self._result = result
 
     def result(self) -> Result:
+        if self._cancelled:
+            raise RuntimeError("request was cancelled before dispatch")
         if self._result is None:
             if self._pipeline is None:
                 raise RuntimeError("unresolved future with no pipeline")
@@ -103,6 +111,7 @@ class PipelineStats:
     cache_hits: int = 0           # served from the memoized result cache
     flushes_on_size: int = 0
     flushes_on_barrier: int = 0
+    cancelled: int = 0            # queued requests cancelled pre-dispatch
     queue_wait_s: float = 0.0     # sum over dispatched reqs of queue time
     batch_size_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
     # submissions per request kind (score/classify/complete): lets the
@@ -219,6 +228,39 @@ class RequestPipeline:
                 self._flush_model(m)
         if flushed_any:
             self.stats.flushes_on_barrier += 1
+
+    def cancel(self, futures: Sequence[ResultFuture]) -> int:
+        """Cancel still-queued requests — the LIMIT-aware early-termination
+        hook: a streaming consumer that has its ``n`` rows withdraws the
+        speculative partitions it no longer needs *before* they are
+        dispatched, so they never reach an engine or the credit meter.
+
+        A queued request is cancelled only when **every** future attached
+        to it (the original plus any dedup attachments) is in ``futures``
+        — work another call site still awaits is left untouched.  Requests
+        already dispatched (or resolved) cannot be cancelled.  Returns the
+        number of requests removed from the queues.
+        """
+        want = {id(f) for f in futures}
+        cancelled = 0
+        for model in list(self._queues):
+            kept: List[_QueueItem] = []
+            for item in self._queues[model]:
+                if item.futures and all(id(f) in want for f in item.futures):
+                    cancelled += 1
+                    for f in item.futures:
+                        f._cancelled = True
+                    if self.cfg.dedup:
+                        self._inflight.pop(
+                            request_fingerprint(item.request), None)
+                else:
+                    kept.append(item)
+            if kept:
+                self._queues[model] = kept
+            else:
+                del self._queues[model]
+        self.stats.cancelled += cancelled
+        return cancelled
 
     def _flush_model(self, model: str) -> None:
         size = max(self.cfg.max_batch, 1)

@@ -1,0 +1,178 @@
+"""Differential execution-mode suite.
+
+A seeded randomized query corpus (filters × joins × aggregates × order
+× limits) is executed under every execution mode — eager, pipelined,
+partitioned (and partitioned over a pipelined client) — and the modes
+must agree:
+
+  * identical result rows, always;
+  * identical total credits billed on unbounded queries (no mode may
+    silently buy more — or less — inference than another);
+  * on LIMIT-bounded queries the partitioned mode may only ever spend
+    *less* than materialize-then-truncate, never more;
+  * with pilot sampling on, no predicate is ever billed for more rows
+    than the table holds (no double billing across partition/pilot
+    paths) and per-operator credits sum to the metered total.
+"""
+import numpy as np
+import pytest
+
+from repro.core import AisqlEngine, Catalog, ExecConfig
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+from repro.tables.table import Table
+
+SEED = 20260731
+N_QUERIES = 24
+
+# (pipelined client, partitioned executor)
+MODES = {
+    "eager": (False, False),
+    "pipelined": (True, False),
+    "partitioned": (False, True),
+    "partitioned-pipelined": (True, True),
+}
+
+
+def _catalog(seed=SEED):
+    rng = np.random.default_rng(seed)
+    n = 120
+    t = Table({
+        "id": np.arange(n),
+        "gid": np.arange(n) % 30,
+        "val": rng.random(n),
+        "cat": rng.choice(["a", "b", "c"], n),
+        "text": [f"[t:{i}] document body {i}" for i in range(n)],
+        "_truth": rng.random(n) < 0.45,
+        "_difficulty": np.full(n, 0.05),
+    }, name="t")
+    u = Table({
+        "k": np.arange(30),
+        "w": rng.random(30),
+    }, name="u")
+    return Catalog({"t": t, "u": u})
+
+
+FILTERS = (
+    "t.val < 0.6",
+    "t.gid >= 9",
+    "t.cat IN ('a', 'b')",
+    "t.val BETWEEN 0.1 AND 0.9",
+    "AI_FILTER(PROMPT('is this row relevant? {0}', t.text))",
+    "AI_FILTER(PROMPT('does this mention databases? {0}', t.text))",
+)
+
+
+def _gen_query(rng: np.random.Generator) -> str:
+    join = rng.random() < 0.4
+    agg = rng.random() < 0.3
+    n_filters = int(rng.integers(0, 4))
+    picks = list(rng.choice(len(FILTERS), size=n_filters, replace=False))
+    where = " AND ".join(FILTERS[i] for i in picks)
+    frm = "FROM t"
+    if join:
+        frm += " JOIN u ON t.gid = u.k"
+    if agg:
+        sql = f"SELECT t.cat, COUNT(*), AVG(t.val) {frm}"
+        if where:
+            sql += f" WHERE {where}"
+        sql += " GROUP BY t.cat"
+    else:
+        cols = "t.id, t.val, t.cat" + (", u.w" if join else "")
+        sql = f"SELECT {cols} {frm}"
+        if where:
+            sql += f" WHERE {where}"
+        if rng.random() < 0.4:
+            sql += " ORDER BY t.val DESC, t.id ASC"
+    if rng.random() < 0.5:
+        sql += f" LIMIT {int(rng.choice([3, 7, 17]))}"
+    return sql
+
+
+def _corpus():
+    rng = np.random.default_rng(SEED)
+    return [_gen_query(rng) for _ in range(N_QUERIES)]
+
+
+def _run(cat, sql, *, pipelined, partitioned):
+    client = make_simulated_client(pipelined=pipelined)
+    # reorder/pilot off so every mode commits to the same static
+    # evaluation order — the per-row work sets are then identical and
+    # credit totals must match to the last dispatch
+    eng = AisqlEngine(cat, client, executor=ExecConfig(
+        partitioned=partitioned, partition_rows=48, chunk_rows=48,
+        adaptive_reorder=False, pilot_rows=0))
+    out = eng.sql(sql)
+    return out, eng.last_report
+
+
+def _canon_rows(table: Table):
+    cols = sorted(table.column_names)
+    return sorted(tuple(str(table.column(c)[i]) for c in cols)
+                  for i in range(table.num_rows))
+
+
+@pytest.mark.parametrize("sql", _corpus())
+def test_modes_agree_on_rows_and_credits(sql):
+    cat = _catalog()
+    results = {name: _run(cat, sql, pipelined=p, partitioned=q)
+               for name, (p, q) in MODES.items()}
+    base_out, base_rep = results["eager"]
+    base_rows = _canon_rows(base_out)
+    bounded = "LIMIT" in sql
+    for name, (out, rep) in results.items():
+        assert _canon_rows(out) == base_rows, \
+            f"{name} changed the result set for: {sql}"
+        if bounded and "partitioned" in name:
+            # early termination may only ever reduce spend
+            assert rep.ai_credits <= base_rep.ai_credits + 1e-12, \
+                f"{name} overspent on: {sql}"
+            assert rep.ai_calls <= base_rep.ai_calls, \
+                f"{name} issued more calls on: {sql}"
+        else:
+            assert rep.ai_credits == pytest.approx(
+                base_rep.ai_credits, abs=1e-12), \
+                f"{name} billed differently for: {sql}"
+            assert rep.ai_calls == base_rep.ai_calls, \
+                f"{name} call count diverged for: {sql}"
+
+
+def test_corpus_is_meaningful():
+    """The generated corpus must actually cover the operator space."""
+    corpus = _corpus()
+    assert any("JOIN" in q for q in corpus)
+    assert any("GROUP BY" in q for q in corpus)
+    assert any("LIMIT" in q for q in corpus)
+    assert any("AI_FILTER" in q for q in corpus)
+    assert any("ORDER BY" in q for q in corpus)
+    assert any("LIMIT" not in q for q in corpus)
+
+
+def test_pilot_accounting_consistent_across_modes():
+    """With pilot sampling on, every mode returns the same rows, never
+    evaluates a predicate on more rows than the table holds, and
+    attributes every credit (pilot rows are billed exactly once)."""
+    cat = Catalog({"articles": D.skewed_articles(360)})
+    sql = ("SELECT * FROM articles AS a WHERE "
+           "AI_FILTER(PROMPT('broad appeal? {0}', a.headline)) AND "
+           "AI_FILTER(PROMPT('narrowly about databases? {0}', a.summary))")
+    rows_by_mode = {}
+    for name, (pipelined, partitioned) in MODES.items():
+        client = make_simulated_client(pipelined=pipelined)
+        eng = AisqlEngine(cat, client, executor=ExecConfig(
+            partitioned=partitioned, partition_rows=90, chunk_rows=90,
+            pilot_rows=24, min_rows_for_pilot=64))
+        out = eng.sql(sql)
+        rep = eng.last_report
+        rows_by_mode[name] = _canon_rows(out)
+        assert rep.pilot is not None and rep.pilot["sampled_rows"] > 0
+        for op in rep.operators:
+            if op.actual_rows_in is not None:
+                assert op.actual_rows_in <= 360, \
+                    f"{name}: {op.operator} double-billed rows"
+        total = sum(op.actual_credits for op in rep.operators
+                    if op.actual_credits is not None)
+        assert total == pytest.approx(rep.ai_credits, rel=1e-9), name
+    base = rows_by_mode["eager"]
+    for name, rows in rows_by_mode.items():
+        assert rows == base, f"{name} changed the result set"

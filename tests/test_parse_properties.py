@@ -1,0 +1,151 @@
+"""Parser round-trip / precedence properties.
+
+Hypothesis-based property tests (clean skips when hypothesis is absent,
+see tests/_hypothesis_compat.py) plus example-based anchors that always
+run: `parse()` must give AND/OR/NOT and + - * the standard precedence
+and associativity (validated against Python, whose rules coincide), and
+must reject malformed ORDER BY / LIMIT clauses outright.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import expr as E
+from repro.core import sqlparse
+from repro.tables.table import Table
+
+# one row per boolean assignment of four variables
+_BOOLS = Table({f"b{i}": [(bit >> i) & 1 == 1 for bit in range(16)]
+                for i in range(4)})
+
+
+def _eval_where(sql_expr: str) -> list:
+    q = sqlparse.parse(f"SELECT * FROM t WHERE {sql_expr}")
+    mask = E.eval_expr(q.where, _BOOLS, np.arange(_BOOLS.num_rows))
+    return [bool(v) for v in mask]
+
+
+def _python_truth(py_expr: str) -> list:
+    out = []
+    for bit in range(16):
+        env = {f"b{i}": (bit >> i) & 1 == 1 for i in range(4)}
+        out.append(bool(eval(py_expr, {}, env)))
+    return out
+
+
+def _eval_scalar(sql_expr: str):
+    q = sqlparse.parse(f"SELECT {sql_expr} FROM t")
+    one = Table({"x": [0]})
+    return E.eval_expr(q.select[0].expr, one, np.arange(1))[0]
+
+
+# ---------------------------------------------------------------------------
+# example-based anchors (always run, even without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def test_and_binds_tighter_than_or():
+    assert _eval_where("b0 OR b1 AND b2") == _python_truth("b0 or (b1 and b2)")
+    assert _eval_where("b0 AND b1 OR b2") == _python_truth("(b0 and b1) or b2")
+
+
+def test_not_binds_tighter_than_and():
+    assert _eval_where("NOT b0 AND b1") == _python_truth("(not b0) and b1")
+    assert _eval_where("NOT b0 OR b1") == _python_truth("(not b0) or b1")
+
+
+def test_parens_override_precedence():
+    assert _eval_where("(b0 OR b1) AND b2") == \
+        _python_truth("(b0 or b1) and b2")
+    assert _eval_where("NOT (b0 AND b1)") == _python_truth("not (b0 and b1)")
+
+
+def test_mul_binds_tighter_than_add_and_left_assoc():
+    assert _eval_scalar("1 + 2 * 3") == 7
+    assert _eval_scalar("2 * 3 + 1") == 7
+    assert _eval_scalar("10 - 3 - 2") == 5          # left associative
+    assert _eval_scalar("2 * 3 * 4") == 24
+
+
+def test_comparison_binds_looser_than_arithmetic():
+    q = sqlparse.parse("SELECT * FROM t WHERE 1 + 2 * 3 < 8 AND b0")
+    conj = E.split_conjuncts(q.where)
+    assert len(conj) == 2 and isinstance(conj[0], E.BinOp)
+    assert conj[0].op == "<"
+
+
+def test_order_by_roundtrips_keys_and_directions():
+    q = sqlparse.parse("SELECT t.id FROM t ORDER BY t.a DESC, t.b, "
+                       "t.c ASC LIMIT 4")
+    assert [(o.expr.name, o.desc) for o in q.order_by] == \
+        [("t.a", True), ("t.b", False), ("t.c", False)]
+    assert q.limit == 4
+
+
+@pytest.mark.parametrize("bad", [
+    "SELECT * FROM t ORDER t.id",            # missing BY
+    "SELECT * FROM t ORDER BY",              # missing key
+    "SELECT * FROM t ORDER BY ,t.id",        # leading comma
+    "SELECT * FROM t ORDER BY t.id,",        # trailing comma
+    "SELECT * FROM t ORDER BY t.id DESC ASC",  # duplicate direction
+    "SELECT * FROM t LIMIT",                 # missing count
+    "SELECT * FROM t LIMIT 'x'",             # non-numeric
+    "SELECT * FROM t LIMIT 2.5",             # fractional
+    "SELECT * FROM t LIMIT -3",              # negative
+    "SELECT * FROM t LIMIT 3 ORDER BY t.id",  # clauses out of order
+    "SELECT * FROM t LIMIT 3 4",             # trailing garbage
+])
+def test_rejects_malformed_order_by_and_limit(bad):
+    with pytest.raises(SyntaxError):
+        sqlparse.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+_TERMS = [f"b{i}" for i in range(4)]
+
+
+def _render_bool(tokens) -> str:
+    """Flatten [(negate, term, op), ...] into a parenthesis-free boolean
+    expression; the parser must recover the NOT > AND > OR precedence."""
+    parts = []
+    for i, (neg, term, op) in enumerate(tokens):
+        if i:
+            parts.append(op)
+        parts.append(f"NOT {term}" if neg else term)
+    return " ".join(parts)
+
+
+@given(st.lists(st.tuples(st.booleans(), st.sampled_from(_TERMS),
+                          st.sampled_from(["AND", "OR"])),
+                min_size=1, max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_boolean_precedence_matches_python(tokens):
+    sql = _render_bool(tokens)
+    py = sql.replace("AND", "and").replace("OR", "or").replace("NOT", "not")
+    assert _eval_where(sql) == _python_truth(py)
+
+
+@given(st.lists(st.tuples(st.sampled_from(["+", "-", "*"]),
+                          st.integers(0, 9)),
+                min_size=1, max_size=7),
+       st.integers(0, 9))
+@settings(max_examples=60, deadline=None)
+def test_arithmetic_precedence_matches_python(pairs, first):
+    expr = str(first) + "".join(f" {op} {num}" for op, num in pairs)
+    assert _eval_scalar(expr) == eval(expr)
+
+
+@given(st.lists(st.tuples(st.sampled_from(_TERMS),
+                          st.sampled_from(["ASC", "DESC", ""])),
+                min_size=1, max_size=5),
+       st.integers(0, 99))
+@settings(max_examples=60, deadline=None)
+def test_order_by_limit_roundtrip(keys, n):
+    clause = ", ".join(f"{k} {d}".strip() for k, d in keys)
+    q = sqlparse.parse(f"SELECT * FROM t ORDER BY {clause} LIMIT {n}")
+    assert q.limit == n
+    assert [(o.expr.name, o.desc) for o in q.order_by] == \
+        [(k, d == "DESC") for k, d in keys]

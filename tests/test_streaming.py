@@ -1,0 +1,338 @@
+"""Partitioned streaming execution: LIMIT-aware early termination,
+prefetch cancellation, semantic ORDER BY / fused TopK, and the
+accounting invariants (no phantom calls, no double billing)."""
+import numpy as np
+import pytest
+
+from repro.core import AisqlEngine, Catalog, ExecConfig, OptimizerConfig
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core import sqlparse
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+from repro.tables.table import Table
+
+
+def _alternating_table(n=128, name="t"):
+    """Deterministic workload: _truth alternates True/False so each
+    partition of 2k rows yields exactly k survivors (difficulty ~0 keeps
+    the simulated oracle essentially exact)."""
+    return Table({
+        "id": np.arange(n),
+        "text": [f"[{name}:{i}] row text {i}" for i in range(n)],
+        "_truth": np.arange(n) % 2 == 0,
+        "_difficulty": np.full(n, 0.01),
+    }, name=name)
+
+
+AI_SQL = ("SELECT * FROM t WHERE "
+          "AI_FILTER(PROMPT('keep this row? {0}', t.text)) LIMIT 12")
+
+
+def _engine(cat, *, pipelined=False, **exec_kw):
+    return AisqlEngine(cat, make_simulated_client(pipelined=pipelined),
+                       executor=ExecConfig(**exec_kw))
+
+
+# ---------------------------------------------------------------------------
+# early termination
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_limit_matches_eager_rows_with_fewer_calls():
+    cat = Catalog({"t": _alternating_table(256)})
+    eager = _engine(cat)
+    base = eager.sql(AI_SQL)
+    part = _engine(cat, partitioned=True, partition_rows=32)
+    out = part.sql(AI_SQL)
+    assert out.column("t.id").tolist() == base.column("t.id").tolist()
+    assert part.last_report.ai_calls < eager.last_report.ai_calls / 2
+    assert part.last_report.ai_credits < eager.last_report.ai_credits / 2
+
+
+def test_partition_telemetry_and_explain_analyze_render():
+    cat = Catalog({"t": _alternating_table(256)})
+    eng = _engine(cat, partitioned=True, partition_rows=32)
+    eng.sql(AI_SQL)
+    rep = eng.last_report
+    p = rep.partitions
+    assert p is not None
+    assert p["partitions_total"] == 8
+    assert p["early_terminated"]
+    assert p["partitions_executed"] < p["partitions_total"]
+    assert (p["partitions_executed"] + p["partitions_cancelled"]
+            == p["partitions_total"])
+    assert p["rows_emitted"] == 12
+    assert p["rows_scanned"] == 32 * p["partitions_executed"]
+    text = rep.explain_analyze()
+    assert "partitions:" in text and "early termination" in text
+
+
+def test_no_phantom_calls_or_credits_on_early_termination():
+    """Operators' actual accounting must agree with the client meter even
+    when most partitions were cancelled mid-query."""
+    cat = Catalog({"t": _alternating_table(256)})
+    eng = _engine(cat, partitioned=True, partition_rows=32)
+    eng.sql(AI_SQL)
+    rep = eng.last_report
+    ai_ops = [op for op in rep.operators if op.actual_rows_in is not None]
+    assert ai_ops, "expected the AI predicate in QueryReport.operators"
+    # every dispatched call is attributed: per-operator credits sum to
+    # the metered total, evaluated rows match what was actually scanned
+    total = sum(op.actual_credits for op in ai_ops)
+    assert total == pytest.approx(rep.ai_credits, rel=1e-9)
+    assert sum(op.actual_rows_in for op in ai_ops) == rep.ai_calls
+    assert all(op.actual_rows_in <= op.est_rows_in for op in ai_ops)
+
+
+def test_partitioned_no_limit_matches_eager_exactly():
+    """Without a LIMIT the partition-pull loop must evaluate exactly the
+    eager chunked work (same rows, same credits) when sizes align."""
+    cat = Catalog({"t": _alternating_table(200)})
+    sql = ("SELECT * FROM t WHERE t.id < 150 AND "
+           "AI_FILTER(PROMPT('keep this row? {0}', t.text))")
+    eager = _engine(cat, chunk_rows=64, pilot_rows=0)
+    base = eager.sql(sql)
+    part = _engine(cat, partitioned=True, partition_rows=64, pilot_rows=0)
+    out = part.sql(sql)
+    assert out.column("t.id").tolist() == base.column("t.id").tolist()
+    assert part.last_report.ai_calls == eager.last_report.ai_calls
+    assert part.last_report.ai_credits == pytest.approx(
+        eager.last_report.ai_credits, rel=1e-9)
+
+
+def test_streaming_bounds_ai_projection():
+    """Limit(Project) with an AI item: the projection runs only on the
+    surviving k rows in partitioned mode."""
+    cat = Catalog({"t": _alternating_table(192)})
+    sql = ("SELECT t.id, AI_COMPLETE(PROMPT('summarize {0}', t.text)) "
+           "FROM t LIMIT 4")
+    eager = _engine(cat)
+    base = eager.sql(sql)
+    part = _engine(cat, partitioned=True, partition_rows=32)
+    out = part.sql(sql)
+    assert out.column("t.id").tolist() == base.column("t.id").tolist()
+    assert part.last_report.ai_calls == 4
+    assert eager.last_report.ai_calls == 192
+
+
+def test_prefetch_cancellation_never_bills_cancelled_requests():
+    """With lookahead, a partition queued speculatively but never
+    dispatched is withdrawn on early termination at zero cost."""
+    cat = Catalog({"t": _alternating_table(128)})
+    eng = _engine(cat, pipelined=True, partitioned=True,
+                  partition_rows=16, partition_lookahead=3)
+    out = eng.sql(AI_SQL)
+    assert out.num_rows == 12
+    rep = eng.last_report
+    # partitions 0-2 dispatched together (lookahead window), the limit
+    # is met at partition 1, and the partition queued while processing
+    # it (start 48) is cancelled before dispatch
+    assert rep.partitions["partitions_executed"] == 2
+    assert rep.partitions["early_terminated"]
+    assert rep.partitions["cancelled_requests"] == 16
+    assert rep.pipeline["cancelled"] == 16
+    # dispatched = 3 prefetched partitions; the cancelled one is not billed
+    assert rep.ai_calls == 48
+    ai_ops = [op for op in rep.operators if op.actual_credits is not None]
+    assert sum(op.actual_credits for op in ai_ops) == pytest.approx(
+        rep.ai_credits, rel=1e-9)
+
+
+def test_pilot_rows_not_rebilled_in_partitioned_mode():
+    cat = Catalog({"articles": D.skewed_articles(400)})
+    sql = ("SELECT * FROM articles AS a WHERE "
+           "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+           "AI_FILTER(PROMPT('narrow? {0}', a.summary)) LIMIT 10")
+    eng = _engine(cat, partitioned=True, partition_rows=100,
+                  pilot_rows=32, min_rows_for_pilot=64)
+    out = eng.sql(sql)
+    assert out.num_rows == 10
+    rep = eng.last_report
+    assert rep.pilot is not None and rep.pilot["sampled_rows"] == 32
+    for op in rep.operators:
+        if op.actual_rows_in is not None:
+            assert op.actual_rows_in <= 400      # never double-counted
+    total = sum(op.actual_credits for op in rep.operators
+                if op.actual_credits is not None)
+    assert total == pytest.approx(rep.ai_credits, rel=1e-9)
+
+
+def test_cascade_flows_through_partition_pull():
+    cat = Catalog({"t": _alternating_table(256)})
+    eng = _engine(cat, partitioned=True, partition_rows=64,
+                  use_cascade=True)
+    out = eng.sql(AI_SQL)
+    assert out.num_rows == 12
+    assert eng.cascades, "cascade should have run inside the pull loop"
+    assert eng.last_report.partitions["early_terminated"]
+
+
+# ---------------------------------------------------------------------------
+# ORDER BY: structured, alias, aggregate output, semantic top-k
+# ---------------------------------------------------------------------------
+
+
+def test_order_by_structured_multi_key():
+    rng = np.random.default_rng(7)
+    t = Table({"id": np.arange(40), "g": rng.integers(0, 4, 40),
+               "v": rng.random(40)})
+    eng = _engine(Catalog({"t": t}))
+    out = eng.sql("SELECT t.id, t.g, t.v FROM t ORDER BY t.g ASC, t.v DESC")
+    expect = sorted(range(40), key=lambda i: (t["g"][i], -t["v"][i]))
+    assert out.column("t.id").tolist() == [int(t["id"][i]) for i in expect]
+
+
+def test_order_by_select_alias_and_limit():
+    t = Table({"id": np.arange(10), "v": np.arange(10)[::-1].astype(float)})
+    eng = _engine(Catalog({"t": t}))
+    out = eng.sql("SELECT t.id AS ident, t.v AS score FROM t "
+                  "ORDER BY score ASC LIMIT 3")
+    assert out.column("ident").tolist() == [9, 8, 7]
+
+
+def test_order_by_aggregate_output():
+    t = Table({"id": np.arange(30),
+               "cat": np.repeat(["a", "b", "c"], [14, 10, 6])})
+    eng = _engine(Catalog({"t": t}))
+    out = eng.sql("SELECT t.cat, COUNT(*) FROM t GROUP BY t.cat "
+                  "ORDER BY count DESC")
+    assert out.column("count").tolist() == [14, 10, 6]
+    assert out.column("t.cat").tolist() == ["a", "b", "c"]
+
+
+def test_semantic_order_by_fuses_topk_and_prefilters():
+    cat = Catalog({"t": _alternating_table(200)})
+    eng = _engine(cat)
+    sql = ("SELECT t.id FROM t ORDER BY "
+           "AI_SCORE(PROMPT('is this row relevant? {0}', t.text)) DESC "
+           "LIMIT 8")
+    plan = eng.plan(sql)
+
+    def has_topk(n):
+        return isinstance(n, P.TopK) or any(has_topk(c)
+                                            for c in n.children())
+    assert has_topk(plan)
+    out = eng.sql(sql)
+    assert out.num_rows == 8
+    rep = eng.last_report
+    # proxy scored everything, the oracle only the escalated candidates
+    assert rep.ai_calls == 200 + 24
+    assert any("topk-prefilter" in ev for ev in rep.reoptimizations)
+    # with near-zero difficulty the top rows should be true positives
+    truth = dict(zip(cat.table("t")["id"].tolist(),
+                     cat.table("t")["_truth"].tolist()))
+    hits = sum(truth[i] for i in out.column("t.id").tolist())
+    assert hits >= 6
+
+
+def test_topk_prefilter_off_scores_everything_with_oracle():
+    cat = Catalog({"t": _alternating_table(120)})
+    eng = _engine(cat, topk_prefilter=False)
+    out = eng.sql("SELECT t.id FROM t ORDER BY "
+                  "AI_SCORE(PROMPT('relevant? {0}', t.text)) DESC LIMIT 5")
+    assert out.num_rows == 5
+    assert eng.last_report.ai_calls == 120
+    assert not any("topk-prefilter" in ev
+                   for ev in eng.last_report.reoptimizations)
+
+
+def test_unfused_sort_full_scores_then_truncates():
+    cat = Catalog({"t": _alternating_table(96)})
+    eng = AisqlEngine(cat, make_simulated_client(),
+                      optimizer=OptimizerConfig(enable_topk_fusion=False))
+    out = eng.sql("SELECT t.id FROM t ORDER BY "
+                  "AI_SCORE(PROMPT('relevant? {0}', t.text)) DESC LIMIT 5")
+    assert out.num_rows == 5
+    assert eng.last_report.ai_calls == 96
+
+
+def test_ai_score_recorded_in_stats_and_operators():
+    cat = Catalog({"t": _alternating_table(150)})
+    eng = _engine(cat)
+    eng.sql("SELECT t.id FROM t ORDER BY "
+            "AI_SCORE(PROMPT('relevant? {0}', t.text)) DESC LIMIT 6")
+    rep = eng.last_report
+    score_ops = [op for op in rep.operators if "AI_SCORE" in op.operator]
+    assert len(score_ops) == 2          # proxy + oracle populations
+    assert all(op.actual_rows_in for op in score_ops)
+    total = sum(op.actual_credits for op in score_ops)
+    assert total == pytest.approx(rep.ai_credits, rel=1e-9)
+    # the StatsStore learned both populations under distinct fingerprints
+    fps = [k for k in eng.stats.keys() if k.startswith("AI_SCORE|")]
+    assert len(fps) == 2
+
+
+def test_ai_score_in_select_list_and_order_by_alias():
+    cat = Catalog({"t": _alternating_table(60)})
+    eng = _engine(cat)
+    out = eng.sql("SELECT t.id, AI_SCORE(PROMPT('relevant? {0}', t.text)) "
+                  "AS s FROM t ORDER BY s DESC LIMIT 5")
+    assert out.num_rows == 5 and "s" in out.column_names
+    scores = out.column("s").tolist()
+    assert scores == sorted(scores, reverse=True)
+    assert all(0.0 <= v <= 1.0 for v in scores)
+
+
+def test_prefetch_size_flush_spend_is_attributed():
+    """A size-threshold flush that dispatches prefetched partitions while
+    they are being *submitted* must not orphan their credits: per-op
+    credits still sum to the meter and learned cost/row stays real."""
+    from repro.inference.pipeline import PipelineConfig
+    cat = Catalog({"t": _alternating_table(256)})
+    client = make_simulated_client(pipeline=PipelineConfig(max_batch=32))
+    eng = AisqlEngine(cat, client, executor=ExecConfig(
+        partitioned=True, partition_rows=32, partition_lookahead=3))
+    eng.sql(AI_SQL)
+    rep = eng.last_report
+    ai_ops = [op for op in rep.operators if op.actual_credits is not None]
+    assert sum(op.actual_credits for op in ai_ops) == pytest.approx(
+        rep.ai_credits, rel=1e-9)
+    # the learned cost per row must reflect the real spend, not ~0
+    fp = [k for k in eng.stats.keys() if k.startswith("AI_FILTER|")][0]
+    obs = eng.stats.get(fp)
+    assert obs.cost_per_row > 1e-7
+
+
+def test_topk_estimates_follow_prefilter_config():
+    """With the prefilter disabled the planner must price (and report)
+    the full oracle scan, not a phantom proxy pass."""
+    cat = Catalog({"t": _alternating_table(120)})
+    sql = ("SELECT t.id FROM t ORDER BY "
+           "AI_SCORE(PROMPT('relevant? {0}', t.text)) DESC LIMIT 5")
+    on = _engine(cat)
+    on.sql(sql)
+    off = _engine(cat, topk_prefilter=False)
+    off.sql(sql)
+    on_ops = [op for op in on.last_report.operators
+              if "AI_SCORE" in op.operator]
+    off_ops = [op for op in off.last_report.operators
+               if "AI_SCORE" in op.operator]
+    assert len(on_ops) == 2 and len(off_ops) == 1
+    assert off_ops[0].est_rows_in == 120
+    assert off_ops[0].actual_rows_in == 120
+    assert "proxy" not in off_ops[0].operator
+    # est cost of the disabled path reflects the full oracle scan
+    assert off.last_report.est_llm_cost > on.last_report.est_llm_cost
+
+
+def test_order_by_parse_rejects_malformed():
+    for bad in ("SELECT * FROM t ORDER t.id",
+                "SELECT * FROM t ORDER BY",
+                "SELECT * FROM t ORDER BY t.id,",
+                "SELECT * FROM t LIMIT t.id",
+                "SELECT * FROM t LIMIT 3.5",
+                "SELECT * FROM t LIMIT -1",
+                "SELECT * FROM t LIMIT 5 ORDER BY t.id"):
+        with pytest.raises(SyntaxError):
+            sqlparse.parse(bad)
+
+
+def test_order_by_plan_placement():
+    q = sqlparse.parse("SELECT t.id FROM t ORDER BY t.v DESC LIMIT 4")
+    node = P.build_plan(q)
+    assert isinstance(node, P.Limit)
+    assert isinstance(node.child, P.Project)
+    assert isinstance(node.child.child, P.Sort)
+    key = node.child.child.keys[0]
+    assert key.desc and isinstance(key.expr, E.Column)
