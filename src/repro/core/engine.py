@@ -278,7 +278,15 @@ class AisqlEngine:
         # estimates are frozen pre-execution so est-vs-actual is honest
         est_cost = self.cost.est_llm_cost(node)
         operators = self._collect_estimates(node)
-        out = self.exec.execute(node)
+        try:
+            out = self.exec.execute(node)
+        except Exception:
+            # a failed query must not leave queued requests behind: a
+            # later barrier (possibly another session's) would dispatch
+            # and bill them on behalf of a query that produced nothing
+            if self.client.pipeline is not None:
+                self.client.cancel_queued()
+            raise
         self.client.flush()        # drain any still-queued pipeline work
         dt = time.perf_counter() - t0
         delta = self.client.meter_delta(before)

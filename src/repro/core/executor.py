@@ -695,43 +695,55 @@ class Executor:
                "partitions_cancelled": 0, "partition_rows": psize,
                "rows_scanned": 0, "rows_emitted": 0,
                "early_terminated": False, "cancelled_requests": 0}
-        for i, lo in enumerate(starts):
-            part = np.arange(lo, min(lo + psize, n), dtype=np.int64)
-            tel["rows_scanned"] += int(len(part))
-            self._prefetch_first_pred(table, order, known, starts, i,
-                                      psize, n, prefetched)
-            alive = part
-            for pred in order:
-                if not len(alive):
+        try:
+            for i, lo in enumerate(starts):
+                part = np.arange(lo, min(lo + psize, n), dtype=np.int64)
+                tel["rows_scanned"] += int(len(part))
+                self._prefetch_first_pred(table, order, known, starts, i,
+                                          psize, n, prefetched)
+                alive = part
+                for pred in order:
+                    if not len(alive):
+                        break
+                    pf = prefetched.get(lo)
+                    if pf is not None and pf[0] == self._pred_key(pred):
+                        _, rows, handle = prefetched.pop(lo)
+                        res = self._consume_prefetched(pred, rows, handle,
+                                                       alive)
+                    else:
+                        res = self._timed_pred(pred, table, alive, known)
+                    alive = alive[res]
+                # a prefetch this partition never reached (rows died first,
+                # or a reorder changed the chain): withdraw it
+                leftover = prefetched.pop(lo, None)
+                if leftover is not None:
+                    tel["cancelled_requests"] += \
+                        self._cancel_handles([leftover])
+                tel["partitions_executed"] += 1
+                consumer.add(alive)
+                # adaptive reordering between partitions (§5.1 runtime)
+                if self.cfg.adaptive_reorder and order and lo + psize < n:
+                    ranked = sorted(order,
+                                    key=lambda p: self._stats_for(p).rank)
+                    if ranked != order:
+                        self.reorder_events.append(
+                            f"partition[{i}]: reorder -> "
+                            + ", ".join(self._pred_key(p) for p in ranked))
+                        order = ranked
+                if consumer.satisfied:
+                    remaining = len(starts) - (i + 1)
+                    if remaining or prefetched:
+                        tel["early_terminated"] = True
+                    tel["partitions_cancelled"] = remaining
                     break
-                pf = prefetched.get(lo)
-                if pf is not None and pf[0] == self._pred_key(pred):
-                    _, rows, handle = prefetched.pop(lo)
-                    res = self._consume_prefetched(pred, rows, handle, alive)
-                else:
-                    res = self._timed_pred(pred, table, alive, known)
-                alive = alive[res]
-            # a prefetch this partition never reached (rows died first,
-            # or a reorder changed the chain): withdraw it
-            leftover = prefetched.pop(lo, None)
-            if leftover is not None:
-                tel["cancelled_requests"] += self._cancel_handles([leftover])
-            tel["partitions_executed"] += 1
-            consumer.add(alive)
-            # adaptive reordering between partitions (§5.1 runtime)
-            if self.cfg.adaptive_reorder and order and lo + psize < n:
-                ranked = sorted(order, key=lambda p: self._stats_for(p).rank)
-                if ranked != order:
-                    self.reorder_events.append(
-                        f"partition[{i}]: reorder -> "
-                        + ", ".join(self._pred_key(p) for p in ranked))
-                    order = ranked
-            if consumer.satisfied:
-                remaining = len(starts) - (i + 1)
-                if remaining or prefetched:
-                    tel["early_terminated"] = True
-                tel["partitions_cancelled"] = remaining
-                break
+        except Exception:
+            # a mid-query failure (e.g. a predicate batch that exhausted
+            # its retries) must withdraw still-queued speculative
+            # prefetches: abandoned in the pipeline they would be
+            # dispatched — and billed — at some later barrier
+            self._cancel_handles(prefetched.values())
+            prefetched.clear()
+            raise
         tel["cancelled_requests"] += self._cancel_handles(
             prefetched.values())
         prefetched.clear()
@@ -822,7 +834,9 @@ class Executor:
             pending = [f for f in handle.futures
                        if not f.done() and not f.cancelled()]
             if pending:
-                total += pipe.cancel(pending)
+                # owner= moves the billing tag off this session when a
+                # dedup-shared item survives for another session's sake
+                total += pipe.cancel(pending, owner=self.client.owner)
         return total
 
     def _note_partitions(self, tel: Dict[str, Any]) -> None:

@@ -1,0 +1,569 @@
+"""Concurrent multi-tenant query serving — the production front of the
+engine (paper §2's "heavy traffic" premise made concrete).
+
+`AisqlEngine.sql()` is a blocking single-query call; this module turns a
+catalog + scheduler into a **serving runtime** that keeps N queries in
+flight at once while sharing the expensive state across all of them:
+
+  * one `RequestPipeline` (thread-safe, single-dispatcher) shared by
+    every session, so coalescing, dedup and the TTL'd LRU result cache
+    work **across** concurrent queries and tenants — the repeated
+    predicates of a production workload are answered once and served
+    from cache everywhere else (`PipelineStats.cross_query_hits`);
+  * one `StatsStore`, so every session plans with the statistics every
+    other session has already learned;
+  * one `Scheduler` + backend pool, with the pipeline's bounded
+    retry-with-backoff riding the scheduler's replica retries — an
+    injected transient fault re-dispatches, it never drops a request or
+    bills it twice.
+
+Admission is **per-tenant fair share**: each tenant has a `TenantPolicy`
+with a credit budget (hard spend ceiling, checked at admission) and a
+token bucket (``queries_per_s`` + ``burst``) that rate-limits how fast
+its queries may start.  Billing is exact: the shared pipeline routes
+each dispatched result to the owning session's meter (registered per
+owner at dispatch time), so the sum of per-tenant credit meters always
+equals the pipeline's dispatch spend — dedup/cache hits cost the hitting
+tenant nothing, exactly the §4 accounting the paper surfaces.
+
+Lifecycle: ``submit(tenant, sql)`` returns a `QueryTicket` immediately;
+a pool of worker threads admits and executes tickets on per-tenant
+`QuerySession`s (checked out per query, so one tenant may have several
+queries in flight, each on its own executor).  ``drain()`` waits for all
+submitted work; ``report()`` distils per-tenant spend, queue waits and
+latency percentiles plus the shared pipeline/scheduler fault and cache
+telemetry into a `ServingReport`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cost import Catalog
+from repro.core.engine import AisqlEngine, QueryReport
+from repro.core.executor import ExecConfig
+from repro.core.optimizer import OptimizerConfig
+from repro.core.stats import StatsStore
+from repro.inference.api import CortexClient
+from repro.inference.pipeline import PipelineConfig, RequestPipeline
+from repro.inference.scheduler import Scheduler
+from repro.tables.table import Table
+
+
+class AdmissionError(RuntimeError):
+    """A query was refused at admission (tenant exhausted its credit
+    budget); raised by ``QueryTicket.result()``."""
+
+
+# ---------------------------------------------------------------------------
+# tenants: policy, token bucket, meter
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TenantPolicy:
+    """Fair-share admission knobs for one tenant.
+
+    ``credit_budget``: hard ceiling on the tenant's dispatched AI-credit
+    spend; a query arriving after the meter reaches it is rejected with
+    `AdmissionError` (None = unlimited).  ``queries_per_s`` / ``burst``
+    parameterize a token bucket: each admitted query consumes one token,
+    tokens refill at ``queries_per_s`` up to ``burst`` — a tenant may
+    burst, then settles to its fair rate while other tenants' queries
+    interleave.
+    """
+    credit_budget: Optional[float] = None
+    queries_per_s: float = math.inf
+    burst: int = 8
+
+
+class TokenBucket:
+    """Thread-safe token bucket; ``acquire`` blocks until a token is
+    available and returns the seconds waited."""
+
+    def __init__(self, rate: float, burst: int):
+        self.rate = float(rate)
+        self.capacity = max(int(burst), 1)
+        self._tokens = float(self.capacity)
+        self._updated = time.monotonic()
+        self._lock = threading.Lock()
+
+    def try_acquire(self) -> Tuple[bool, float]:
+        """Non-blocking: ``(True, 0.0)`` and one token consumed, or
+        ``(False, seconds_until_next_token)``."""
+        with self._lock:
+            now = time.monotonic()
+            if self.rate != math.inf:
+                self._tokens = min(
+                    self.capacity,
+                    self._tokens + (now - self._updated) * self.rate)
+            self._updated = now
+            if self.rate == math.inf or self._tokens >= 1.0:
+                if self.rate != math.inf:
+                    self._tokens -= 1.0
+                return True, 0.0
+            return False, (1.0 - self._tokens) / max(self.rate, 1e-9)
+
+    def acquire(self) -> float:
+        t0 = time.perf_counter()
+        while True:
+            ok, shortfall = self.try_acquire()
+            if ok:
+                return time.perf_counter() - t0
+            time.sleep(min(shortfall, 0.05))
+
+
+class TenantMeter:
+    """Per-tenant serving accounting: credits billed at dispatch, query
+    counts by outcome, queue-wait and latency samples."""
+
+    def __init__(self, name: str, policy: TenantPolicy):
+        self.name = name
+        self.policy = policy
+        self.bucket = TokenBucket(policy.queries_per_s, policy.burst)
+        self.lock = threading.Lock()
+        self.credits = 0.0          # dispatch-billed AI credits
+        self.dispatched_calls = 0   # LLM requests billed to this tenant
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        # bounded sample windows (long-running engines must not grow
+        # without bound; percentiles cover the most recent queries)
+        self.queue_waits: List[float] = []
+        self.latencies: List[float] = []
+
+    MAX_SAMPLES = 4096
+
+    def record(self, queue_wait_s: float, latency_s: float) -> None:
+        with self.lock:
+            self.completed += 1
+            self.queue_waits.append(queue_wait_s)
+            self.latencies.append(latency_s)
+            if len(self.latencies) > self.MAX_SAMPLES:
+                del self.queue_waits[:self.MAX_SAMPLES // 2]
+                del self.latencies[:self.MAX_SAMPLES // 2]
+
+    def bill(self, results) -> None:
+        """Dispatch-time hook: exact spend attribution (conservation:
+        summing this over tenants gives the pipeline's dispatch spend)."""
+        with self.lock:
+            self.dispatched_calls += len(results)
+            for r in results:
+                self.credits += r.credits
+
+    @property
+    def over_budget(self) -> bool:
+        b = self.policy.credit_budget
+        return b is not None and self.credits >= b
+
+
+# ---------------------------------------------------------------------------
+# tickets and sessions
+# ---------------------------------------------------------------------------
+
+
+class QueryTicket:
+    """Handle for one submitted query; resolves to a `Table` (or raises
+    the query's error) on ``result()``."""
+
+    def __init__(self, tenant: str, sql: str):
+        self.tenant = tenant
+        self.sql = sql
+        self.submitted_at = time.perf_counter()
+        self.queue_wait_s = 0.0     # submit -> execution start
+        self.wall_s = 0.0           # execution only
+        self.report: Optional[QueryReport] = None
+        self._done = threading.Event()
+        self._table: Optional[Table] = None
+        self._error: Optional[Exception] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def exception(self) -> Optional[Exception]:
+        return self._error
+
+    def result(self, timeout: Optional[float] = None) -> Table:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"query not finished after {timeout}s: {self.sql[:60]!r}")
+        if self._error is not None:
+            raise self._error
+        assert self._table is not None
+        return self._table
+
+
+class QuerySession:
+    """One tenant's execution context: a private `AisqlEngine` (its own
+    executor/optimizer state) over a `CortexClient` that shares the
+    serving runtime's pipeline, scheduler and stats store.  Sessions are
+    single-threaded by construction — the serving engine checks one out
+    per in-flight query and returns it afterwards."""
+
+    def __init__(self, owner: str, tenant: str, meter: TenantMeter,
+                 catalog: Catalog, scheduler: Scheduler,
+                 pipeline: RequestPipeline, stats: StatsStore,
+                 cfg: "ServingConfig"):
+        self.owner = owner
+        self.tenant = tenant
+        # tenant billing chains onto the client meter in one registered
+        # hook: the pipeline calls exactly one hook per dispatched
+        # result, so spend lands on both the client (QueryReport) and
+        # the tenant (ServingReport) exactly once
+        self.client = CortexClient(
+            scheduler, default_model=cfg.default_model,
+            proxy_model=cfg.proxy_model, pipeline=pipeline, owner=owner,
+            on_dispatch_extra=meter.bill)
+        self.engine = AisqlEngine(
+            catalog, self.client, optimizer=cfg.optimizer,
+            executor=cfg.executor, stats=stats)
+
+    def run(self, sql: str) -> Tuple[Table, Optional[QueryReport]]:
+        out = self.engine.sql(sql)
+        return out, self.engine.last_report
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    return ys[min(int(q * len(ys)), len(ys) - 1)]
+
+
+@dataclasses.dataclass
+class TenantReport:
+    """One tenant's slice of a `ServingReport`."""
+    tenant: str
+    queries: int                    # submitted
+    completed: int
+    failed: int
+    rejected: int                   # refused at admission (budget)
+    credits_spent: float            # dispatch-billed AI credits
+    credit_budget: Optional[float]
+    dispatched_calls: int           # LLM requests billed to this tenant
+    queue_wait_p50_s: float
+    queue_wait_p95_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """Everything the serving runtime observed: per-tenant accounting
+    plus the shared pipeline/scheduler/backend telemetry."""
+    tenants: Dict[str, TenantReport]
+    queries: int                    # total submitted
+    total_credits: float            # sum of tenant meters (== dispatch spend)
+    backend_credits: Optional[float]  # backends' own meter (conservation)
+    submitted_requests: int         # requests entering the shared pipeline
+    dispatched_requests: int        # requests actually sent to engines
+    dedup_hits: int                 # in-flight + cache hits
+    cache_hits: int                 # memoized-result hits
+    cross_query_hits: int           # hits served across sessions/tenants
+    cache_expired: int              # TTL evictions
+    cancelled_requests: int         # withdrawn pre-dispatch (never billed)
+    retries: int                    # pipeline batch re-dispatches
+    scheduler_retries: int          # scheduler-level replica retries
+    scheduler_timeouts: int         # of those, engine timeouts
+    failed_requests: int            # requests that exhausted all retries
+    queue_wait_p50_s: float         # across all completed queries
+    queue_wait_p95_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+
+    def render(self) -> str:
+        lines = [
+            f"-- serving: {self.queries} queries, "
+            f"{self.total_credits:.6g} credits "
+            f"({self.dispatched_requests}/{self.submitted_requests} "
+            f"requests dispatched, {self.dedup_hits} dedup hits, "
+            f"{self.cross_query_hits} cross-query)",
+            f"-- faults: {self.retries} pipeline retries, "
+            f"{self.scheduler_retries} scheduler retries "
+            f"({self.scheduler_timeouts} timeouts), "
+            f"{self.failed_requests} permanent failures, "
+            f"{self.cancelled_requests} cancelled",
+            f"-- latency: queue p50/p95 {self.queue_wait_p50_s:.3f}/"
+            f"{self.queue_wait_p95_s:.3f}s, exec p50/p95 "
+            f"{self.latency_p50_s:.3f}/{self.latency_p95_s:.3f}s",
+        ]
+        for t in self.tenants.values():
+            budget = ("∞" if t.credit_budget is None
+                      else f"{t.credit_budget:.4g}")
+            lines.append(
+                f"--   tenant {t.tenant}: {t.completed}/{t.queries} ok "
+                f"({t.rejected} rejected, {t.failed} failed), "
+                f"{t.credits_spent:.6g}/{budget} credits, "
+                f"{t.dispatched_calls} calls")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the serving engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Policy for a `ServingEngine`."""
+    workers: int = 4
+    # shared-pipeline policy; the 300s TTL ages cross-query answers out
+    pipeline: PipelineConfig = dataclasses.field(
+        default_factory=lambda: PipelineConfig(cache_ttl_s=300.0))
+    executor: Optional[ExecConfig] = None
+    optimizer: Optional[OptimizerConfig] = None
+    default_policy: TenantPolicy = dataclasses.field(
+        default_factory=TenantPolicy)
+    default_model: str = "oracle-70b"
+    proxy_model: str = "proxy-8b"
+
+
+class ServingEngine:
+    """Multi-tenant concurrent front door: ``submit`` queries, ``drain``,
+    inspect the `ServingReport`.  Usable as a context manager."""
+
+    def __init__(self, catalog: Catalog, scheduler: Scheduler, *,
+                 cfg: Optional[ServingConfig] = None,
+                 stats: Optional[StatsStore] = None,
+                 tenants: Optional[Dict[str, TenantPolicy]] = None):
+        self.catalog = catalog
+        self.scheduler = scheduler
+        self.cfg = cfg or ServingConfig()
+        self.stats = stats if stats is not None else StatsStore()
+        self.pipeline = RequestPipeline(scheduler, self.cfg.pipeline)
+        self._lock = threading.Lock()
+        self.tenants: Dict[str, TenantMeter] = {
+            name: TenantMeter(name, pol)
+            for name, pol in (tenants or {}).items()}
+        self._idle_sessions: Dict[str, List[QuerySession]] = {}
+        self._session_ids = itertools.count(1)
+        self.sessions_created = 0
+        # counter, not a ticket list: retaining tickets would pin every
+        # completed query's result table for the engine's lifetime
+        self._submitted = 0
+        self._queue: "queue.Queue[Optional[QueryTicket]]" = queue.Queue()
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"aisql-serve-{i}")
+            for i in range(max(self.cfg.workers, 1))]
+        for w in self._workers:
+            w.start()
+
+    @classmethod
+    def simulated(cls, catalog: Catalog, *, seed: int = 0,
+                  fault_rate: float = 0.0, timeout_rate: float = 0.0,
+                  replicas: int = 1, **kw) -> "ServingEngine":
+        """Convenience: a serving engine over the calibrated simulator
+        (optionally with injected transient faults/timeouts)."""
+        from repro.inference.simulator import SimulatedBackend
+        sched = Scheduler()
+        for rep in range(max(replicas, 1)):
+            sched.register(SimulatedBackend(
+                seed=seed, fault_rate=fault_rate, timeout_rate=timeout_rate,
+                fault_seed=seed + 101 * rep))
+        return cls(catalog, sched, **kw)
+
+    # -- context manager ----------------------------------------------
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- tenants and sessions -----------------------------------------
+    def tenant(self, name: str) -> TenantMeter:
+        with self._lock:
+            meter = self.tenants.get(name)
+            if meter is None:
+                meter = TenantMeter(
+                    name, dataclasses.replace(self.cfg.default_policy))
+                self.tenants[name] = meter
+            return meter
+
+    def _checkout(self, tenant: str) -> QuerySession:
+        meter = self.tenant(tenant)
+        with self._lock:
+            pool = self._idle_sessions.setdefault(tenant, [])
+            if pool:
+                return pool.pop()
+            owner = f"{tenant}#{next(self._session_ids)}"
+            self.sessions_created += 1
+        return QuerySession(owner, tenant, meter, self.catalog,
+                            self.scheduler, self.pipeline, self.stats,
+                            self.cfg)
+
+    def _checkin(self, tenant: str, session: QuerySession) -> None:
+        with self._lock:
+            self._idle_sessions.setdefault(tenant, []).append(session)
+
+    # -- submission / draining ----------------------------------------
+    def submit(self, tenant: str, sql: str) -> QueryTicket:
+        """Enqueue one query for ``tenant``; returns immediately."""
+        if self._closed:
+            raise RuntimeError("ServingEngine is closed")
+        ticket = QueryTicket(tenant, sql)
+        meter = self.tenant(tenant)
+        with meter.lock:
+            meter.submitted += 1
+        with self._lock:
+            self._submitted += 1
+        self._queue.put(ticket)
+        return ticket
+
+    def run_all(self, workload: List[Tuple[str, str]]) -> List[QueryTicket]:
+        """Submit a ``[(tenant, sql), ...]`` workload and drain it."""
+        tickets = [self.submit(tenant, sql) for tenant, sql in workload]
+        self.drain()
+        return tickets
+
+    def drain(self) -> None:
+        """Block until every submitted ticket has finished."""
+        self._queue.join()
+
+    def close(self) -> None:
+        """Drain, then stop the worker threads."""
+        if self._closed:
+            return
+        self._closed = True
+        self.drain()
+        for _ in self._workers:
+            self._queue.put(None)
+        for w in self._workers:
+            w.join(timeout=30.0)
+
+    # -- the worker loop ----------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            ticket = self._queue.get()
+            if ticket is None:
+                self._queue.task_done()
+                return
+            requeued = False
+            try:
+                requeued = self._serve(ticket)
+            finally:
+                if not requeued:
+                    ticket._done.set()
+                self._queue.task_done()
+
+    def _serve(self, ticket: QueryTicket) -> bool:
+        """Admit + execute one ticket.  Returns True when the ticket was
+        re-enqueued (rate-limited, token not yet available) — a worker
+        must never sleep on one tenant's bucket while other tenants'
+        queries are runnable (head-of-line blocking)."""
+        meter = self.tenant(ticket.tenant)
+        try:
+            if meter.over_budget:
+                with meter.lock:
+                    meter.rejected += 1
+                raise AdmissionError(
+                    f"tenant {ticket.tenant!r} exhausted its credit "
+                    f"budget ({meter.credits:.6g} >= "
+                    f"{meter.policy.credit_budget:.6g})")
+            admitted, shortfall = meter.bucket.try_acquire()
+            if not admitted:            # fair-share rate limiting
+                if meter.bucket.rate <= 0.0:
+                    # a zero-rate (paused) tenant's bucket never refills:
+                    # requeueing would spin forever and hang drain()
+                    with meter.lock:
+                        meter.rejected += 1
+                    raise AdmissionError(
+                        f"tenant {ticket.tenant!r} is paused "
+                        f"(queries_per_s=0) and its burst is exhausted")
+                # brief bounded pause (spin guard when only this
+                # tenant's work remains), then back of the queue
+                time.sleep(min(shortfall, 0.02))
+                self._queue.put(ticket)
+                return True
+            ticket.queue_wait_s = time.perf_counter() - ticket.submitted_at
+            session = self._checkout(ticket.tenant)
+            try:
+                t0 = time.perf_counter()
+                table, report = session.run(ticket.sql)
+                ticket.wall_s = time.perf_counter() - t0
+                ticket.report = report
+                ticket._table = table
+            finally:
+                self._checkin(ticket.tenant, session)
+            meter.record(ticket.queue_wait_s, ticket.wall_s)
+        except AdmissionError as e:
+            ticket._error = e
+        except Exception as e:          # the query's own failure
+            ticket._error = e
+            with meter.lock:
+                meter.failed += 1
+        return False
+
+    # -- reporting -----------------------------------------------------
+    def backend_credits(self) -> Optional[float]:
+        """Sum of the backends' own credit meters (independent source
+        for the conservation check); None if no backend exposes one."""
+        total, seen, found = 0.0, set(), False
+        for reps in self.scheduler._replicas.values():
+            for e in reps:
+                if id(e) not in seen and hasattr(e, "total_credits"):
+                    total += e.total_credits
+                    seen.add(id(e))
+                    found = True
+        return total if found else None
+
+    def report(self) -> ServingReport:
+        """Distil the run so far.  Exact cross-field invariants (e.g.
+        ``total_credits == backend_credits``, submitted == dispatched +
+        dedup + cancelled + failed) hold for a report taken after
+        ``drain()``; a report taken mid-flight is a best-effort sample
+        (the pipeline counters themselves are snapshotted atomically)."""
+        with self._lock:
+            meters = list(self.tenants.values())
+            n_tickets = self._submitted
+        tenant_reports: Dict[str, TenantReport] = {}
+        all_waits: List[float] = []
+        all_lats: List[float] = []
+        total_credits = 0.0
+        for m in meters:
+            with m.lock:
+                waits, lats = list(m.queue_waits), list(m.latencies)
+                tenant_reports[m.name] = TenantReport(
+                    tenant=m.name, queries=m.submitted,
+                    completed=m.completed, failed=m.failed,
+                    rejected=m.rejected, credits_spent=m.credits,
+                    credit_budget=m.policy.credit_budget,
+                    dispatched_calls=m.dispatched_calls,
+                    queue_wait_p50_s=_percentile(waits, 0.50),
+                    queue_wait_p95_s=_percentile(waits, 0.95),
+                    latency_p50_s=_percentile(lats, 0.50),
+                    latency_p95_s=_percentile(lats, 0.95))
+                total_credits += m.credits
+            all_waits.extend(waits)
+            all_lats.extend(lats)
+        ps = self.pipeline.stats_snapshot()   # atomic under pipeline lock
+        return ServingReport(
+            tenants=tenant_reports, queries=n_tickets,
+            total_credits=total_credits,
+            backend_credits=self.backend_credits(),
+            submitted_requests=ps["submitted"],
+            dispatched_requests=ps["dispatched"],
+            dedup_hits=ps["dedup_hits"], cache_hits=ps["cache_hits"],
+            cross_query_hits=ps["cross_query_hits"],
+            cache_expired=ps["cache_expired"],
+            cancelled_requests=ps["cancelled"],
+            retries=ps["retries"],
+            scheduler_retries=self.scheduler.retries,
+            scheduler_timeouts=self.scheduler.timeouts,
+            failed_requests=ps["failures"],
+            queue_wait_p50_s=_percentile(all_waits, 0.50),
+            queue_wait_p95_s=_percentile(all_waits, 0.95),
+            latency_p50_s=_percentile(all_lats, 0.50),
+            latency_p95_s=_percentile(all_lats, 0.95))

@@ -33,6 +33,7 @@ import dataclasses
 import json
 import math
 import os
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core import expr as E
@@ -195,10 +196,19 @@ class StatsStore:
     `AisqlEngine` (cascade / pipeline roll-ups after each query).  With a
     ``path`` the store loads existing stats on construction and `save`
     writes them back as JSON — no other I/O happens implicitly.
+
+    Thread-safe: under the serving runtime one store is written by every
+    concurrent query session, so all recording, merging and persistence
+    happens under a reentrant lock — two writers folding observations
+    into the same fingerprint lose nothing.  Readers get live
+    `PredObservation` objects; their counters are plain ints/floats
+    updated only under the lock, so a read sees a consistent-enough
+    snapshot for planning purposes.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
+        self._lock = threading.RLock()
         self._obs: Dict[str, PredObservation] = {}
         if path is not None and os.path.exists(path):
             self.load(path)
@@ -230,45 +240,50 @@ class StatsStore:
                           credits: float = 0.0, seconds: float = 0.0,
                           new_query: bool = False) -> PredObservation:
         """Fold one evaluation batch (rows, outcomes, spend) into ``key``."""
-        o = self._entry(key)
-        o.evaluated += int(evaluated)
-        o.passed += int(passed)
-        o.credits += float(credits)
-        o.seconds += float(seconds)
-        if new_query:
-            o.queries += 1
-        return o
+        with self._lock:
+            o = self._entry(key)
+            o.evaluated += int(evaluated)
+            o.passed += int(passed)
+            o.credits += float(credits)
+            o.seconds += float(seconds)
+            if new_query:
+                o.queries += 1
+            return o
 
     def note_query(self, keys) -> None:
         """Count one contributing query for each (already observed)
         fingerprint — called once per executed query by the executor."""
-        for key in keys:
-            o = self._obs.get(key)
-            if o is not None:
-                o.queries += 1
+        with self._lock:
+            for key in keys:
+                o = self._obs.get(key)
+                if o is not None:
+                    o.queries += 1
 
     def observe_cascade(self, key: str, *, rows: int, oracle_calls: int
                         ) -> PredObservation:
         """Record SUPG-IT routing volume for a cascaded predicate."""
-        o = self._entry(key)
-        o.cascade_rows += int(rows)
-        o.cascade_oracle += int(oracle_calls)
-        return o
+        with self._lock:
+            o = self._entry(key)
+            o.cascade_rows += int(rows)
+            o.cascade_oracle += int(oracle_calls)
+            return o
 
     def observe_pipeline(self, *, submitted: int, dedup_hits: int
                          ) -> PredObservation:
         """Record the request pipeline's dedup effectiveness (global)."""
-        o = self._entry(PIPELINE_KEY)
-        o.dedup_submitted += int(submitted)
-        o.dedup_hits += int(dedup_hits)
-        return o
+        with self._lock:
+            o = self._entry(PIPELINE_KEY)
+            o.dedup_submitted += int(submitted)
+            o.dedup_hits += int(dedup_hits)
+            return o
 
     # -- persistence ---------------------------------------------------
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
         if path is None:
             raise ValueError("StatsStore.save: no path configured")
-        payload = {k: o.to_dict() for k, o in self._obs.items()}
+        with self._lock:
+            payload = {k: o.to_dict() for k, o in self._obs.items()}
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -280,15 +295,18 @@ class StatsStore:
         path = path or self.path
         with open(path) as f:
             payload = json.load(f)
-        for k, d in payload.items():
-            obs = PredObservation.from_dict(d)
-            if k in self._obs:
-                self._obs[k].merge(obs)
-            else:
-                self._obs[k] = obs
+        with self._lock:
+            for k, d in payload.items():
+                obs = PredObservation.from_dict(d)
+                if k in self._obs:
+                    self._obs[k].merge(obs)
+                else:
+                    self._obs[k] = obs
 
     def clear(self) -> None:
-        self._obs.clear()
+        with self._lock:
+            self._obs.clear()
 
     def snapshot(self) -> Dict[str, Dict[str, Any]]:
-        return {k: o.to_dict() for k, o in self._obs.items()}
+        with self._lock:
+            return {k: o.to_dict() for k, o in self._obs.items()}

@@ -25,7 +25,9 @@ saving the paper's §4 cost analysis wants surfaced.
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+import threading
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import numpy as np
 
@@ -37,17 +39,37 @@ from repro.inference.scheduler import Scheduler
 
 
 class CortexClient:
-    """What a virtual warehouse holds: a handle to the Cortex API service."""
+    """What a virtual warehouse holds: a handle to the Cortex API service.
+
+    ``owner`` marks this client as one session of a **shared** pipeline
+    (the serving runtime): its requests are tagged with the owner so the
+    pipeline bills this client's meter — registered via
+    ``register_meter`` — only for the dispatches this session caused,
+    and ``flush()`` becomes an owner-scoped barrier that leaves other
+    sessions' queued work coalescing.  Without an owner the client
+    behaves exactly as before and assumes the pipeline is **private**:
+    failed-query cleanup (``cancel_queued``) withdraws every owner-less
+    queued item, and metering claims the pipeline-wide dispatch hook —
+    so sharing one pipeline between several *owner-less* clients is
+    unsupported; give each client an owner instead.
+    """
 
     def __init__(self, scheduler: Scheduler, *, default_model: str = "oracle-70b",
                  proxy_model: str = "proxy-8b",
                  pipeline: Union[None, bool, PipelineConfig,
-                                 RequestPipeline] = None):
+                                 RequestPipeline] = None,
+                 owner: Optional[str] = None,
+                 on_dispatch_extra: Optional[
+                     Callable[[Sequence[Result]], None]] = None):
         self.scheduler = scheduler
         self.default_model = default_model
         self.proxy_model = proxy_model
+        self.owner = owner
         self._ids = itertools.count(1)
-        # meters (paper §4 cost-analysis instrumentation)
+        # meters (paper §4 cost-analysis instrumentation); the lock keeps
+        # them consistent when a *different* session's barrier dispatches
+        # (and therefore bills) this session's coalesced requests
+        self._meter_lock = threading.Lock()
         self.ai_calls = 0
         self.ai_credits = 0.0
         self.ai_seconds = 0.0
@@ -58,32 +80,58 @@ class CortexClient:
             pipeline = RequestPipeline(scheduler, pipeline,
                                        on_dispatch=self._meter)
         elif isinstance(pipeline, RequestPipeline):
-            pipeline.on_dispatch = self._meter
+            if owner is not None:
+                # shared pipeline: bill through the per-owner registry,
+                # never clobber the pipeline-wide hook.  One registration
+                # chains the client meter with the caller's extra hook
+                # (the serving engine's tenant billing).
+                extra = on_dispatch_extra
+
+                def _owner_meter(results, _extra=extra):
+                    self._meter(results)
+                    if _extra is not None:
+                        _extra(results)
+
+                pipeline.register_meter(owner, _owner_meter)
+            else:
+                pipeline.on_dispatch = self._meter
         self.pipeline: Optional[RequestPipeline] = pipeline or None
 
     # ------------------------------------------------------------------
     def _meter(self, results: Sequence[Result]) -> None:
-        self.ai_calls += len(results)
-        for res in results:
-            self.ai_credits += res.credits
-            self.ai_seconds += res.latency_s
-            self.calls_by_model[res.model] = \
-                self.calls_by_model.get(res.model, 0) + 1
+        with self._meter_lock:
+            self.ai_calls += len(results)
+            for res in results:
+                self.ai_credits += res.credits
+                self.ai_seconds += res.latency_s
+                self.calls_by_model[res.model] = \
+                    self.calls_by_model.get(res.model, 0) + 1
 
     def submit_async(self, requests: List[Request]) -> List[ResultFuture]:
         """Queue requests; returns one future per request (input order)."""
         for r in requests:
             r.request_id = next(self._ids)
         if self.pipeline is not None:
-            return self.pipeline.submit_many(requests)
+            return self.pipeline.submit_many(requests, owner=self.owner)
         results = self.scheduler.submit(requests)
         self._meter(results)
         return [ResultFuture.resolved(res) for res in results]
 
     def flush(self) -> None:
-        """Barrier: force-dispatch everything queued in the pipeline."""
+        """Barrier: force-dispatch everything this client queued (with an
+        owner, only its own items; otherwise the whole pipeline)."""
         if self.pipeline is not None:
-            self.pipeline.flush()
+            if self.owner is not None:
+                self.pipeline.flush(owner=self.owner)
+            else:
+                self.pipeline.flush()
+
+    def cancel_queued(self) -> int:
+        """Withdraw every still-queued request this client exclusively
+        owns (failed-query cleanup; never-billed by construction)."""
+        if self.pipeline is None:
+            return 0
+        return self.pipeline.cancel_owner(self.owner)
 
     def _submit(self, requests: List[Request]) -> List[Result]:
         return [f.result() for f in self.submit_async(requests)]
@@ -125,10 +173,14 @@ class CortexClient:
 
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
-        out = {"ai_calls": self.ai_calls, "ai_credits": self.ai_credits,
-               "ai_seconds": self.ai_seconds,
-               "calls_by_model": dict(self.calls_by_model)}
-        if self.pipeline is not None:
+        with self._meter_lock:
+            out = {"ai_calls": self.ai_calls, "ai_credits": self.ai_credits,
+                   "ai_seconds": self.ai_seconds,
+                   "calls_by_model": dict(self.calls_by_model)}
+        # a shared pipeline's stats mix every session's traffic — a
+        # per-query delta of them would be misleading, so only a private
+        # pipeline surfaces them here (QueryReport.pipeline)
+        if self.pipeline is not None and self.owner is None:
             out["pipeline"] = self.pipeline.stats.snapshot()
         return out
 

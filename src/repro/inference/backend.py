@@ -53,6 +53,12 @@ class EngineFailure(RuntimeError):
     scheduler retries on a healthy replica."""
 
 
+class EngineTimeout(EngineFailure):
+    """An engine exceeded its serving deadline (injected via the
+    simulator's ``timeout_rate``); retried exactly like a failure but
+    counted separately so serving telemetry can tell them apart."""
+
+
 # --- model pricing table (credits per 1M tokens), mirrors §4's observation
 # that AI credits dominate and that multimodal/oracle models cost more.
 CREDITS_PER_MTOK = {

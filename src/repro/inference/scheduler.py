@@ -24,11 +24,12 @@ dropping all but one result per id.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
-from repro.inference.backend import (EngineFailure, InferenceBackend, Request,
-                                     Result)
+from repro.inference.backend import (EngineFailure, EngineTimeout,
+                                     InferenceBackend, Request, Result)
 
 _DEFAULT_CAPACITY = 32
 
@@ -58,8 +59,14 @@ class Scheduler:
         self.max_retries = max_retries
         self.straggler_deadline_s = straggler_deadline_s
         self.straggler_penalty_s = straggler_penalty_s
+        # one submit at a time: routing state (_busy_s/_depth/_rr), the
+        # telemetry counters and the backends' own meters are all
+        # mutated per call — concurrent querying threads serialize here
+        # (the single-dispatcher half of the serving concurrency model)
+        self._lock = threading.RLock()
         # telemetry
         self.retries = 0
+        self.timeouts = 0          # of the retries, injected/engine timeouts
         self.redispatches = 0
         self.splits = 0
         self.submits = 0           # submit() calls (what the pipeline saves)
@@ -67,16 +74,19 @@ class Scheduler:
 
     # ---- registry / elasticity ----
     def register(self, engine: InferenceBackend) -> None:
-        for m in engine.hosted_models():
-            self._replicas.setdefault(m, []).append(engine)
-        self._busy_s.setdefault(id(engine), 0.0)
-        self._depth.setdefault(id(engine), 0)
+        with self._lock:
+            for m in engine.hosted_models():
+                self._replicas.setdefault(m, []).append(engine)
+            self._busy_s.setdefault(id(engine), 0.0)
+            self._depth.setdefault(id(engine), 0)
 
     def deregister(self, engine: InferenceBackend) -> None:
-        for m in list(self._replicas):
-            self._replicas[m] = [e for e in self._replicas[m] if e is not engine]
-        self._busy_s.pop(id(engine), None)
-        self._depth.pop(id(engine), None)
+        with self._lock:
+            for m in list(self._replicas):
+                self._replicas[m] = [e for e in self._replicas[m]
+                                     if e is not engine]
+            self._busy_s.pop(id(engine), None)
+            self._depth.pop(id(engine), None)
 
     def replicas(self, model: str) -> List[InferenceBackend]:
         return list(self._replicas.get(model, ()))
@@ -88,6 +98,19 @@ class Scheduler:
         """Load score: accumulated busy seconds + queued request count."""
         return (self._busy_s.get(id(engine), 0.0)
                 + float(self._depth.get(id(engine), 0)))
+
+    def atomic_batch(self, model: str) -> Optional[int]:
+        """Largest single-model batch ``submit`` will never split across
+        replicas (None = single replica, unbounded).  A caller that
+        retries failed submits should stay within this bound: an
+        unsplit submit is all-or-nothing — either results come back or
+        nothing was served/billed — so a retry can never re-execute a
+        partition that already succeeded."""
+        with self._lock:
+            reps = self._replicas.get(model, ())
+            if len(reps) <= 1:
+                return None
+            return max(min(_capacity_of(e) for e in reps), 1)
 
     # ---- routing ----
     def _pick(self, model: str, exclude=None) -> InferenceBackend:
@@ -103,7 +126,12 @@ class Scheduler:
         return tied[i]
 
     def submit(self, requests: Sequence[Request]) -> List[Result]:
-        """Route a mixed-model batch; preserves input order."""
+        """Route a mixed-model batch; preserves input order.  Thread-safe
+        (serialized on the scheduler lock)."""
+        with self._lock:
+            return self._submit_locked(requests)
+
+    def _submit_locked(self, requests: Sequence[Request]) -> List[Result]:
         self.submits += 1
         originals = self._ensure_unique_ids(requests)
         try:
@@ -175,6 +203,8 @@ class Scheduler:
             except EngineFailure as e:
                 last_exc = e
                 self.retries += 1
+                if isinstance(e, EngineTimeout):
+                    self.timeouts += 1
                 engine = self._pick(model, exclude=engine)
             finally:
                 self._depth[eid] = max(self._depth.get(eid, 0) - len(reqs), 0)

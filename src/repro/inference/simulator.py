@@ -22,12 +22,14 @@ every random draw is keyed by (seed, request fingerprint).
 from __future__ import annotations
 
 import hashlib
+import threading
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, Request,
-                                     Result, credits_for)
+from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, EngineFailure,
+                                     EngineTimeout, Request, Result,
+                                     credits_for)
 
 # model quality/latency profiles: (error_rate_scale, seconds per 1k tokens)
 # latency constants derive from bf16 FLOPs at 197 TFLOP/s/chip with 60% MFU
@@ -63,16 +65,35 @@ class SimulatedBackend:
 
     ``clock`` accumulates modelled serving seconds (batch-aware: requests in
     one submit_batch share engine throughput).
+
+    Transient-fault injection (the production retry path's test rig):
+    with ``fault_rate`` / ``timeout_rate`` > 0 each ``submit_batch`` call
+    rolls a deterministic die (keyed by seed and a per-backend attempt
+    counter, so retries of the same batch re-roll) and raises
+    `EngineFailure` / `EngineTimeout` **before any request is served or
+    billed** — a faulted batch costs nothing, so retry layers can never
+    double-bill.  Result draws stay keyed by request fingerprint, so a
+    successful retry returns bit-identical answers to a fault-free run.
     """
 
     def __init__(self, models: Optional[Sequence[str]] = None, *, seed: int = 0,
-                 batch_parallelism: int = 8):
+                 batch_parallelism: int = 8, fault_rate: float = 0.0,
+                 timeout_rate: float = 0.0, fault_seed: Optional[int] = None):
         self.models = list(models or MODEL_PROFILES)
         self.seed = seed
         self.batch_parallelism = batch_parallelism
+        self.fault_rate = float(fault_rate)
+        self.timeout_rate = float(timeout_rate)
+        self.fault_seed = seed if fault_seed is None else fault_seed
         self.clock_s = 0.0
         self.total_credits = 0.0
         self.calls_by_model: Dict[str, int] = {}
+        self.faults_injected = 0
+        self.timeouts_injected = 0
+        self._fault_attempts = 0
+        # meters and the attempt counter are mutated per submit_batch;
+        # concurrent serving dispatches serialize here
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def hosted_models(self) -> List[str]:
@@ -84,6 +105,29 @@ class SimulatedBackend:
         return self.batch_parallelism * 32
 
     def submit_batch(self, requests: Sequence[Request]) -> List[Result]:
+        with self._lock:
+            return self._submit_batch_locked(requests)
+
+    def _maybe_inject_fault(self) -> None:
+        """Raise a transient failure/timeout *before* serving or billing
+        anything — all-or-nothing per batch, deterministic per attempt."""
+        if not (self.fault_rate or self.timeout_rate):
+            return
+        self._fault_attempts += 1
+        rng = _rng_for(self.fault_seed, "fault", self._fault_attempts)
+        u = rng.random()
+        if u < self.fault_rate:
+            self.faults_injected += 1
+            raise EngineFailure(
+                f"injected transient fault (attempt {self._fault_attempts})")
+        if u < self.fault_rate + self.timeout_rate:
+            self.timeouts_injected += 1
+            raise EngineTimeout(
+                f"injected timeout (attempt {self._fault_attempts})")
+
+    def _submit_batch_locked(self, requests: Sequence[Request]
+                             ) -> List[Result]:
+        self._maybe_inject_fault()
         out: List[Result] = []
         batch_s = 0.0
         for r in requests:

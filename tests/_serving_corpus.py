@@ -1,0 +1,23 @@
+"""Shared fixtures for the serving/fault harnesses: one catalog builder
+and one result-canonicalization rule, so the concurrency differential
+(test_serving) and the fault differential (test_faults) compare rows by
+identical rules."""
+from repro.core import Catalog
+from repro.data import datasets as D
+
+SEED = 0
+ROWS = 160          # < min_rows_for_pilot: keeps runs fast + deterministic
+
+
+def make_catalog():
+    return Catalog({
+        "articles": D.skewed_articles(ROWS, seed=3),
+        "reviews": D.cascade_table("IMDB", rows=ROWS, seed=1),
+    })
+
+
+def canon_rows(table):
+    """Order-insensitive canonical form of a result table."""
+    cols = table.column_names
+    return sorted(tuple(str(table.column(c)[i]) for c in cols)
+                  for i in range(table.num_rows))

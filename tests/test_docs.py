@@ -20,9 +20,13 @@ def _read(name):
 def test_docs_exist_and_linked_from_readme():
     assert os.path.exists(os.path.join(DOCS, "architecture.md"))
     assert os.path.exists(os.path.join(DOCS, "query-reference.md"))
+    assert os.path.exists(os.path.join(DOCS, "serving.md"))
     readme = _read("README.md")
     assert "docs/architecture.md" in readme
     assert "docs/query-reference.md" in readme
+    assert "docs/serving.md" in readme
+    # the architecture walkthrough cross-links the serving doc
+    assert "serving.md" in _read("docs/architecture.md")
 
 
 def test_docs_links_resolve():
@@ -74,6 +78,26 @@ def test_documented_pipeline_keys_exist():
     assert documented and not unknown, (documented, unknown)
     assert valid - set(documented) == set(), \
         f"pipeline keys missing from docs: {valid - set(documented)}"
+
+
+def test_every_documented_servingreport_field_exists():
+    from repro.core import ServingReport
+    text = _read("docs/serving.md")
+    documented = _table_fields(text, "## ServingReport")
+    actual = {f.name for f in dataclasses.fields(ServingReport)}
+    assert documented, "ServingReport table not found in serving.md"
+    assert set(documented) == actual, \
+        (set(documented) - actual, actual - set(documented))
+
+
+def test_every_documented_tenantreport_field_exists():
+    from repro.core import TenantReport
+    text = _read("docs/serving.md")
+    documented = _table_fields(text, "### TenantReport")
+    actual = {f.name for f in dataclasses.fields(TenantReport)}
+    assert documented, "TenantReport table not found in serving.md"
+    assert set(documented) == actual, \
+        (set(documented) - actual, actual - set(documented))
 
 
 def test_documented_pilot_keys_match_runtime():

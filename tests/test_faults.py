@@ -1,0 +1,206 @@
+"""Fault-injection tests: transient engine failures/timeouts under the
+serving runtime and the pipeline's bounded retry-with-backoff.
+
+Invariants:
+  * with ``fault_rate > 0`` every corpus query still completes with rows
+    identical to the fault-free run (retries are deterministic re-rolls;
+    result draws are keyed by request fingerprint, not by attempt);
+  * retries are metered and reported (`ServingReport.retries` /
+    ``scheduler_retries`` / ``scheduler_timeouts``), and spend stays
+    conserved — a faulted batch is billed zero, a retried batch once;
+  * a request exceeding max retries raises a clean `RequestFailed`
+    (never a hang, never a silent drop);
+  * speculative prefetches abandoned by a failing query are cancelled,
+    never dispatched, never billed.
+"""
+import pytest
+
+from _serving_corpus import SEED, canon_rows, make_catalog
+from repro.core import (AisqlEngine, Catalog, ExecConfig, ServingConfig,
+                        ServingEngine)
+from repro.data import datasets as D
+from repro.inference.api import CortexClient
+from repro.inference.backend import SCORE, EngineFailure, Request
+from repro.inference.pipeline import (PipelineConfig, RequestFailed,
+                                      RequestPipeline)
+from repro.inference.scheduler import Scheduler, SchedulerError
+from repro.inference.simulator import SimulatedBackend
+
+CORPUS = [
+    ("acme", "SELECT * FROM articles AS a WHERE "
+             "AI_FILTER(PROMPT('broad topic? {0}', a.headline))"),
+    ("beta", "SELECT a.id FROM articles AS a WHERE "
+             "AI_FILTER(PROMPT('narrow topic? {0}', a.summary))"),
+    ("beta", "SELECT * FROM articles AS a WHERE "
+             "AI_FILTER(PROMPT('broad topic? {0}', a.headline)) LIMIT 12"),
+    ("gamma", "SELECT r.id FROM reviews AS r WHERE "
+              "AI_FILTER(PROMPT('positive? {0}', r.text))"),
+]
+
+
+def run_corpus(fault_rate=0.0, timeout_rate=0.0, repeats=2):
+    # small batches => many dispatches => many fault rolls
+    cfg = ServingConfig(workers=6, pipeline=PipelineConfig(
+        max_batch=24, retry_backoff_s=0.0005))
+    with ServingEngine.simulated(make_catalog(), seed=SEED,
+                                 fault_rate=fault_rate,
+                                 timeout_rate=timeout_rate, cfg=cfg) as srv:
+        tickets = srv.run_all(CORPUS * repeats)
+        rows = [canon_rows(t.result()) for t in tickets]
+        backend = srv.scheduler._replicas["proxy-8b"][0]
+        return rows, srv.report(), backend
+
+
+# ---------------------------------------------------------------------------
+# the differential: faulty == fault-free, with retries metered
+# ---------------------------------------------------------------------------
+
+
+def test_fault_rate_differential_identical_rows_and_metered_retries():
+    clean_rows, clean_rep, _ = run_corpus(fault_rate=0.0)
+    rows, rep, backend = run_corpus(fault_rate=0.2, timeout_rate=0.05)
+    assert rows == clean_rows, "faulty run diverged from fault-free rows"
+    # the injected faults really happened and were retried, visibly
+    assert backend.faults_injected + backend.timeouts_injected > 0
+    assert rep.retries + rep.scheduler_retries > 0
+    assert "retries" in rep.render()
+    # retry spend is conserved: faulted batches billed zero, success once
+    assert rep.total_credits == pytest.approx(rep.backend_credits, abs=1e-9)
+    assert rep.total_credits == pytest.approx(clean_rep.total_credits,
+                                              abs=1e-9)
+    # nobody failed, nothing rejected
+    for t in rep.tenants.values():
+        assert t.failed == 0 and t.rejected == 0
+        assert t.completed == t.queries
+
+
+def test_timeouts_are_counted_separately():
+    _, rep, backend = run_corpus(fault_rate=0.0, timeout_rate=0.5,
+                                 repeats=1)
+    assert backend.timeouts_injected > 0
+    assert rep.scheduler_timeouts > 0
+    assert rep.scheduler_timeouts == backend.timeouts_injected
+
+
+# ---------------------------------------------------------------------------
+# exhausted retries: clean error, no hang, no spend
+# ---------------------------------------------------------------------------
+
+
+def flaky_pipeline(fault_rate, *, sched_retries=1, pipe_retries=1):
+    sched = Scheduler(max_retries=sched_retries)
+    sim = SimulatedBackend(seed=SEED, fault_rate=fault_rate)
+    sched.register(sim)
+    pipe = RequestPipeline(sched, PipelineConfig(
+        max_retries=pipe_retries, retry_backoff_s=0.0005))
+    return sched, sim, pipe
+
+
+def test_exceeding_max_retries_raises_clean_error():
+    _, sim, pipe = flaky_pipeline(1.0)
+    futs = pipe.submit_many([Request(f"p{i}", "proxy-8b", SCORE)
+                             for i in range(5)])
+    with pytest.raises(RequestFailed) as exc:
+        futs[0].result()
+    assert isinstance(exc.value.__cause__, (EngineFailure, SchedulerError))
+    # every sibling future resolved with the same clean error — no hang,
+    # no silent drop
+    for f in futs:
+        assert f.done()
+        with pytest.raises(RequestFailed):
+            f.result()
+    assert pipe.stats.failures == 5
+    assert pipe.stats.dispatched == 0
+    assert sim.total_credits == 0.0                # faults are never billed
+
+
+def test_permanent_failure_surfaces_on_serving_ticket():
+    cfg = ServingConfig(workers=2, pipeline=PipelineConfig(
+        max_retries=1, retry_backoff_s=0.0005))
+    with ServingEngine.simulated(make_catalog(), seed=SEED, fault_rate=1.0,
+                                 cfg=cfg) as srv:
+        ticket = srv.submit("acme", CORPUS[0][1])
+        srv.drain()
+        rep = srv.report()
+    with pytest.raises(RequestFailed):
+        ticket.result(timeout=30.0)
+    assert rep.tenants["acme"].failed == 1
+    assert rep.failed_requests > 0
+    assert rep.total_credits == 0.0
+    assert rep.backend_credits == 0.0
+
+
+def test_partial_fault_recovery_between_retries():
+    # scheduler retries exhausted (1 replica, max_retries=0) but the
+    # pipeline's own retry layer re-dispatches and eventually succeeds
+    sched = Scheduler(max_retries=0)
+    # seed 12's first fault draw is 0.05 (< 0.5 -> injected fault), its
+    # second 0.81 (-> success): attempt 1 fails, the pipeline retries
+    sim = SimulatedBackend(seed=12, fault_rate=0.5)
+    sched.register(sim)
+    pipe = RequestPipeline(sched, PipelineConfig(
+        max_retries=8, retry_backoff_s=0.0005))
+    futs = pipe.submit_many([Request(f"q{i}", "proxy-8b", SCORE)
+                             for i in range(4)])
+    scores = [f.result().score for f in futs]
+    assert all(0.0 <= s <= 1.0 for s in scores)
+    assert pipe.stats.retries > 0                  # the path was exercised
+    assert pipe.stats.failures == 0
+    # billed exactly once despite the re-dispatches
+    assert sim.total_credits == pytest.approx(
+        sum(r.credits for r in (f.result() for f in futs)))
+
+
+# ---------------------------------------------------------------------------
+# failure cleanup: abandoned prefetches are withdrawn, never billed
+# ---------------------------------------------------------------------------
+
+
+def test_failed_query_cancels_queued_prefetches_unbilled():
+    sched = Scheduler(max_retries=1)
+    sim = SimulatedBackend(seed=SEED, fault_rate=1.0)
+    sched.register(sim)
+    client = CortexClient(sched, pipeline=PipelineConfig(
+        max_batch=64, max_retries=1, retry_backoff_s=0.0005))
+    eng = AisqlEngine(
+        Catalog({"articles": D.skewed_articles(600, seed=3)}), client,
+        executor=ExecConfig(partitioned=True, partition_rows=64,
+                            partition_lookahead=4,
+                            min_rows_for_pilot=10 ** 9))
+    with pytest.raises(RequestFailed):
+        eng.sql("SELECT * FROM articles AS a WHERE "
+                "AI_FILTER(PROMPT('x? {0}', a.headline)) LIMIT 5")
+    # nothing queued, nothing billed — the failed query left no debris
+    # for a later barrier to dispatch on its behalf
+    assert client.pipeline.pending == 0
+    assert client.ai_credits == 0.0
+    assert sim.total_credits == 0.0
+
+
+def test_cancelled_requests_under_faults_never_billed():
+    # a healthy partitioned LIMIT query cancels its speculative tail;
+    # with faults in the mix the cancelled requests still cost nothing
+    sched = Scheduler(max_retries=2)
+    sim = SimulatedBackend(seed=1, fault_rate=0.15)
+    sched.register(sim)
+    client = CortexClient(sched, pipeline=PipelineConfig(
+        max_batch=512, retry_backoff_s=0.0005))
+    eng = AisqlEngine(
+        Catalog({"articles": D.skewed_articles(2000, seed=3)}), client,
+        executor=ExecConfig(partitioned=True, partition_rows=128,
+                            partition_lookahead=3,
+                            min_rows_for_pilot=10 ** 9))
+    # ~5% selectivity: the LIMIT spans several partitions, so later
+    # iterations keep prefetching speculative partitions that are still
+    # queued when the limit satisfies — those get withdrawn
+    out = eng.sql("SELECT * FROM articles AS a WHERE "
+                  "AI_FILTER(PROMPT('narrow topic? {0}', a.summary)) "
+                  "LIMIT 10")
+    assert out.num_rows == 10
+    rep = eng.last_report
+    assert rep.partitions["early_terminated"]
+    assert client.pipeline.stats.cancelled > 0
+    # conservation: the client's meter equals the backend's spend, i.e.
+    # cancelled (never-dispatched) requests were billed to no one
+    assert client.ai_credits == pytest.approx(sim.total_credits, abs=1e-12)
+    assert client.pipeline.pending == 0

@@ -62,6 +62,12 @@ def test_per_model_queues_dispatch_separately():
     fa = pipe.submit_many(score_reqs(5, model="proxy-8b"))
     fb = pipe.submit_many(score_reqs(5, model="oracle-70b"))
     fa[0].result()
+    # the barrier is scoped to the demanded future's model queue: the
+    # other model's queue keeps coalescing until its own barrier
+    assert sched.submits == 1
+    assert all(f.done() for f in fa)
+    assert not any(f.done() for f in fb)
+    fb[0].result()
     assert sched.submits == 2             # one model-pure batch each
     assert all(f.done() for f in fa + fb)
 
@@ -80,6 +86,52 @@ def test_dedup_inflight_and_memo_cache():
     assert pipe.stats.cache_hits == 1
     assert pipe.stats.dedup_hits == 2
     assert sched.submits == 1
+
+
+def test_lru_hot_key_survives_cache_pressure():
+    """Regression: FIFO eviction used to drop the oldest *half* of the
+    cache including hot keys — eviction is LRU now (hits move a key to
+    the recent end), so a constantly-hit key outlives churn."""
+    sched, pipe = make_pipeline()
+    pipe.cfg.cache_size = 4
+    pipe.submit(Request("HOT", "proxy-8b", SCORE)).result()
+    for i in range(8):                     # 2x the capacity in cold keys
+        pipe.submit(Request("HOT", "proxy-8b", SCORE))     # keep it hot
+        pipe.submit(Request(f"cold {i}", "proxy-8b", SCORE)).result()
+    dispatched = pipe.stats.dispatched
+    f = pipe.submit(Request("HOT", "proxy-8b", SCORE))
+    assert f.done()                        # still a cache hit
+    assert pipe.stats.dispatched == dispatched
+    # the cache never exceeds its cap and the hot key is the freshest
+    assert len(pipe.cache_keys()) <= 4
+
+
+def test_lru_evicts_the_least_recently_used_key():
+    sched, pipe = make_pipeline()
+    pipe.cfg.cache_size = 2
+    pipe.submit(Request("a", "proxy-8b", SCORE)).result()
+    pipe.submit(Request("b", "proxy-8b", SCORE)).result()
+    pipe.submit(Request("a", "proxy-8b", SCORE))       # refresh a
+    pipe.submit(Request("c", "proxy-8b", SCORE)).result()  # evicts b
+    d0 = pipe.stats.dispatched
+    assert pipe.submit(Request("a", "proxy-8b", SCORE)).done()
+    assert pipe.stats.dispatched == d0                 # a survived
+    pipe.submit(Request("b", "proxy-8b", SCORE)).result()
+    assert pipe.stats.dispatched == d0 + 1             # b was evicted
+
+
+def test_cache_ttl_expires_memoized_results():
+    import time as _time
+    sched, pipe = make_pipeline()
+    pipe.cfg.cache_ttl_s = 0.03
+    pipe.submit(Request("p", "proxy-8b", SCORE)).result()
+    assert pipe.submit(Request("p", "proxy-8b", SCORE)).done()  # fresh hit
+    _time.sleep(0.04)
+    f = pipe.submit(Request("p", "proxy-8b", SCORE))
+    assert not f.done()                    # expired: goes back to the queue
+    f.result()
+    assert pipe.stats.cache_expired == 1
+    assert pipe.stats.dispatched == 2
 
 
 def test_dedup_respects_fingerprint_fields():

@@ -1,0 +1,329 @@
+"""Concurrency-correctness harness for the multi-tenant serving runtime.
+
+Invariants under N worker threads over a seeded query corpus:
+
+  * every query's result rows are identical to a serial, isolated
+    execution of the same SQL (same simulator seed);
+  * credits are conserved: the sum of per-tenant meters equals the
+    backends' own spend meter — dedup/cache/cancel can only make a
+    tenant cheaper, never shift spend onto another;
+  * no futures are lost or duplicated: every ticket resolves, the shared
+    pipeline drains to zero, and submitted == dispatched + dedup hits +
+    cancelled + failed;
+  * the shared `StatsStore` loses no observations (per-query row counts
+    add up exactly; a two-writer hammer loses nothing);
+  * admission control: credit budgets reject, token buckets delay.
+"""
+import threading
+
+import pytest
+
+from _serving_corpus import ROWS, SEED, canon_rows, make_catalog
+from repro.core import (AdmissionError, AisqlEngine, ServingConfig,
+                        ServingEngine, StatsStore, TenantPolicy)
+from repro.core.serving import TokenBucket
+from repro.inference.api import CortexClient, make_simulated_client
+from repro.inference.backend import SCORE, Request
+from repro.inference.pipeline import PipelineConfig, RequestPipeline
+from repro.inference.scheduler import Scheduler
+from repro.inference.simulator import SimulatedBackend
+
+# a workload with deliberately repeated predicates (also under different
+# aliases) — the production shape where cross-query reuse pays
+CORPUS = [
+    ("acme", "SELECT * FROM articles AS a WHERE "
+             "AI_FILTER(PROMPT('broad topic? {0}', a.headline))"),
+    ("acme", "SELECT a.id FROM articles AS a WHERE "
+             "AI_FILTER(PROMPT('narrow topic? {0}', a.summary))"),
+    ("beta", "SELECT * FROM articles AS b WHERE "
+             "AI_FILTER(PROMPT('broad topic? {0}', b.headline))"),
+    ("beta", "SELECT r.id, AI_CLASSIFY(PROMPT('sentiment of {0}', r.text), "
+             "['positive','negative']) AS sentiment FROM reviews AS r "
+             "WHERE AI_FILTER(PROMPT('positive? {0}', r.text))"),
+    ("gamma", "SELECT * FROM reviews AS r WHERE "
+              "AI_FILTER(PROMPT('positive? {0}', r.text)) AND r.id < 120"),
+    ("gamma", "SELECT * FROM articles AS a WHERE "
+              "AI_FILTER(PROMPT('broad topic? {0}', a.headline)) LIMIT 10"),
+]
+
+
+def serial_reference(corpus):
+    """Each query on a fresh, isolated engine (the serial baseline)."""
+    out = []
+    for _tenant, sql in corpus:
+        eng = AisqlEngine(make_catalog(),
+                          make_simulated_client(seed=SEED, pipelined=True))
+        out.append(canon_rows(eng.sql(sql)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# correctness under concurrency
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_rows_identical_to_serial():
+    reference = serial_reference(CORPUS)
+    with ServingEngine.simulated(make_catalog(), seed=SEED,
+                                 cfg=ServingConfig(workers=8)) as srv:
+        tickets = srv.run_all(CORPUS * 2)     # every query twice
+    for i, t in enumerate(tickets):
+        assert t.exception() is None, (i, t.exception())
+        assert canon_rows(t.result()) == reference[i % len(CORPUS)], \
+            f"query {i} diverged from serial execution"
+
+
+def test_credits_conserved_and_no_lost_futures():
+    with ServingEngine.simulated(make_catalog(), seed=SEED,
+                                 cfg=ServingConfig(workers=6)) as srv:
+        tickets = srv.run_all(CORPUS)
+        rep = srv.report()
+        assert srv.pipeline.pending == 0          # fully drained
+    assert all(t.done() for t in tickets)
+    assert all(t.result() is not None for t in tickets)
+    # conservation: per-tenant meters sum to the backends' own meter
+    assert rep.backend_credits is not None
+    assert rep.total_credits == pytest.approx(rep.backend_credits, abs=1e-9)
+    # no request lost or duplicated
+    ps = srv.pipeline.stats
+    assert ps.submitted == (ps.dispatched + ps.dedup_hits + ps.cancelled
+                            + ps.failures)
+    assert rep.queries == len(CORPUS)
+    assert sum(t.completed for t in rep.tenants.values()) == len(CORPUS)
+
+
+def test_cross_query_cache_reuse_across_tenants():
+    sql = CORPUS[0][1]
+    with ServingEngine.simulated(make_catalog(), seed=SEED,
+                                 cfg=ServingConfig(workers=2)) as srv:
+        first = srv.submit("acme", sql)
+        srv.drain()                                # serialize for determinism
+        second = srv.submit("beta", sql)
+        srv.drain()
+        rep = srv.report()
+        assert canon_rows(first.result()) == canon_rows(second.result())
+    assert rep.cross_query_hits > 0
+    # the hitting tenant paid nothing: spend stays on the dispatching one
+    assert rep.tenants["beta"].credits_spent == 0.0
+    assert rep.tenants["acme"].credits_spent == pytest.approx(
+        rep.total_credits)
+
+
+def test_statsstore_counts_match_row_counts():
+    sql = ("SELECT * FROM reviews AS r WHERE "
+           "AI_FILTER(PROMPT('positive? {0}', r.text))")
+    stats = StatsStore()
+    with ServingEngine.simulated(make_catalog(), seed=SEED, stats=stats,
+                                 cfg=ServingConfig(workers=4)) as srv:
+        srv.run_all([("t0", sql), ("t1", sql), ("t2", sql)])
+    obs = stats.get("AI_FILTER|positive? {0}||text")
+    assert obs is not None
+    # every query records its full row count, cache hits included
+    assert obs.evaluated == 3 * ROWS
+    assert 0 < obs.passed < obs.evaluated
+
+
+def test_sessions_are_reused_not_leaked():
+    sql = CORPUS[0][1]
+    with ServingEngine.simulated(make_catalog(), seed=SEED,
+                                 cfg=ServingConfig(workers=2)) as srv:
+        for _ in range(3):
+            srv.submit("acme", sql)
+            srv.drain()                  # sequential: one session suffices
+        assert srv.sessions_created == 1
+        srv.run_all([("acme", sql)] * 6)
+        # concurrent bursts may add sessions, bounded by the worker count
+        assert srv.sessions_created <= 2
+
+
+# ---------------------------------------------------------------------------
+# admission control: budgets + token buckets
+# ---------------------------------------------------------------------------
+
+
+def test_credit_budget_rejects_after_exhaustion():
+    sql = CORPUS[0][1]
+    tenants = {"capped": TenantPolicy(credit_budget=1e-6),
+               "free": TenantPolicy()}
+    with ServingEngine.simulated(
+            make_catalog(), seed=SEED, tenants=tenants,
+            cfg=ServingConfig(workers=1)) as srv:      # deterministic order
+        t1 = srv.submit("capped", sql)
+        t2 = srv.submit("capped", sql)
+        t3 = srv.submit("free", sql)
+        srv.drain()
+        rep = srv.report()
+    assert t1.result().num_rows > 0                # admitted at zero spend
+    with pytest.raises(AdmissionError):
+        t2.result()
+    assert t3.exception() is None                  # other tenants unaffected
+    cap = rep.tenants["capped"]
+    assert cap.completed == 1 and cap.rejected == 1 and cap.failed == 0
+    assert cap.credits_spent >= 1e-6               # why it got rejected
+
+
+def test_zero_rate_tenant_rejects_instead_of_hanging_drain():
+    # a paused tenant (queries_per_s=0) must not spin in the requeue
+    # loop forever: past its burst, queries are rejected cleanly
+    sql = "SELECT * FROM articles AS a WHERE a.id < 10"
+    tenants = {"paused": TenantPolicy(queries_per_s=0.0, burst=1)}
+    with ServingEngine.simulated(
+            make_catalog(), seed=SEED, tenants=tenants,
+            cfg=ServingConfig(workers=1)) as srv:
+        first = srv.submit("paused", sql)
+        second = srv.submit("paused", sql)
+        srv.drain()                       # must return, not hang
+        rep = srv.report()
+    assert first.result().num_rows == 10  # burst token admitted it
+    with pytest.raises(AdmissionError):
+        second.result()
+    assert rep.tenants["paused"].rejected == 1
+
+
+def test_token_bucket_paces_admission():
+    bucket = TokenBucket(rate=50.0, burst=1)
+    assert bucket.acquire() == pytest.approx(0.0, abs=0.01)
+    waited = bucket.acquire() + bucket.acquire()
+    assert waited >= 0.02                          # 2 refills at 50/s
+
+
+def test_rate_limited_tenant_reports_queue_waits():
+    sql = ("SELECT * FROM articles AS a WHERE a.id < 40")
+    tenants = {"slow": TenantPolicy(queries_per_s=25.0, burst=1)}
+    with ServingEngine.simulated(
+            make_catalog(), seed=SEED, tenants=tenants,
+            cfg=ServingConfig(workers=4)) as srv:
+        tickets = srv.run_all([("slow", sql)] * 4)
+        rep = srv.report()
+    assert all(t.exception() is None for t in tickets)
+    waits = sorted(t.queue_wait_s for t in tickets)
+    assert waits[-1] >= 0.05                       # 4 queries at 25/s
+    assert rep.tenants["slow"].queue_wait_p95_s >= rep.queue_wait_p50_s
+
+
+# ---------------------------------------------------------------------------
+# shared-pipeline semantics: owner scoping
+# ---------------------------------------------------------------------------
+
+
+def shared_pipeline_pair(**cfg_kw):
+    sched = Scheduler()
+    sched.register(SimulatedBackend(seed=SEED))
+    pipe = RequestPipeline(sched, PipelineConfig(**cfg_kw))
+    a = CortexClient(sched, pipeline=pipe, owner="a")
+    b = CortexClient(sched, pipeline=pipe, owner="b")
+    return pipe, a, b
+
+
+def test_owner_scoped_flush_leaves_other_sessions_queued():
+    pipe, a, b = shared_pipeline_pair()
+    fa = a.submit_async([Request(f"pa {i}", "proxy-8b", SCORE)
+                         for i in range(3)])
+    fb = b.submit_async([Request(f"pb {i}", "proxy-8b", SCORE)
+                         for i in range(3)])
+    a.flush()
+    assert all(f.done() for f in fa)
+    assert not any(f.done() for f in fb)           # b's work kept coalescing
+    assert pipe.pending == 3
+    assert a.ai_calls == 3 and b.ai_calls == 0     # billing followed dispatch
+    b.flush()
+    assert all(f.done() for f in fb)
+    assert b.ai_calls == 3
+
+
+def test_dispatch_bills_the_owner_that_queued_the_request():
+    pipe, a, b = shared_pipeline_pair()
+    fa = a.submit_async([Request("shared prompt", "proxy-8b", SCORE)])
+    fb = b.submit_async([Request("shared prompt", "proxy-8b", SCORE)])
+    # b dedup-attached to a's queued request; demanding b's result is a
+    # global barrier that dispatches it — but the bill lands on a, the
+    # owner whose submission caused the dispatch
+    assert fb[0].result().score is not None
+    assert fa[0].done() and fb[0].done()
+    assert a.ai_calls == 1 and b.ai_calls == 0
+    assert pipe.stats.inflight_hits == 1
+    assert pipe.stats.cross_query_hits == 1
+
+
+def test_cancel_owner_only_touches_exclusive_items():
+    pipe, a, b = shared_pipeline_pair()
+    a.submit_async([Request("only-a", "proxy-8b", SCORE)])
+    fa = a.submit_async([Request("both", "proxy-8b", SCORE)])
+    fb = b.submit_async([Request("both", "proxy-8b", SCORE)])
+    assert a.cancel_queued() == 1                  # "both" survives: b waits
+    assert pipe.pending == 1
+    assert fb[0].result().score is not None
+    assert fa[0].result().score == fb[0].result().score
+    # the failed owner's billing tag moved with the cancellation: the
+    # surviving dispatch is billed to b, never to the query that died
+    assert a.ai_calls == 0 and a.ai_credits == 0.0
+    assert b.ai_calls == 1
+
+
+def test_rate_limited_tenant_does_not_starve_others():
+    # one worker, a heavily rate-limited tenant first in the queue: the
+    # unlimited tenant's query must not wait behind the bucket (tokens
+    # arrive 0.5 s apart; generous margins keep loaded CI runners green)
+    sql = "SELECT * FROM articles AS a WHERE a.id < 20"
+    tenants = {"slow": TenantPolicy(queries_per_s=2.0, burst=1)}
+    with ServingEngine.simulated(
+            make_catalog(), seed=SEED, tenants=tenants,
+            cfg=ServingConfig(workers=1)) as srv:
+        slow = [srv.submit("slow", sql) for _ in range(3)]
+        fast = srv.submit("fast", sql)
+        fast.result(timeout=30.0)
+        # the fast query finished while slow's 2nd/3rd still wait for
+        # tokens — workers re-enqueue instead of sleeping on the bucket
+        assert fast.queue_wait_s < 0.4
+        assert not all(t.done() for t in slow)
+        srv.drain()
+    assert all(t.exception() is None for t in slow)
+
+
+def test_cancel_owner_of_attached_owner_keeps_item_cancellable():
+    # b dedup-attaches to a's item, then BOTH queries fail: b's cancel
+    # removes b from the ownership set (even as a secondary), so a's
+    # later cancel sees itself as sole owner and fully withdraws the
+    # item — nothing is left queued, and no dead query is ever billed
+    pipe, a, b = shared_pipeline_pair()
+    a.submit_async([Request("shared", "proxy-8b", SCORE)])
+    b.submit_async([Request("shared", "proxy-8b", SCORE)])
+    assert b.cancel_queued() == 0                  # a still awaits it
+    assert pipe.pending == 1
+    assert a.cancel_queued() == 1                  # now exclusively a's
+    assert pipe.pending == 0
+    pipe.flush()
+    assert a.ai_calls == 0 and b.ai_calls == 0     # post-mortem bill: none
+
+
+# ---------------------------------------------------------------------------
+# StatsStore under concurrent writers (the hammer)
+# ---------------------------------------------------------------------------
+
+
+def test_statsstore_concurrent_writers_lose_nothing():
+    store = StatsStore()
+    writers, iters = 8, 400
+
+    def hammer(i):
+        for k in range(iters):
+            store.observe_predicate("shared-fp", evaluated=2, passed=1,
+                                    credits=0.5, seconds=0.001)
+            store.observe_cascade("shared-fp", rows=1,
+                                  oracle_calls=k % 2)
+            store.observe_pipeline(submitted=3, dedup_hits=1)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    obs = store.get("shared-fp")
+    assert obs.evaluated == writers * iters * 2
+    assert obs.passed == writers * iters
+    assert obs.credits == pytest.approx(writers * iters * 0.5)
+    assert obs.cascade_rows == writers * iters
+    pipe = store.get("__pipeline__")
+    assert pipe.dedup_submitted == writers * iters * 3
+    assert pipe.dedup_hits == writers * iters
