@@ -21,13 +21,14 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_adaptive, bench_agg_shortcircuit,
                             bench_cascade, bench_concurrent,
-                            bench_hybrid_join, bench_join_placement,
-                            bench_join_rewrite, bench_predicate_reorder,
-                            bench_streaming)
+                            bench_hybrid_join, bench_index,
+                            bench_join_placement, bench_join_rewrite,
+                            bench_predicate_reorder, bench_streaming)
     benches = [
         ("Fig 9 predicate reordering", bench_predicate_reorder.main),
         ("adaptive re-optimization (learned stats)", bench_adaptive.main),
         ("streaming partition-parallel LIMIT + top-k", bench_streaming.main),
+        ("semantic index: join blocking + kernel gate", bench_index.main),
         ("concurrent multi-tenant serving", bench_concurrent.main),
         ("Fig 10 join placement", bench_join_placement.main),
         ("Table 2 / Fig 11 cascades", bench_cascade.main),

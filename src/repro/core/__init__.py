@@ -14,3 +14,5 @@ from repro.core.serving import (AdmissionError, QuerySession,    # noqa: F401
                                 QueryTicket, ServingConfig,
                                 ServingEngine, ServingReport,
                                 TenantPolicy, TenantReport)
+from repro.semindex import (EmbeddingStore, IvfFlatIndex,        # noqa: F401
+                            SemanticIndexManager, SemIndexConfig)

@@ -32,9 +32,15 @@ from typing import Dict, Optional
 
 from repro.core import expr as E
 from repro.core import plan as P
-from repro.core.stats import StatsStore, predicate_fingerprint
-from repro.inference.backend import CREDITS_PER_MTOK
+from repro.core.stats import (StatsStore, index_join_fingerprint,
+                              predicate_fingerprint)
+from repro.inference.backend import CREDITS_PER_MTOK, EMBED, credits_for
 from repro.tables.table import Table
+
+def _expr_name(e: E.Expr) -> str:
+    """Column name of an expression side (fingerprint input)."""
+    return e.name if isinstance(e, E.Column) else type(e).__name__
+
 
 @dataclasses.dataclass
 class CostDefaults:
@@ -61,6 +67,10 @@ class CostDefaults:
     # top-k prefilter: candidates escalated to the ordering model are
     # ``ceil(topk_candidate_factor * k)`` of the proxy's best rows
     topk_candidate_factor: float = 3.0
+    # semantic index: fraction of a column's rows assumed *already*
+    # embedded when the store cannot be consulted (0.0 = price the full
+    # cold build; observed store coverage replaces this when available)
+    index_coverage_default: float = 0.0
     # -- learned-stats trust policy -----------------------------------
     stats_min_rows: int = 24           # below this, observations are ignored
     stats_prior_strength: float = 16.0  # pseudo-rows backing the static prior
@@ -124,6 +134,7 @@ class CostModel:
     def __init__(self, catalog: Catalog, *, default_model: str = "oracle-70b",
                  multimodal_model: str = "qwen2-vl-7b",
                  proxy_model: str = "proxy-8b",
+                 embed_model: str = "arctic-embed-m",
                  ai_selectivity_default: Optional[float] = None,
                  defaults: Optional[CostDefaults] = None,
                  stats: Optional[StatsStore] = None):
@@ -131,9 +142,14 @@ class CostModel:
         self.default_model = default_model
         self.multimodal_model = multimodal_model
         self.proxy_model = proxy_model
+        self.embed_model = embed_model
         # mirrors ExecConfig.topk_prefilter (the engine syncs it) so
         # TopK estimates price the path the executor will actually take
         self.topk_prefilter = True
+        # the engine's SemanticIndexManager when a semantic index is
+        # configured (None otherwise): unlocks the index-assisted join
+        # race and lets TopK estimates read real store coverage
+        self.semindex = None
         self.defaults = defaults or CostDefaults()
         if ai_selectivity_default is not None:
             self.defaults = dataclasses.replace(
@@ -141,12 +157,17 @@ class CostModel:
         self.stats = stats
         # alias -> table stats resolved at plan time
         self._alias_stats: Dict[str, TableStats] = {}
+        self._alias_tables: Dict[str, str] = {}
+        # (model, qualified column) -> content keys, for store-coverage
+        # estimates (catalog tables are immutable, so keys never change)
+        self._coverage_keys: Dict[tuple, list] = {}
 
     # ------------------------------------------------------------------
     def bind_alias(self, alias: str, table_name: str) -> None:
         """Associate a query alias with a catalog table's statistics (done
         automatically while walking Scans in `est_rows`)."""
         self._alias_stats[alias] = self.catalog.stats[table_name]
+        self._alias_tables[alias] = table_name
 
     def _col_stats(self, qualified: str):
         alias, _, col = qualified.partition(".")
@@ -194,7 +215,8 @@ class CostModel:
         """Provenance of this predicate's estimates: ``"observed"``
         (store is confident), ``"blended"`` (some evidence, shrunk toward
         the prior) or ``"default"`` (static fallback only)."""
-        if not isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify)):
+        if not isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify,
+                                 E.AISimilarity, E.AIEmbed)):
             return "default"
         obs = self.observed(pred)
         if obs is None or not obs.evaluated:
@@ -215,7 +237,8 @@ class CostModel:
         static token estimate ``price(model) × (template + arg tokens)``.
         Non-AI predicates: ``defaults.rel_pred_cost``.
         """
-        if isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify)):
+        if isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify,
+                             E.AISimilarity, E.AIEmbed)):
             static = self._static_ai_cost_per_row(pred)
             obs = self.observed(pred)
             if obs is not None and obs.evaluated:
@@ -223,9 +246,95 @@ class CostModel:
                     return obs.cost_per_row
                 return self._blend(obs.cost_per_row, obs.evaluated, static)
             return static
+        # comparisons over AI_SIMILARITY (e.g. ``AI_SIMILARITY(a,b) >
+        # 0.8``) cost their embedded sides per row, not a numpy compare
+        inner = [c for c in E.ai_calls_in(pred)
+                 if isinstance(c, (E.AISimilarity, E.AIEmbed))]
+        if inner:
+            return sum(self._static_ai_cost_per_row(c) for c in inner)
         return self.defaults.rel_pred_cost
 
+    def _embed_side_cost(self, side: E.Expr, coverage: float = 0.0,
+                         model: Optional[str] = None) -> float:
+        """Credits to embed one row of ``side`` on the embedding tier.
+        Literals embed once per query — per-row that amortizes to ~0."""
+        if not side.refs():
+            return 0.0
+        toks = sum(self.avg_tokens(r) for r in side.refs())
+        return credits_for(model or self.embed_model, 1, EMBED) * toks \
+            * (1.0 - coverage)
+
+    def _column_values(self, qualified: str):
+        """Raw values of an alias-qualified column, or None."""
+        alias, _, col = qualified.partition(".")
+        tname = self._alias_tables.get(alias)
+        if tname is None:
+            return None
+        t = self.catalog.tables.get(tname)
+        if t is None:
+            return None
+        name = col if col in t else (qualified if qualified in t else None)
+        return t.column(name) if name else None
+
+    def embed_coverage(self, side: E.Expr,
+                       model: Optional[str] = None) -> float:
+        """Fraction of ``side``'s values already in the embedding store
+        (real coverage when a `SemanticIndexManager` is attached and the
+        side is one resolvable column; the static default otherwise) —
+        this is how a warm store makes index-assisted plans cheap at
+        plan time, not just at run time.
+
+        The column's content keys are computed once per (model, column)
+        and cached for the engine's lifetime (catalog tables are
+        immutable), so repeated plan-time coverage checks are dict
+        lookups, not re-hashes of the whole column.
+        """
+        d = self.defaults.index_coverage_default
+        if self.semindex is None:
+            return d
+        refs = side.refs()
+        if len(refs) != 1:
+            return d
+        qualified = next(iter(refs))
+        model = model or self.semindex.cfg.model or self.embed_model
+        dim = self.semindex.cfg.dim
+        # cache under the *resolved table*, not the query alias — the
+        # same alias letter binds to different tables across queries on
+        # one long-lived cost model
+        alias, _, leaf = qualified.partition(".")
+        tname = self._alias_tables.get(alias)
+        cache_key = ((model, dim, f"{tname}.{leaf or qualified}")
+                     if tname else None)
+        keys = self._coverage_keys.get(cache_key) if cache_key else None
+        if keys is None:
+            vals = self._column_values(qualified)
+            if vals is None:
+                return d
+            from repro.semindex.store import content_key
+            keys = [content_key(model, str(v), dim) for v in vals]
+            if cache_key:
+                self._coverage_keys[cache_key] = keys
+        if not keys:
+            return d
+        store = self.semindex.store
+        return sum(k in store for k in keys) / len(keys)
+
+    def _embed_model_of(self, pred: E.Expr) -> str:
+        """The embedding model an AI_EMBED / AI_SIMILARITY will actually
+        use: an explicit ``model =>`` wins over the default tier."""
+        return getattr(pred, "model", None) or self.embed_model
+
     def _static_ai_cost_per_row(self, pred: E.Expr) -> float:
+        if isinstance(pred, E.AIEmbed):
+            m = self._embed_model_of(pred)
+            return self._embed_side_cost(
+                pred.arg, self.embed_coverage(pred.arg, m), m)
+        if isinstance(pred, E.AISimilarity):
+            m = self._embed_model_of(pred)
+            return (self._embed_side_cost(
+                        pred.left, self.embed_coverage(pred.left, m), m)
+                    + self._embed_side_cost(
+                        pred.right, self.embed_coverage(pred.right, m), m))
         if isinstance(pred, (E.AIFilter, E.AIScore)):
             model = pred.model or (
                 self.multimodal_model
@@ -251,8 +360,8 @@ class CostModel:
         classical NDV-based rules with `CostDefaults` fallbacks.
         """
         d = self.defaults
-        if isinstance(pred, E.AIScore):
-            return 1.0                 # ORDER BY keys never filter rows
+        if isinstance(pred, (E.AIScore, E.AISimilarity, E.AIEmbed)):
+            return 1.0                 # value-producing, never filters rows
         if isinstance(pred, (E.AIFilter, E.AIClassify)):
             obs = self.observed(pred)
             if obs is not None and obs.evaluated:
@@ -342,7 +451,7 @@ class CostModel:
             for p in node.residual:
                 out *= self.predicate_selectivity(p)
             return out
-        if isinstance(node, P.SemanticJoinClassify):
+        if isinstance(node, (P.SemanticJoinClassify, P.SemanticJoinIndex)):
             l = self.est_rows(node.left)
             return l * self.defaults.labels_per_left_row
         if isinstance(node, P.TopK):
@@ -377,21 +486,47 @@ class CostModel:
             l = self.est_rows(node.left)
             r = self.est_rows(node.right)
             calls_per_row = max(1.0, math.ceil(r / node.max_labels_per_call))
+            labels_per_call = min(r, float(node.max_labels_per_call))
             # the same surrogate the executor records observations under,
-            # so cross-query feedback reaches the rewrite decision
+            # so cross-query feedback reaches the rewrite decision; the
+            # static fallback prices the real per-call context — left
+            # text plus a full label chunk — so the three-way race with
+            # the index plan compares like with like
             fake = E.AIClassify(node.prompt, labels=(), model=node.model)
-            total += l * calls_per_row * self.predicate_cost_per_row(fake)
+            obs = self.observed(fake)
+            static = self._verify_call_cost(node, labels_per_call)
+            if obs is not None and obs.evaluated:
+                if obs.evaluated >= self.defaults.stats_min_rows:
+                    per_call = obs.cost_per_row
+                else:
+                    per_call = self._blend(obs.cost_per_row, obs.evaluated,
+                                           static)
+            else:
+                per_call = static
+            total += l * calls_per_row * per_call
+        if isinstance(node, P.SemanticJoinIndex):
+            total += self._index_join_cost(node)
         if isinstance(node, P.Sort):
             rows = self.est_rows(node.child)
             for sk in node.keys:
                 if isinstance(sk.expr, E.AIScore):
                     total += rows * self.predicate_cost_per_row(
                         self.resolved_score(sk.expr))
+                elif isinstance(sk.expr, E.AISimilarity):
+                    total += rows * self.predicate_cost_per_row(
+                        self.resolved_similarity(sk.expr))
         if isinstance(node, P.TopK):
             rows = self.est_rows(node.child)
             cand = self.topk_candidates(rows, node.n)
             prefilter = self.topk_prefilter_applies(node, rows)
             for i, sk in enumerate(node.keys):
+                if isinstance(sk.expr, E.AISimilarity):
+                    # embedding-based: every distinct row text embeds
+                    # once regardless of pruning (the index saves the
+                    # *re*-embeds, which coverage already discounts)
+                    total += rows * self.predicate_cost_per_row(
+                        self.resolved_similarity(sk.expr))
+                    continue
                 if not isinstance(sk.expr, E.AIScore):
                     continue
                 if prefilter and i == 0:
@@ -420,6 +555,76 @@ class CostModel:
         proxy-prefilter and oracle scores as distinct populations)."""
         return E.AIScore(pred.prompt,
                          model=model or pred.model or self.default_model)
+
+    def resolved_similarity(self, pred: E.AISimilarity) -> E.AISimilarity:
+        """`E.AISimilarity` with the embedding model made explicit —
+        the surrogate both pricing and executor telemetry key on."""
+        return E.AISimilarity(pred.left, pred.right,
+                              model=pred.model or self.embed_model)
+
+    # ------------------------------------------------------------------
+    # index-assisted semantic join pricing
+    # ------------------------------------------------------------------
+
+    def index_candidates_per_probe(self, node: P.SemanticJoinIndex,
+                                   right_rows: float) -> float:
+        """Learned mean kNN candidates per probe row for this blocking
+        site (`StatsStore.observe_index` feedback); static default is
+        the configured ``k``."""
+        obs = None
+        if self.stats is not None:
+            obs = self.stats.get(index_join_fingerprint(
+                node.prompt.template, node.model,
+                _expr_name(node.left_arg), node.label_col))
+        cand = (obs.candidates_per_probe
+                if obs is not None and obs.index_probes else float(node.k))
+        return min(cand, right_rows) if right_rows else cand
+
+    def index_verify_surrogate(self, node) -> E.AIClassify:
+        """The surrogate `E.AIClassify` the executor records the index
+        join's verification calls under — labels ``("__index__",)`` keep
+        it a distinct fingerprint from the full rewrite's surrogate (the
+        two have very different per-call token counts)."""
+        return E.AIClassify(node.prompt, labels=("__index__",),
+                            model=node.model)
+
+    def _index_join_cost(self, node: P.SemanticJoinIndex) -> float:
+        """Expected credits of index-assisted blocking: embed both sides
+        (store coverage discounts), then one multi-label verification
+        call per left row over ~candidates_per_probe labels."""
+        l = self.est_rows(node.left)
+        r = self.est_rows(node.right)
+        label_side = E.Column(node.label_col)
+        emb = (l * self._embed_side_cost(node.left_arg,
+                                         self.embed_coverage(node.left_arg))
+               + r * self._embed_side_cost(label_side,
+                                           self.embed_coverage(label_side)))
+        cand = self.index_candidates_per_probe(node, r)
+        calls_per_row = max(1.0, math.ceil(
+            cand / max(node.max_labels_per_call, 1)))
+        fake = self.index_verify_surrogate(node)
+        obs = self.observed(fake)
+        static = self._verify_call_cost(node, cand)
+        if obs is not None and obs.evaluated:
+            if obs.evaluated >= self.defaults.stats_min_rows:
+                per_call = obs.cost_per_row
+            else:
+                per_call = self._blend(obs.cost_per_row, obs.evaluated,
+                                       static)
+        else:
+            per_call = static
+        return emb + l * calls_per_row * per_call
+
+    def _verify_call_cost(self, node, labels_in_call: float) -> float:
+        """Static per-call price of one multi-label verification call
+        (classify rewrite or index blocking): the left text plus
+        ``labels_in_call`` candidate labels in the context."""
+        model = node.model or self.default_model
+        label_toks = max(self.avg_tokens(node.label_col), 2.0) + 2.0
+        toks = (len(node.prompt.template) / 4.0
+                + sum(self.avg_tokens(rf) for rf in node.left_arg.refs())
+                + labels_in_call * label_toks)
+        return CREDITS_PER_MTOK.get(model, 0.5) * toks / 1e6
 
     def topk_candidates(self, rows: float, n: int) -> float:
         """Rows escalated to the ordering model by the top-k prefilter."""

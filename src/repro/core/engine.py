@@ -82,6 +82,11 @@ class QueryReport:
     # total/executed/cancelled, rows scanned/emitted, early_terminated,
     # cancelled (never-dispatched) request count; None otherwise
     partitions: Optional[Dict[str, Any]] = None
+    # semantic-index telemetry: index joins / top-k prunes run, kNN
+    # probes and candidates, verification calls, texts embedded and the
+    # EMBED requests actually dispatched for them (store hits cost
+    # none); None when no query operator touched the index subsystem
+    semindex: Optional[Dict[str, Any]] = None
 
     def explain_analyze(self) -> str:
         """EXPLAIN ANALYZE-style rendering: the optimized plan followed
@@ -127,6 +132,15 @@ class QueryReport:
                 f"{p['rows_emitted']} emitted, "
                 f"{p['cancelled_requests']} queued request(s) "
                 f"withdrawn{suffix}")
+        if self.semindex:
+            s = self.semindex
+            lines.append(
+                f"-- semindex: {s['index_joins']} join(s) / "
+                f"{s['index_topk']} top-k via index, {s['probes']} probes "
+                f"-> {s['candidates']} candidates, "
+                f"{s['verify_calls']} verification call(s), "
+                f"{s['embed_texts']} texts embedded "
+                f"({s['embed_llm_calls']} EMBED requests)")
         return "\n".join(lines)
 
 
@@ -146,6 +160,16 @@ class AisqlEngine:
         stats_path: convenience — build the store from this JSON file
             and save back after every query (ignored when ``stats`` is
             passed explicitly; call ``stats.save(path)`` yourself then).
+        semindex: the semantic index subsystem — ``True`` for a fresh
+            default `SemanticIndexManager`, a `SemIndexConfig` to
+            configure one, or a manager instance to *share* (the serving
+            runtime passes one manager to every tenant session).  None
+            (default) disables index-assisted plans entirely: the
+            optimizer never races `SemanticJoinIndex` and top-k
+            similarity queries embed through the client directly.
+        semindex_path: persistence prefix for the embedding store
+            (``<path>.json`` + ``<path>.npz``), used when the manager is
+            built here; saved after every query like ``stats_path``.
     """
 
     def __init__(self, catalog: Catalog, client: CortexClient, *,
@@ -153,20 +177,36 @@ class AisqlEngine:
                  executor: Optional[ExecConfig] = None,
                  llm_judge=None,
                  stats: Optional[StatsStore] = None,
-                 stats_path: Optional[str] = None):
+                 stats_path: Optional[str] = None,
+                 semindex=None,
+                 semindex_path: Optional[str] = None):
+        from repro.semindex import SemanticIndexManager, SemIndexConfig
         self.catalog = catalog
         self.client = client
         opt_cfg = optimizer or OptimizerConfig()
         self.stats_path = stats_path if stats is None else None
         self.stats = stats if stats is not None else StatsStore(stats_path)
+        self.semindex_path = None
+        if semindex is True:
+            semindex = SemanticIndexManager(path=semindex_path)
+            self.semindex_path = semindex_path
+        elif isinstance(semindex, SemIndexConfig):
+            semindex = SemanticIndexManager(semindex, path=semindex_path)
+            self.semindex_path = semindex_path
+        elif semindex is None and semindex_path is not None:
+            semindex = SemanticIndexManager(path=semindex_path)
+            self.semindex_path = semindex_path
+        self.semindex = semindex or None
         self.cost = CostModel(catalog, default_model=client.default_model,
                               proxy_model=client.proxy_model,
+                              embed_model=client.embed_model,
                               defaults=opt_cfg.cost_defaults,
                               stats=self.stats)
+        self.cost.semindex = self.semindex
         self.opt = Optimizer(catalog, cfg=opt_cfg, cost=self.cost,
                              llm_judge=llm_judge)
         self.exec = Executor(catalog, client, cfg=executor, cost=self.cost,
-                             stats=self.stats)
+                             stats=self.stats, semindex=self.semindex)
         # keep the planner's TopK pricing on the path the runtime takes
         self.cost.topk_prefilter = self.exec.cfg.topk_prefilter
         self.last_report: Optional[QueryReport] = None
@@ -220,6 +260,15 @@ class AisqlEngine:
                 calls = l * max(1.0, math.ceil(r / n.max_labels_per_call))
                 fake = E.AIClassify(n.prompt, labels=(), model=n.model)
                 out.append(self._op_estimate(fake, calls))
+            elif isinstance(n, P.SemanticJoinIndex):
+                import math
+                l = self.cost.est_rows(n.left)
+                r = self.cost.est_rows(n.right)
+                cand = self.cost.index_candidates_per_probe(n, r)
+                calls = l * max(1.0, math.ceil(
+                    cand / max(n.max_labels_per_call, 1)))
+                out.append(self._op_estimate(
+                    self.cost.index_verify_surrogate(n), calls))
             elif isinstance(n, (P.Sort, P.TopK)):
                 rows = self.cost.est_rows(n.child)
                 cand = (self.cost.topk_candidates(rows, n.n)
@@ -227,6 +276,12 @@ class AisqlEngine:
                 prefilters = (isinstance(n, P.TopK)
                               and self.cost.topk_prefilter_applies(n, rows))
                 for i, sk in enumerate(n.keys):
+                    if isinstance(sk.expr, E.AISimilarity):
+                        # embedding-based: every row embeds once (store
+                        # coverage already discounts the warm fraction)
+                        out.append(self._op_estimate(
+                            self.cost.resolved_similarity(sk.expr), rows))
+                        continue
                     if not isinstance(sk.expr, E.AIScore):
                         continue
                     prefilter = prefilters and i == 0
@@ -303,9 +358,12 @@ class AisqlEngine:
             pipeline=pipe, operators=operators,
             reoptimizations=list(self.exec.reoptimizations),
             pilot=self.exec.pilot_telemetry,
-            partitions=self.exec.partition_telemetry)
+            partitions=self.exec.partition_telemetry,
+            semindex=self.exec.index_telemetry)
         if self.stats_path is not None:
             self.stats.save(self.stats_path)
+        if self.semindex_path is not None and self.semindex is not None:
+            self.semindex.save(self.semindex_path)
         return out
 
     # telemetry passthroughs ------------------------------------------------

@@ -77,7 +77,8 @@ from repro.core import plan as P
 from repro.core.aggregate import AggConfig, HierarchicalAggregator
 from repro.core.cascade import CascadeConfig, SupgItCascade
 from repro.core.cost import Catalog, CostModel
-from repro.core.stats import StatsStore, predicate_fingerprint
+from repro.core.stats import (StatsStore, index_join_fingerprint,
+                              predicate_fingerprint)
 from repro.inference.api import CortexClient
 from repro.inference.backend import CLASSIFY, COMPLETE, SCORE, Request
 from repro.inference.pipeline import ResultFuture
@@ -86,6 +87,27 @@ from repro.tables.table import Table, _hash_join_indices
 
 def _is_hidden(col: str) -> bool:
     return col.rsplit(".", 1)[-1].startswith("_")
+
+
+def _strip_format_slots(template: str) -> str:
+    """The prompt template as free text: ``{0}``-style slots removed."""
+    import re
+    return re.sub(r"\{\d+\}", " ", template).strip()
+
+
+def _side_desc(e: E.Expr) -> str:
+    """Compact description of an AI_SIMILARITY / AI_EMBED argument."""
+    if isinstance(e, E.Column):
+        return e.name
+    if isinstance(e, E.Literal):
+        return repr(str(e.value)[:24])
+    return type(e).__name__
+
+
+def _unit_rows(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, np.float64)
+    n = np.linalg.norm(x, axis=-1, keepdims=True)
+    return x / np.maximum(n, 1e-12)
 
 
 _MD_MAP = {"_truth": "truth", "_difficulty": "difficulty",
@@ -275,6 +297,14 @@ class ExecConfig:
     # fused TopK: score everything with the proxy model, escalate only
     # ceil(topk_candidate_factor * k) candidates to the ordering model
     topk_prefilter: bool = True
+    # -- semantic index (requires an attached SemanticIndexManager) -----
+    # ORDER BY AI_SCORE top-k: replace proxy-score-all with index-
+    # candidates-then-oracle (the index ranks rows by similarity to the
+    # score prompt; only the escalated candidates reach the oracle).
+    # Opt-in: unlike the AI_SIMILARITY pruning (exact by construction),
+    # result rows are only guaranteed up to the index's recall bound —
+    # see docs/semantic-index.md.
+    topk_index_score: bool = False
 
 
 class StreamingLimit:
@@ -337,11 +367,15 @@ class Executor:
     def __init__(self, catalog: Catalog, client: CortexClient, *,
                  cfg: Optional[ExecConfig] = None,
                  cost: Optional[CostModel] = None,
-                 stats: Optional[StatsStore] = None):
+                 stats: Optional[StatsStore] = None,
+                 semindex=None):
         self.catalog = catalog
         self.client = client
         self.cfg = cfg or ExecConfig()
         self.cost = cost or CostModel(catalog)
+        # optional SemanticIndexManager: embedding store + ANN indexes
+        # (shared across engines/sessions when serving)
+        self.semindex = semindex
         # the learned-statistics feedback loop: every evaluation writes
         # observations here; the (shared) cost model reads them back
         self.stats = stats if stats is not None else StatsStore()
@@ -355,8 +389,14 @@ class Executor:
         self.reoptimizations: List[str] = []
         self.pilot_telemetry: Optional[Dict[str, Any]] = None
         self.partition_telemetry: Optional[Dict[str, Any]] = None
+        self.index_telemetry: Optional[Dict[str, Any]] = None
         self._fp_by_key: Dict[str, str] = {}
         self._prefetch_spend: Dict[str, float] = {}
+        # per-query embedding memo (model, text) -> vector: a literal
+        # query side embeds once per query on *every* client and
+        # execution mode (chunked/partitioned evaluation would otherwise
+        # re-embed it per batch on an eager client)
+        self._embed_memo: Dict[Tuple[str, str], np.ndarray] = {}
 
     @property
     def pipelined(self) -> bool:
@@ -379,7 +419,9 @@ class Executor:
         self.reoptimizations = []
         self.pilot_telemetry = None
         self.partition_telemetry = None
+        self.index_telemetry = None
         self._fp_by_key: Dict[str, str] = {}
+        self._embed_memo = {}
         out = self._exec(node)
         self._fold_cascade_stats()
         self.stats.note_query(set(self._fp_by_key.values()))
@@ -406,6 +448,8 @@ class Executor:
             return self._exec_join(node)
         if isinstance(node, P.SemanticJoinClassify):
             return self._exec_semantic_join(node)
+        if isinstance(node, P.SemanticJoinIndex):
+            return self._exec_semantic_join_index(node)
         if isinstance(node, P.Aggregate):
             return self._exec_aggregate(node)
         if isinstance(node, P.Project):
@@ -432,6 +476,13 @@ class Executor:
             return f"AI_SCORE({pred.prompt.template[:40]!r}, {model})"
         if isinstance(pred, E.AIClassify):
             return f"AI_CLASSIFY({pred.text.template[:40]!r})"
+        if isinstance(pred, E.AISimilarity):
+            model = pred.model or self.client.embed_model
+            return (f"AI_SIMILARITY({_side_desc(pred.left)}, "
+                    f"{_side_desc(pred.right)}, {model})")
+        if isinstance(pred, E.AIEmbed):
+            model = pred.model or self.client.embed_model
+            return f"AI_EMBED({_side_desc(pred.arg)}, {model})"
         return f"{type(pred).__name__}:{abs(hash(pred)) % 10 ** 8}"
 
     def _stats_for(self, pred: E.Expr) -> PredicateStats:
@@ -903,42 +954,165 @@ class Executor:
         return table.take(self._order_rows(table, rows, node.keys))
 
     def _exec_topk(self, node: P.TopK) -> Table:
-        """Fused ORDER BY + LIMIT.  With an AI-scored primary key the
-        proxy model scores every row first and only the best
-        ``topk_candidate_factor * k`` candidates are escalated to the
-        ordering model — the early-exit path for top-k search."""
+        """Fused ORDER BY + LIMIT — three early-exit paths by key kind:
+
+        * AI_SIMILARITY primary: embeddings from the semantic index's
+          store (only cold texts cost EMBED requests) ranked by the
+          similarity kernel — exact, so index-on == index-off rows;
+        * AI_SCORE primary with ``topk_index_score``: the index ranks
+          rows against the score prompt's embedding and only the
+          escalated candidates reach the ordering model (opt-in:
+          bounded by the index's recall, see docs/semantic-index.md);
+        * AI_SCORE primary otherwise: the proxy model scores every row
+          and the best ``topk_candidate_factor * k`` escalate.
+        """
         table = self._exec(node.child)
         n = node.n
         rows = np.arange(table.num_rows, dtype=np.int64)
         primary = node.keys[0] if node.keys else None
-        if (primary is not None and isinstance(primary.expr, E.AIScore)
-                and self.cfg.topk_prefilter and table.num_rows > n):
-            proxy = self.cfg.proxy_model or self.client.proxy_model
-            oracle = primary.expr.model or self.client.default_model
-            k_cand = int(self.cost.topk_candidates(float(table.num_rows), n))
-            if proxy != oracle and k_cand < table.num_rows:
-                pscores = self._ai_scores(primary.expr, table, rows, proxy)
-                perm = sorted(range(len(rows)),
-                              key=lambda i: pscores[i],
-                              reverse=primary.desc)
-                cand = np.sort(rows[np.asarray(perm[:k_cand],
-                                               dtype=np.int64)])
-                self.reoptimizations.append(
-                    f"topk-prefilter: {proxy} scored {len(rows)} rows, "
-                    f"escalated {len(cand)} candidates to {oracle} "
-                    f"(k={n})")
-                return table.take(self._order_rows(table, cand,
-                                                   node.keys)[:n])
+        if primary is not None and table.num_rows > n:
+            if isinstance(primary.expr, E.AISimilarity):
+                out = self._topk_similarity(node, table, rows)
+                if out is not None:
+                    return out
+            if isinstance(primary.expr, E.AIScore):
+                if self.semindex is not None and self.cfg.topk_index_score:
+                    out = self._topk_index_score(node, table, rows)
+                    if out is not None:
+                        return out
+                if self.cfg.topk_prefilter:
+                    out = self._topk_proxy_prefilter(node, table, rows)
+                    if out is not None:
+                        return out
         return table.take(self._order_rows(table, rows, node.keys)[:n])
 
+    def _topk_proxy_prefilter(self, node: P.TopK, table: Table,
+                              rows: np.ndarray) -> Optional[Table]:
+        """Proxy-score-all, escalate the best candidates to the oracle."""
+        primary = node.keys[0]
+        n = node.n
+        proxy = self.cfg.proxy_model or self.client.proxy_model
+        oracle = primary.expr.model or self.client.default_model
+        k_cand = int(self.cost.topk_candidates(float(table.num_rows), n))
+        if proxy == oracle or k_cand >= table.num_rows:
+            return None
+        pscores = self._ai_scores(primary.expr, table, rows, proxy)
+        perm = sorted(range(len(rows)), key=lambda i: pscores[i],
+                      reverse=primary.desc)
+        cand = np.sort(rows[np.asarray(perm[:k_cand], dtype=np.int64)])
+        self.reoptimizations.append(
+            f"topk-prefilter: {proxy} scored {len(rows)} rows, "
+            f"escalated {len(cand)} candidates to {oracle} (k={n})")
+        return table.take(self._order_rows(table, cand, node.keys)[:n])
+
+    def _topk_similarity(self, node: P.TopK, table: Table,
+                         rows: np.ndarray) -> Optional[Table]:
+        """Semantic top-k over an AI_SIMILARITY primary key.
+
+        The similarity values come from embeddings (store-cached when a
+        manager is attached) and the full ordering is computed from them
+        locally — numerically identical to the unpruned Sort+Limit, so
+        this path never changes result rows; it only removes repeat
+        EMBED spend and, for the single-key case, ranks through the
+        similarity kernel instead of a host sort."""
+        primary = node.keys[0]
+        e = primary.expr
+        n = node.n
+        sims, lv, rv = self._similarity_with_vectors(e, table, rows)
+        lit_left = not e.left.refs()
+        lit_right = not e.right.refs()
+        col_side = e.right if lit_left else e.left
+        col_refs = col_side.refs()
+        if (self.semindex is not None and len(node.keys) == 1
+                and lit_left != lit_right and len(col_refs) == 1
+                and self._is_base_snapshot(node.child, table,
+                                           next(iter(col_refs)))):
+            # managed index ranking: the column side's snapshot gets (or
+            # reuses) an `IvfFlatIndex`; the literal side is the query
+            # vector.  Search honors SemIndexConfig.exact_topk / nprobe:
+            # the default flat scan is exact (ties toward the lower row
+            # index, matching the stable host sort), IVF probing trades
+            # that for the configured recall.  ASC negates the query:
+            # the top-k of -q·c is the bottom-k of q·c.
+            mgr = self.semindex
+            model = e.model or self.client.embed_model
+            col_key = self._index_column_key(node.child,
+                                             next(iter(col_refs)))
+            corpus_texts = self._render_side(col_side, table, rows)
+            mgr.ensure_index(self.client, col_key, corpus_texts,
+                             metadata=row_metadata(table, rows),
+                             model=model)
+            qv = (lv if lit_left else rv)[:1].astype(np.float32)
+            if not primary.desc:
+                qv = -qv
+            _, idx = mgr.search(col_key, qv, min(n, len(rows)))
+            order = np.asarray(idx[0])
+            order = order[order >= 0]
+            self._index_note(index_topk=1)
+            self.reoptimizations.append(
+                f"topk-similarity: index ranked {len(rows)} rows "
+                f"through the similarity kernel, top {len(order)} kept")
+            return table.take(rows[order[:n]])
+        precomputed = {id(e): sims}
+        return table.take(self._order_rows(table, rows, node.keys,
+                                           precomputed)[:n])
+
+    def _topk_index_score(self, node: P.TopK, table: Table,
+                          rows: np.ndarray) -> Optional[Table]:
+        """Index-candidates-then-oracle for ``ORDER BY AI_SCORE`` top-k:
+        rank rows by embedding similarity to the score prompt, escalate
+        only ``topk_candidate_factor * k`` candidates to the ordering
+        model — no proxy scan at all.  Opt-in (``topk_index_score``):
+        the candidate set is only as good as the embedding space, so
+        result rows are guaranteed up to that recall, not exactly."""
+        primary = node.keys[0]
+        pred: E.AIScore = primary.expr
+        n = node.n
+        k_cand = int(self.cost.topk_candidates(float(table.num_rows), n))
+        if k_cand >= table.num_rows or not pred.prompt.args:
+            return None
+        model = self.semindex.model_for(self.client)
+        # corpus: the rendered prompt arguments (the row text the score
+        # judges); query: the prompt template itself, format slots
+        # stripped
+        arg_vals = [E.eval_expr(a, table, rows) for a in pred.prompt.args]
+        texts = [" ".join(str(a[i]) for a in arg_vals)
+                 for i in range(len(rows))]
+        md = row_metadata(table, rows)
+        c0 = self.client.ai_calls
+        cv = self.semindex.embed_texts(self.client, texts, metadata=md,
+                                       model=model)
+        query = _strip_format_slots(pred.prompt.template)
+        qv = self.semindex.embed_texts(self.client, [query], model=model)
+        self._index_note(embed_texts=len(texts) + 1,
+                         embed_llm_calls=self.client.ai_calls - c0)
+        if not primary.desc:
+            qv = -qv
+        _, idx = self.semindex.topk_candidates(qv.astype(np.float32),
+                                               cv.astype(np.float32),
+                                               k_cand)
+        order = np.asarray(idx[0])
+        cand = np.sort(rows[order[order >= 0]])
+        self._index_note(index_topk=1, probes=1, candidates=len(cand))
+        oracle = pred.model or self.client.default_model
+        self.reoptimizations.append(
+            f"topk-index: semantic index ranked {len(rows)} rows, "
+            f"escalated {len(cand)} candidates to {oracle} (k={n}, "
+            "no proxy scan)")
+        return table.take(self._order_rows(table, cand, node.keys)[:n])
+
     def _order_rows(self, table: Table, rows: np.ndarray,
-                    keys) -> np.ndarray:
+                    keys, precomputed=None) -> np.ndarray:
         """Stable multi-key ordering of ``rows``: repeated stable sorts
         from the least-significant key up (Python's sort keeps ties in
-        input order even with ``reverse=True``)."""
+        input order even with ``reverse=True``).  ``precomputed`` maps
+        ``id(key expr) -> values over rows`` for keys a caller already
+        evaluated (the TopK paths never pay for a key twice)."""
         idx = np.arange(len(rows))
         for sk in reversed(list(keys)):
-            vals = self._sort_key_values(sk.expr, table, rows)
+            vals = (precomputed or {}).get(id(sk.expr))
+            if vals is None:
+                vals = self._sort_key_values(sk.expr, table, rows)
             sub = vals[idx]
             perm = sorted(range(len(sub)), key=lambda i: sub[i],
                           reverse=sk.desc)
@@ -950,6 +1124,8 @@ class Executor:
         if isinstance(expr, E.AIScore):
             return self._ai_scores(expr, table, rows,
                                    expr.model or self.client.default_model)
+        if isinstance(expr, E.AISimilarity):
+            return self._similarity_values(expr, table, rows)
         return np.asarray(E.eval_expr(expr, table, rows))
 
     def _ai_scores(self, pred: E.AIScore, table: Table, rows: np.ndarray,
@@ -978,6 +1154,155 @@ class Executor:
             credits=credits, seconds=seconds)
         return scores
 
+    # ------------------------------------------------------------------
+    # embeddings: AI_EMBED / AI_SIMILARITY evaluation
+    # ------------------------------------------------------------------
+
+    def _index_note(self, **deltas) -> None:
+        """Accumulate per-query semantic-index telemetry
+        (`QueryReport.semindex`)."""
+        if self.index_telemetry is None:
+            self.index_telemetry = {
+                "index_joins": 0, "index_topk": 0, "probes": 0,
+                "candidates": 0, "verify_calls": 0,
+                "embed_texts": 0, "embed_llm_calls": 0}
+        for k, v in deltas.items():
+            self.index_telemetry[k] = self.index_telemetry.get(k, 0) + v
+
+    def _render_side(self, e: E.Expr, table: Table,
+                     rows: np.ndarray) -> List[str]:
+        if isinstance(e, E.Literal):
+            return [str(e.value)] * len(rows)
+        return [str(v) for v in E.eval_expr(e, table, rows)]
+
+    def _embed_side(self, e: E.Expr, table: Table, rows: np.ndarray,
+                    model: str) -> np.ndarray:
+        """Embed one AI_SIMILARITY / AI_EMBED side over ``rows``.
+
+        Distinct texts embed once (crucial on an eager client, where
+        there is no pipeline dedup to absorb a repeated literal); the
+        `SemanticIndexManager`'s store answers warm texts without any
+        EMBED request at all.  Row metadata travels with each request
+        so the simulator's grounding hooks see the same evidence the
+        AI_FILTER path forwards.
+        """
+        texts = self._render_side(e, table, rows)
+        if not texts:                 # a filter eliminated every row
+            return np.zeros((0, 1), np.float32)
+        if e.refs():
+            md = row_metadata(table, rows)
+        else:
+            md = [{} for _ in texts]
+        first: Dict[str, int] = {}
+        for i, t in enumerate(texts):
+            first.setdefault(t, i)
+        cold = [t for t in first if (model, t) not in self._embed_memo]
+        calls0 = self.client.ai_calls
+        if cold:
+            cold_md = [md[first[t]] for t in cold]
+            if self.semindex is not None:
+                vecs = self.semindex.embed_texts(self.client, cold,
+                                                 metadata=cold_md,
+                                                 model=model)
+            else:
+                vecs = self.client.embed(cold, model=model,
+                                         metadata=cold_md)
+            for t, v in zip(cold, vecs):
+                self._embed_memo[(model, t)] = np.asarray(v, np.float32)
+        self._index_note(embed_texts=len(texts),
+                         embed_llm_calls=self.client.ai_calls - calls0)
+        return np.stack([self._embed_memo[(model, t)]
+                         for t in texts]).astype(np.float32)
+
+    def _similarity_with_vectors(self, pred: E.AISimilarity, table: Table,
+                                 rows: np.ndarray):
+        """``(sims, left_vecs, right_vecs)`` for ``rows``, metered into
+        per-query telemetry and the `StatsStore` under the
+        model-resolved surrogate (EMBED spend only — AI_SIMILARITY never
+        touches a generative model)."""
+        model = pred.model or self.client.embed_model
+        surrogate = E.AISimilarity(pred.left, pred.right, model=model)
+        st = self._stats_for(surrogate)
+        t0 = time.perf_counter()
+        c0 = self.client.ai_credits
+        lv = self._embed_side(pred.left, table, rows, model)
+        rv = self._embed_side(pred.right, table, rows, model)
+        sims = np.sum(_unit_rows(lv) * _unit_rows(rv), axis=1)
+        seconds = time.perf_counter() - t0
+        credits = self.client.ai_credits - c0
+        st.evaluated += len(rows)
+        st.passed += int((sims >= 0.5).sum())
+        st.credits += credits
+        st.seconds += seconds
+        self.stats.observe_predicate(
+            self._fp_by_key[self._pred_key(surrogate)],
+            evaluated=len(rows), passed=int((sims >= 0.5).sum()),
+            credits=credits, seconds=seconds)
+        return sims.astype(np.float64), lv, rv
+
+    def _similarity_values(self, pred: E.AISimilarity, table: Table,
+                           rows: np.ndarray) -> np.ndarray:
+        return self._similarity_with_vectors(pred, table, rows)[0]
+
+    def _embed_values(self, pred: E.AIEmbed, table: Table,
+                      rows: np.ndarray) -> np.ndarray:
+        """AI_EMBED projection: one unit vector (tuple cell) per row."""
+        model = pred.model or self.client.embed_model
+        surrogate = E.AIEmbed(pred.arg, model=model)
+        st = self._stats_for(surrogate)
+        t0 = time.perf_counter()
+        c0 = self.client.ai_credits
+        vecs = self._embed_side(pred.arg, table, rows, model)
+        seconds = time.perf_counter() - t0
+        credits = self.client.ai_credits - c0
+        st.evaluated += len(rows)
+        st.passed += len(rows)
+        st.credits += credits
+        st.seconds += seconds
+        self.stats.observe_predicate(
+            self._fp_by_key[self._pred_key(surrogate)],
+            evaluated=len(rows), passed=len(rows),
+            credits=credits, seconds=seconds)
+        out = np.empty(len(rows), dtype=object)
+        for i in range(len(rows)):
+            out[i] = tuple(float(x) for x in vecs[i])
+        return out
+
+    def _eval_mixed(self, e: E.Expr, table: Table,
+                    rows: np.ndarray) -> np.ndarray:
+        """Evaluate an expression tree containing AI_SIMILARITY leaves
+        (e.g. ``AI_SIMILARITY(a, b) > 0.8`` as a WHERE conjunct)."""
+        if isinstance(e, E.AISimilarity):
+            return self._similarity_values(e, table, rows)
+        if isinstance(e, E.BinOp):
+            l = self._eval_mixed(e.left, table, rows)
+            r = self._eval_mixed(e.right, table, rows)
+            ops = {"=": lambda a, b: a == b, "!=": lambda a, b: a != b,
+                   "<": lambda a, b: a < b, "<=": lambda a, b: a <= b,
+                   ">": lambda a, b: a > b, ">=": lambda a, b: a >= b,
+                   "+": lambda a, b: a + b, "-": lambda a, b: a - b,
+                   "*": lambda a, b: a * b, "/": lambda a, b: a / b}
+            return ops[e.op](l, r)
+        if isinstance(e, E.Between):
+            v = self._eval_mixed(e.expr, table, rows)
+            lo = self._eval_mixed(e.lo, table, rows)
+            hi = self._eval_mixed(e.hi, table, rows)
+            return (v >= lo) & (v <= hi)
+        if isinstance(e, E.Not):
+            return ~np.asarray(self._eval_mixed(e.arg, table, rows), bool)
+        if isinstance(e, E.BoolOp):
+            parts = [np.asarray(self._eval_mixed(a, table, rows), bool)
+                     for a in e.args]
+            out = parts[0]
+            for p in parts[1:]:
+                out = (out & p) if e.op == "and" else (out | p)
+            return out
+        if isinstance(e, E.InList):
+            v = self._eval_mixed(e.expr, table, rows)
+            allowed = set(e.values)
+            return np.asarray([x in allowed for x in v])
+        return np.asarray(E.eval_expr(e, table, rows))
+
     def _eval_pred(self, pred: E.Expr, table: Table, rows: np.ndarray
                    ) -> np.ndarray:
         if isinstance(pred, E.AIFilter):
@@ -988,6 +1313,9 @@ class Executor:
                 "with AI_FILTER instead")
         if isinstance(pred, E.AIClassify):
             raise NotImplementedError("AI_CLASSIFY as a predicate")
+        if any(isinstance(c, E.AISimilarity) for c in E.ai_calls_in(pred)):
+            return np.asarray(self._eval_mixed(pred, table, rows),
+                              dtype=bool)
         return np.asarray(E.eval_expr(pred, table, rows), dtype=bool)
 
     # -- AI_FILTER with optional cascade --
@@ -1151,6 +1479,173 @@ class Executor:
                              np.asarray(pairs_r, np.int64))
 
     # ------------------------------------------------------------------
+    # SemanticJoinIndex (index-assisted blocking + LLM verification)
+    # ------------------------------------------------------------------
+
+    def _is_base_snapshot(self, plan: P.PlanNode, table: Table,
+                          qualified: str) -> bool:
+        """Whether the executed snapshot is the referenced base column
+        in full.  The managed per-column index is only worth (re)building
+        for the full column — a filtered subset would churn the content
+        signature on every distinct WHERE clause; those rank from the
+        already-computed similarity values instead."""
+        key = self._index_column_key(plan, qualified)
+        tname = key.split(".", 1)[0]
+        try:
+            return self.catalog.table(tname).num_rows == table.num_rows
+        except KeyError:
+            return False
+
+    def _index_column_key(self, plan: P.PlanNode, qualified: str) -> str:
+        """Stable registry key for an indexed column: the base table's
+        name when the alias resolves to a Scan (so two queries aliasing
+        one table share the index), the qualified name otherwise."""
+        alias, _, leaf = qualified.partition(".")
+
+        def walk(n: P.PlanNode):
+            if isinstance(n, P.Scan) and n.alias == alias:
+                return f"{n.table}.{leaf or alias}"
+            for c in n.children():
+                found = walk(c)
+                if found:
+                    return found
+            return None
+
+        return walk(plan) or qualified
+
+    def _exec_semantic_join_index(self, node: P.SemanticJoinIndex) -> Table:
+        """Index-assisted semantic join: kNN candidate labels per left
+        row (embedding kernel, near-zero credits), then one multi-label
+        AI_CLASSIFY per left row over *only its candidates*.
+
+        The verification prompt is byte-identical to the §5.3 rewrite's,
+        so on backends whose per-label decisions are independent of the
+        candidate-set composition (the simulator keys them that way) the
+        verified pairs are exactly the full rewrite's selections
+        restricted to the candidate set — result parity holds whenever
+        candidate recall covers the selected labels.
+        """
+        if self.semindex is None:       # planned elsewhere; degrade safely
+            return self._exec_semantic_join(P.SemanticJoinClassify(
+                left=node.left, right=node.right, prompt=node.prompt,
+                left_arg=node.left_arg, label_col=node.label_col,
+                model=node.model,
+                max_labels_per_call=node.max_labels_per_call))
+        left = self._exec(node.left)
+        right = self._exec(node.right)
+        mgr = self.semindex
+        label_col = E.resolve_column(right, node.label_col)
+        label_vals = right.column(label_col)
+        label_rows: Dict[str, List[int]] = {}
+        uniq: List[str] = []
+        for j, v in enumerate(label_vals):
+            s = str(v)
+            if s not in label_rows:
+                uniq.append(s)
+                label_rows[s] = []
+            label_rows[s].append(j)
+        if left.num_rows == 0 or not uniq:
+            # an empty side joins to nothing — no blocking, no calls
+            return self._combine(left, right, np.empty(0, np.int64),
+                                 np.empty(0, np.int64))
+        left_rows = np.arange(left.num_rows)
+        left_text = [str(v) for v in
+                     E.eval_expr(node.left_arg, left, left_rows)]
+        md_rows = row_metadata(left, left_rows)
+        embed_model = mgr.model_for(self.client)
+        # --- blocking: label-side IVF index + kNN through the kernel --
+        # the index is built once per column snapshot (refresh-on-drift
+        # via content signature) and shared across queries and — under
+        # serving — tenants; search honors SemIndexConfig.exact_topk /
+        # nprobe (flat exact scan by default)
+        calls0 = self.client.ai_calls
+        c0 = self.client.ai_credits
+        col_key = self._index_column_key(node.right, node.label_col)
+        mgr.ensure_index(self.client, col_key, uniq,
+                         metadata=[{"embed_anchor": u} for u in uniq],
+                         model=embed_model)
+        lvec = mgr.embed_texts(self.client, left_text, metadata=md_rows,
+                               model=embed_model)
+        embed_credits = self.client.ai_credits - c0
+        k = min(node.k, len(uniq))
+        vals, idx = mgr.search(col_key, lvec, k) if k else \
+            (np.zeros((left.num_rows, 0)), np.zeros((left.num_rows, 0),
+                                                    np.int64))
+        floor = mgr.cfg.join_min_sim
+        candidates: List[List[str]] = []
+        for i in range(left.num_rows):
+            cand = [uniq[int(j)] for v, j in zip(vals[i], idx[i])
+                    if j >= 0 and (floor is None or v >= floor)]
+            candidates.append(cand)
+        total_cand = sum(len(c) for c in candidates)
+        fp_index = index_join_fingerprint(
+            node.prompt.template, node.model,
+            node.left_arg.name if isinstance(node.left_arg, E.Column)
+            else type(node.left_arg).__name__, node.label_col)
+        self.stats.observe_index(fp_index, probes=left.num_rows,
+                                 candidates=total_cand)
+        self._index_note(index_joins=1, probes=left.num_rows,
+                         candidates=total_cand,
+                         embed_texts=left.num_rows + len(uniq),
+                         embed_llm_calls=self.client.ai_calls - calls0)
+        # --- verification: candidate-set classify per left row --------
+        instruction = node.prompt.template
+        model = node.model or self.client.default_model
+        chunk = max(node.max_labels_per_call, 1)
+        c1 = self.client.ai_credits
+        s0 = self.client.ai_seconds
+        handles: List[Tuple[int, SemanticHandle]] = []
+        # same pass structure (and pass-tagged prompts) as the classify
+        # rewrite, so the k-pass hybrid-join recall recovery applies to
+        # the candidate sets identically
+        for pass_no in range(max(self.cfg.classify_passes, 1)):
+            tag = "" if pass_no == 0 else (
+                f" (pass {pass_no + 1}: select any additional matches)")
+            for i, cand in enumerate(candidates):
+                if not cand:
+                    continue        # index pruned the row to nothing
+                prompt = ("Select every label that satisfies: "
+                          f"{instruction}{tag}\ninput: {left_text[i]}")
+                for lo in range(0, len(cand), chunk):
+                    op = SemanticOp.classify(
+                        [prompt], [md_rows[i]], cand[lo:lo + chunk], model,
+                        self.cfg.classify_multi_label)
+                    handles.append((i, op.submit(self.client)))
+        selected: List[set] = [set() for _ in range(left.num_rows)]
+        calls = passed = 0
+        for i, handle in handles:
+            for labs in handle.chosen_labels():
+                selected[i].update(labs)
+                calls += 1
+                passed += bool(labs)
+        credits = self.client.ai_credits - c1
+        seconds = self.client.ai_seconds - s0
+        if calls:
+            fake = self.cost.index_verify_surrogate(node)
+            st = self._stats_for(fake)
+            st.evaluated += calls
+            st.passed += passed
+            st.credits += credits
+            st.seconds += seconds
+            self.stats.observe_predicate(
+                self._fp_by_key[self._pred_key(fake)], evaluated=calls,
+                passed=passed, credits=credits, seconds=seconds)
+        self._index_note(verify_calls=calls)
+        self.reoptimizations.append(
+            f"index-join: {left.num_rows} probes -> {total_cand} "
+            f"candidate pairs ({len(uniq)} labels), {calls} verification "
+            f"calls, embeds {embed_credits:.3g} credits")
+        pairs_l: List[int] = []
+        pairs_r: List[int] = []
+        for i, labs in enumerate(selected):
+            for lb in labs:
+                for j in label_rows.get(lb, ()):
+                    pairs_l.append(i)
+                    pairs_r.append(j)
+        return self._combine(left, right, np.asarray(pairs_l, np.int64),
+                             np.asarray(pairs_r, np.int64))
+
+    # ------------------------------------------------------------------
     # Aggregate / Project
     # ------------------------------------------------------------------
 
@@ -1206,6 +1701,10 @@ class Executor:
             return "ai_classify"
         if isinstance(e, E.AIScore):
             return "ai_score"
+        if isinstance(e, E.AISimilarity):
+            return "ai_similarity"
+        if isinstance(e, E.AIEmbed):
+            return "ai_embed"
         return f"col{i}"
 
     def _materialize_item(self, table: Table, item: E.SelectItem) -> Table:
@@ -1322,6 +1821,15 @@ class Executor:
                 cols[name] = self._ai_scores(
                     e, table, rows, e.model or self.client.default_model)
                 types[name] = "float"
+            elif isinstance(e, E.AISimilarity):
+                cols[name] = self._similarity_values(e, table, rows)
+                types[name] = "float"
+            elif isinstance(e, E.AIEmbed):
+                cols[name] = self._embed_values(e, table, rows)
+                types[name] = "str"
+            elif any(isinstance(c, E.AISimilarity)
+                     for c in E.ai_calls_in(e)):
+                cols[name] = self._eval_mixed(e, table, rows)
             else:
                 cols[name] = E.eval_expr(e, table, rows)
         if not cols:                      # SELECT over an empty item list

@@ -162,6 +162,34 @@ class AIScore(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class AIEmbed(Expr):
+    """AI_EMBED(col) — the column's embedding vector (EMBED request
+    kind, priced per input token on the embedding tier).  A projection
+    item; also the building block AI_SIMILARITY reduces to."""
+    arg: Expr
+    model: Optional[str] = None
+
+    def refs(self):
+        return self.arg.refs()
+
+
+@dataclasses.dataclass(frozen=True)
+class AISimilarity(Expr):
+    """AI_SIMILARITY(a, b) — cosine similarity of the two sides'
+    embeddings, in [-1, 1].  Embedding-based by definition (no
+    generative model): each side costs one EMBED request per distinct
+    text, so a literal side embeds exactly once per query and the
+    semantic index can answer ``ORDER BY AI_SIMILARITY(...) LIMIT k``
+    without touching the inference tier at all."""
+    left: Expr
+    right: Expr
+    model: Optional[str] = None
+
+    def refs(self):
+        return self.left.refs() | self.right.refs()
+
+
+@dataclasses.dataclass(frozen=True)
 class AIClassify(Expr):
     """AI_CLASSIFY(text, [labels...]) — §3.4."""
     text: Prompt
@@ -221,7 +249,8 @@ def ai_calls_in(e: Expr) -> List[Expr]:
     out: List[Expr] = []
 
     def walk(x):
-        if isinstance(x, (AIFilter, AIScore, AIClassify, AIComplete)):
+        if isinstance(x, (AIFilter, AIScore, AIClassify, AIComplete,
+                          AIEmbed, AISimilarity)):
             out.append(x)
         if isinstance(x, AggCall) and x.name in ("AI_AGG", "AI_SUMMARIZE_AGG"):
             out.append(x)
@@ -328,7 +357,8 @@ def eval_expr(e: Expr, table: Table, rows: Optional[np.ndarray] = None
         if fn is None:
             raise KeyError(f"unknown function {e.name}")
         return fn(eval_expr(e.args[0], table, rows))
-    if isinstance(e, (AIFilter, AIScore, AIClassify, AIComplete, AggCall)):
+    if isinstance(e, (AIFilter, AIScore, AIClassify, AIComplete, AIEmbed,
+                      AISimilarity, AggCall)):
         raise RuntimeError(f"AI/aggregate expression reached eval_expr: {e}; "
                            "the executor must handle it")
     raise TypeError(f"cannot evaluate {type(e).__name__}")

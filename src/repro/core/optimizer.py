@@ -51,9 +51,17 @@ class OptimizerConfig:
             AI_CLASSIFY rewrite (still subject to the oracle and, when
             ``cost_gate_semantic_rewrite``, an estimated-cost comparison).
         enable_topk_fusion: fuse ``Limit(Sort(...))`` with an AI-scored
-            primary key into a `TopK` node, unlocking the executor's
-            proxy-score-prefilter early-exit path; applied only when the
-            fused plan's estimated LLM credits are not higher.
+            (or AI-similarity) primary key into a `TopK` node, unlocking
+            the executor's prefilter early-exit paths (proxy scores, or
+            the semantic index); applied only when the fused plan's
+            estimated LLM credits are not higher.
+        enable_semantic_index_join: allow the index-assisted blocking
+            plan (`SemanticJoinIndex`) to enter the §5.3 race.  Only
+            effective when the engine has a `SemanticIndexManager`
+            attached; the three-way cost race (naive nested loop vs
+            classification rewrite vs index blocking) picks the cheapest
+            by estimated credits, using learned candidate-rate and
+            per-call-cost statistics when the store has them.
         cost_gate_semantic_rewrite: only apply the §5.3 rewrite when the
             rewritten plan's estimated LLM credits are lower than the
             original's — with a warm `StatsStore` this re-decides the
@@ -76,6 +84,7 @@ class OptimizerConfig:
     enable_semantic_join_rewrite: bool = True
     cost_gate_semantic_rewrite: bool = True
     enable_topk_fusion: bool = True
+    enable_semantic_index_join: bool = True
     max_labels_per_call: int = 250      # AI_CLASSIFY context-window chunking
     # rewrite-oracle gates
     label_ndv_max: int = 512            # label sets are small-cardinality
@@ -426,8 +435,9 @@ class Optimizer:
             project, sort = sort, sort.child
         if not isinstance(sort, P.Sort):
             return node
-        if not (sort.keys and isinstance(sort.keys[0].expr, E.AIScore)):
-            return node          # prefilter needs an AI-scored primary key
+        if not (sort.keys and isinstance(sort.keys[0].expr,
+                                         (E.AIScore, E.AISimilarity))):
+            return node          # prefilter needs a semantic primary key
         fused: P.PlanNode = P.TopK(sort.child, sort.keys, node.n)
         if project is not None:
             fused = P.Project(fused, project.items)
@@ -462,22 +472,40 @@ class Optimizer:
         else:
             left, right = node.right, node.left
             l_col = self.oracle._split_prompt_args(node, pred)[1]
-        rewritten = P.SemanticJoinClassify(
+        rewritten: P.PlanNode = P.SemanticJoinClassify(
             left=left, right=right, prompt=pred.prompt,
             left_arg=E.Column(l_col), label_col=dec.label_col,
             model=pred.model,
             max_labels_per_call=self.cfg.max_labels_per_call)
+        indexed: Optional[P.PlanNode] = None
+        if (self.cfg.enable_semantic_index_join
+                and self.cost.semindex is not None):
+            indexed = P.SemanticJoinIndex(
+                left=left, right=right, prompt=pred.prompt,
+                left_arg=E.Column(l_col), label_col=dec.label_col,
+                model=pred.model, k=self.cost.semindex.cfg.join_k,
+                max_labels_per_call=self.cfg.max_labels_per_call)
         if self.cfg.cost_gate_semantic_rewrite:
-            # re-decide with real numbers: with a warm StatsStore both
-            # sides of this comparison use observed per-call costs and
-            # selectivities, so a rewrite that lost last time is undone
-            c_orig = self.cost.est_llm_cost(node)
-            c_new = self.cost.est_llm_cost(rewritten)
+            # re-decide with real numbers: with a warm StatsStore every
+            # contender in this race is priced from observed per-call
+            # costs, candidate rates and selectivities, so a strategy
+            # that lost last time is undone.  Three-way when a semantic
+            # index is attached: naive nested loop vs classification
+            # rewrite vs index-assisted blocking.
+            contenders = [("cross-join", node), ("classify", rewritten)]
+            if indexed is not None:
+                contenders.append(("index", indexed))
+            priced = [(self.cost.est_llm_cost(n), name, n)
+                      for name, n in contenders]
             self.trace.append(
-                f"rewrite-cost: classify {c_new:.6g} vs cross-join "
-                f"{c_orig:.6g} credits")
-            if c_new >= c_orig:
-                return node
+                "rewrite-cost: " + " vs ".join(
+                    f"{name} {c:.6g}" for c, name, _ in priced)
+                + " credits")
+            best = min(priced, key=lambda t: t[0])
+            if best[1] != "cross-join":
+                self.trace.append(f"rewrite-winner: {best[1]}")
+            return best[2]
+        # gate disabled: legacy behaviour — always the classify rewrite
         return rewritten
 
 
@@ -495,7 +523,8 @@ def _map_children(node: P.PlanNode, fn) -> P.PlanNode:
         return node
     if isinstance(node, P.Filter):
         return dataclasses.replace(node, child=new[0])
-    if isinstance(node, (P.Join, P.SemanticJoinClassify)):
+    if isinstance(node, (P.Join, P.SemanticJoinClassify,
+                         P.SemanticJoinIndex)):
         return dataclasses.replace(node, left=new[0], right=new[1])
     if isinstance(node, (P.Project, P.Aggregate, P.Limit, P.Sort, P.TopK)):
         return dataclasses.replace(node, child=new[0])
@@ -522,4 +551,8 @@ def _pname(p: E.Expr) -> str:
         return "AI_SCORE"
     if isinstance(p, E.AIClassify):
         return "AI_CLASSIFY"
+    if isinstance(p, E.AISimilarity):
+        return "AI_SIMILARITY"
+    if isinstance(p, E.AIEmbed):
+        return "AI_EMBED"
     return type(p).__name__

@@ -101,6 +101,31 @@ class SemanticJoinClassify(PlanNode):
 
 
 @dataclasses.dataclass(frozen=True)
+class SemanticJoinIndex(PlanNode):
+    """Index-assisted semantic-join blocking (the tier below §5.3's
+    classification rewrite): kNN candidate generation on the vector
+    index narrows each left row to ``k`` plausible labels for near-zero
+    credits, and the LLM verifies only those candidates — one
+    multi-label AI_CLASSIFY per left row over a candidate set that is
+    k/|R| of the full label universe.  Cost-raced by the optimizer
+    against `SemanticJoinClassify` and the naive nested loop."""
+    left: PlanNode
+    right: PlanNode
+    prompt: E.Prompt                 # original two-side predicate prompt
+    left_arg: E.Expr                 # the left-side text expression
+    label_col: str                   # right-side column holding labels
+    model: Optional[str] = None
+    k: int = 8                       # kNN candidates per left row
+    max_labels_per_call: int = 50    # context-window chunking
+
+    def children(self):
+        return (self.left, self.right)
+
+    def _describe(self):
+        return (f"SemanticJoinIndex labels={self.label_col} k={self.k}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Project(PlanNode):
     child: PlanNode
     items: Tuple[E.SelectItem, ...]
@@ -142,8 +167,8 @@ class Sort(PlanNode):
         return (self.child,)
 
     def _describe(self):
-        kinds = ["AI" if isinstance(k.expr, E.AIScore) else "rel"
-                 for k in self.keys]
+        kinds = ["AI" if isinstance(k.expr, (E.AIScore, E.AISimilarity))
+                 else "rel" for k in self.keys]
         dirs = ["DESC" if k.desc else "ASC" for k in self.keys]
         return ("Sort [" + ", ".join(f"{k} {d}"
                                      for k, d in zip(kinds, dirs)) + "]")

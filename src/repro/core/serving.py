@@ -209,7 +209,7 @@ class QuerySession:
     def __init__(self, owner: str, tenant: str, meter: TenantMeter,
                  catalog: Catalog, scheduler: Scheduler,
                  pipeline: RequestPipeline, stats: StatsStore,
-                 cfg: "ServingConfig"):
+                 cfg: "ServingConfig", semindex=None):
         self.owner = owner
         self.tenant = tenant
         # tenant billing chains onto the client meter in one registered
@@ -220,9 +220,13 @@ class QuerySession:
             scheduler, default_model=cfg.default_model,
             proxy_model=cfg.proxy_model, pipeline=pipeline, owner=owner,
             on_dispatch_extra=meter.bill)
+        # ``semindex`` is the serving engine's *shared* manager: one
+        # embedding store and one set of ANN indexes across every
+        # session and tenant (an index built for tenant A's query
+        # answers tenant B's for free; the manager is lock-protected)
         self.engine = AisqlEngine(
             catalog, self.client, optimizer=cfg.optimizer,
-            executor=cfg.executor, stats=stats)
+            executor=cfg.executor, stats=stats, semindex=semindex)
 
     def run(self, sql: str) -> Tuple[Table, Optional[QueryReport]]:
         out = self.engine.sql(sql)
@@ -336,11 +340,20 @@ class ServingEngine:
     def __init__(self, catalog: Catalog, scheduler: Scheduler, *,
                  cfg: Optional[ServingConfig] = None,
                  stats: Optional[StatsStore] = None,
-                 tenants: Optional[Dict[str, TenantPolicy]] = None):
+                 tenants: Optional[Dict[str, TenantPolicy]] = None,
+                 semindex=None):
+        from repro.semindex import SemanticIndexManager, SemIndexConfig
         self.catalog = catalog
         self.scheduler = scheduler
         self.cfg = cfg or ServingConfig()
         self.stats = stats if stats is not None else StatsStore()
+        if semindex is True:
+            semindex = SemanticIndexManager()
+        elif isinstance(semindex, SemIndexConfig):
+            semindex = SemanticIndexManager(semindex)
+        # one manager for the whole serving engine: embedding store and
+        # ANN indexes are cross-tenant shared state, like the pipeline
+        self.semindex = semindex or None
         self.pipeline = RequestPipeline(scheduler, self.cfg.pipeline)
         self._lock = threading.Lock()
         self.tenants: Dict[str, TenantMeter] = {
@@ -402,7 +415,7 @@ class ServingEngine:
             self.sessions_created += 1
         return QuerySession(owner, tenant, meter, self.catalog,
                             self.scheduler, self.pipeline, self.stats,
-                            self.cfg)
+                            self.cfg, semindex=self.semindex)
 
     def _checkin(self, tenant: str, session: QuerySession) -> None:
         with self._lock:

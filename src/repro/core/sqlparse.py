@@ -8,7 +8,8 @@ Supported surface:
       [ORDER BY <expr> [ASC|DESC], ...] [LIMIT n]
 
 with the AI operators AI_COMPLETE, AI_FILTER, AI_SCORE, AI_CLASSIFY,
-AI_AGG, AI_SUMMARIZE_AGG, the PROMPT(...) object, FILE utilities
+AI_EMBED, AI_SIMILARITY, AI_AGG, AI_SUMMARIZE_AGG, the PROMPT(...)
+object, FILE utilities
 (FL_IS_IMAGE...), BETWEEN/IN/AND/OR/NOT, array literals ['a','b'] for
 label sets, and an optional ``model => 'name'`` keyword argument on AI
 calls.  ORDER BY accepts structured expressions and AI_SCORE(...) keys
@@ -357,6 +358,15 @@ class Parser:
                 else:
                     p = E.Prompt("{0}", (p,))
             return E.AIScore(p, model=model)
+        if uname == "AI_EMBED":
+            if len(args) != 1:
+                raise SyntaxError("AI_EMBED takes exactly one argument")
+            return E.AIEmbed(args[0], model=model)
+        if uname == "AI_SIMILARITY":
+            if len(args) != 2:
+                raise SyntaxError("AI_SIMILARITY takes exactly two "
+                                  "arguments")
+            return E.AISimilarity(args[0], args[1], model=model)
         if uname == "AI_CLASSIFY":
             text = args[0]
             if not isinstance(text, E.Prompt):

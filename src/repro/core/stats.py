@@ -69,6 +69,11 @@ def _canon(e: E.Expr) -> str:
         return f"{e.op}({','.join(_canon(a) for a in e.args)})"
     if isinstance(e, E.FuncCall):
         return f"{e.name.upper()}({','.join(_canon(a) for a in e.args)})"
+    if isinstance(e, E.AISimilarity):
+        return (f"ai_similarity({_canon(e.left)},{_canon(e.right)},"
+                f"{e.model or ''})")
+    if isinstance(e, E.AIEmbed):
+        return f"ai_embed({_canon(e.arg)},{e.model or ''})"
     if isinstance(e, E.Prompt):
         return f"prompt({e.template!r},{','.join(_canon(a) for a in e.args)})"
     return type(e).__name__
@@ -95,7 +100,21 @@ def predicate_fingerprint(pred: E.Expr) -> str:
         return (f"AI_CLASSIFY|{pred.text.template}|{pred.model or ''}|"
                 f"{','.join(sorted(pred.labels))}|"
                 f"{','.join(_canon(a) for a in pred.text.args)}")
+    if isinstance(pred, E.AISimilarity):
+        return (f"AI_SIMILARITY|{pred.model or ''}|"
+                f"{_canon(pred.left)}|{_canon(pred.right)}")
+    if isinstance(pred, E.AIEmbed):
+        return f"AI_EMBED|{pred.model or ''}|{_canon(pred.arg)}"
     return f"REL|{_canon(pred)}"
+
+
+def index_join_fingerprint(template: str, model, left_arg: str,
+                           label_col: str) -> str:
+    """Identity of one index-assisted semantic-join blocking site: the
+    `StatsStore` accumulates probe/candidate volume under it, giving the
+    cost model a learned candidate rate for the next race."""
+    return (f"INDEX_JOIN|{template}|{model or ''}|"
+            f"{_leaf(left_arg)}|{_leaf(label_col)}")
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +158,8 @@ class PredObservation:
     cascade_oracle: int = 0      # of those, rows escalated to the oracle
     dedup_submitted: int = 0      # pipeline: requests submitted
     dedup_hits: int = 0           # pipeline: requests served by dedup
+    index_probes: int = 0         # semantic index: kNN probe rows issued
+    index_candidates: int = 0     # of those, candidates surfaced in total
 
     # -- derived -------------------------------------------------------
     @property
@@ -167,6 +188,14 @@ class PredObservation:
     def dedup_hit_rate(self) -> float:
         return (self.dedup_hits / self.dedup_submitted
                 if self.dedup_submitted else 0.0)
+
+    @property
+    def candidates_per_probe(self) -> float:
+        """Semantic index: observed mean kNN candidates surfaced per
+        probe row (0.0 when unobserved) — the learned candidate rate
+        behind the index-vs-rewrite cost race."""
+        return (self.index_candidates / self.index_probes
+                if self.index_probes else 0.0)
 
     # -- (de)serialisation --------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -266,6 +295,17 @@ class StatsStore:
             o = self._entry(key)
             o.cascade_rows += int(rows)
             o.cascade_oracle += int(oracle_calls)
+            return o
+
+    def observe_index(self, key: str, *, probes: int, candidates: int
+                      ) -> PredObservation:
+        """Record semantic-index blocking volume (probe rows issued and
+        candidates surfaced) for an `index_join_fingerprint` — the
+        learned candidate-rate feedback the next cost race reads."""
+        with self._lock:
+            o = self._entry(key)
+            o.index_probes += int(probes)
+            o.index_candidates += int(candidates)
             return o
 
     def observe_pipeline(self, *, submitted: int, dedup_hits: int

@@ -37,6 +37,15 @@ def _rng(seed) -> np.random.Generator:
     return np.random.default_rng(seed)
 
 
+def _name_key(name: str) -> int:
+    """Stable 16-bit key for a dataset name.  ``hash()`` is salted per
+    process (PYTHONHASHSEED), which silently regenerated a *different*
+    corpus every run — benchmark gates need bit-stable data."""
+    import hashlib
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:2],
+                          "little")
+
+
 def _sentence(rng, n=12) -> str:
     return " ".join(rng.choice(_WORDS, size=n))
 
@@ -71,7 +80,7 @@ def cascade_table(name: str, *, rows: Optional[int] = None, seed: int = 0
                   ) -> Table:
     n, difficulty, pos_rate = CASCADE_DATASETS[name]
     n = rows or n
-    rng = _rng((seed, hash(name) & 0xFFFF))
+    rng = _rng((seed, _name_key(name)))
     truth = rng.random(n) < pos_rate
     text = [f"[{name}:{i}] " + _sentence(rng, 18) for i in range(n)]
     return Table({
@@ -141,11 +150,17 @@ JOIN_PROMPTS: Dict[str, str] = {
 }
 
 
-def join_tables(name: str, *, seed: int = 0) -> Tuple[Table, Table, JoinSpec]:
+def join_tables(name: Optional[str] = None, *, seed: int = 0,
+                spec: Optional[JoinSpec] = None
+                ) -> Tuple[Table, Table, JoinSpec]:
     """Returns (left, right, spec).  left.label_names carries truth as a
-    hidden ``_labels`` tuple column; right is the label/category side."""
-    spec = JOIN_DATASETS[name]
-    rng = _rng((seed, hash(name) & 0xFFFF))
+    hidden ``_labels`` tuple column; right is the label/category side.
+    Pass ``spec`` to generate a custom corpus (e.g. the index-blocking
+    benchmark's large-label-universe workload) with the same machinery.
+    """
+    spec = spec or JOIN_DATASETS[name]
+    name = spec.name
+    rng = _rng((seed, _name_key(name)))
     L, R = spec.left_rows, spec.right_rows
     if spec.kind == "entity":
         # R unique entities; left rows each match exactly one

@@ -31,8 +31,8 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 import numpy as np
 
-from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, Request,
-                                     Result)
+from repro.inference.backend import (CLASSIFY, COMPLETE, EMBED, SCORE,
+                                     Request, Result)
 from repro.inference.pipeline import (PipelineConfig, RequestPipeline,
                                       ResultFuture)
 from repro.inference.scheduler import Scheduler
@@ -56,6 +56,7 @@ class CortexClient:
 
     def __init__(self, scheduler: Scheduler, *, default_model: str = "oracle-70b",
                  proxy_model: str = "proxy-8b",
+                 embed_model: str = "arctic-embed-m",
                  pipeline: Union[None, bool, PipelineConfig,
                                  RequestPipeline] = None,
                  owner: Optional[str] = None,
@@ -64,6 +65,7 @@ class CortexClient:
         self.scheduler = scheduler
         self.default_model = default_model
         self.proxy_model = proxy_model
+        self.embed_model = embed_model
         self.owner = owner
         self._ids = itertools.count(1)
         # meters (paper §4 cost-analysis instrumentation); the lock keeps
@@ -158,6 +160,18 @@ class CortexClient:
         res = self._submit([
             Request(p, model, SCORE, metadata=m) for p, m in zip(prompts, md)])
         return np.asarray([r.score for r in res], np.float64)
+
+    def embed(self, texts: Sequence[str], *, model: Optional[str] = None,
+              metadata: Optional[Sequence[Dict[str, Any]]] = None
+              ) -> np.ndarray:
+        """Unit-vector embeddings, one row per text (EMBED kind; priced
+        per input token on the embedding tier).  Identical texts dedup
+        through the pipeline like every other kind."""
+        model = model or self.embed_model
+        md = metadata or [{} for _ in texts]
+        res = self._submit([
+            Request(t, model, EMBED, metadata=m) for t, m in zip(texts, md)])
+        return np.asarray([r.embedding for r in res], np.float32)
 
     def classify(self, prompts: Sequence[str], labels: Tuple[str, ...], *,
                  model: Optional[str] = None, multi_label: bool = False,

@@ -12,6 +12,7 @@ from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
 COMPLETE = "complete"
 SCORE = "score"        # binary predicate -> confidence in [0,1]
 CLASSIFY = "classify"  # choose label(s) from a candidate set
+EMBED = "embed"        # text -> unit vector (the semantic index's fuel)
 
 
 @dataclasses.dataclass
@@ -36,6 +37,7 @@ class Result:
     score: Optional[float] = None            # SCORE kind
     label: Optional[str] = None              # CLASSIFY kind (top-1)
     labels: Optional[Tuple[str, ...]] = None  # CLASSIFY multi-label
+    embedding: Optional[Tuple[float, ...]] = None  # EMBED kind (unit vector)
     tokens_in: int = 0
     tokens_out: int = 0
     credits: float = 0.0
@@ -59,8 +61,10 @@ class EngineTimeout(EngineFailure):
     counted separately so serving telemetry can tell them apart."""
 
 
-# --- model pricing table (credits per 1M tokens), mirrors §4's observation
+# --- model pricing tables (credits per 1M tokens), mirrors §4's observation
 # that AI credits dominate and that multimodal/oracle models cost more.
+# Generative kinds (COMPLETE / SCORE / CLASSIFY) price every token the
+# model processes at the model's rate:
 CREDITS_PER_MTOK = {
     "proxy-8b": 0.19,
     "oracle-70b": 1.33,
@@ -75,7 +79,32 @@ CREDITS_PER_MTOK = {
     "qwen2-vl-7b": 0.90,            # multimodal premium (paper §5.1)
     "rwkv6-1.6b": 0.05,
 }
+# EMBED-class models are priced per *input* token only — there is no
+# completion pass, so the rate sits an order of magnitude below even the
+# proxy tier (the economics behind index-assisted pruning: an embedding
+# costs ~1% of a proxy call over the same text).
+EMBED_CREDITS_PER_MTOK = {
+    "arctic-embed-m": 0.02,
+    "e5-base-embed": 0.03,
+}
+_DEFAULT_CREDITS_PER_MTOK = 0.5
+_DEFAULT_EMBED_CREDITS_PER_MTOK = 0.03
+# request kind -> (pricing table, default rate).  Kinds absent here fall
+# back to the generative table, so SCORE/CLASSIFY/COMPLETE prices are
+# bit-identical to the pre-table formula.
+KIND_PRICING = {
+    EMBED: (EMBED_CREDITS_PER_MTOK, _DEFAULT_EMBED_CREDITS_PER_MTOK),
+}
 
 
-def credits_for(model: str, tokens: int) -> float:
-    return CREDITS_PER_MTOK.get(model, 0.5) * tokens / 1e6
+def credits_for(model: str, tokens: int, kind: Optional[str] = None) -> float:
+    """Credits for processing ``tokens`` input tokens with ``model``.
+
+    ``kind`` selects the pricing table: EMBED-class requests bill at the
+    embedding rate (input tokens only, no completion tokens); every other
+    kind — and the legacy two-argument call — uses the generative table.
+    """
+    table, default = KIND_PRICING.get(kind,
+                                      (CREDITS_PER_MTOK,
+                                       _DEFAULT_CREDITS_PER_MTOK))
+    return table.get(model, default) * tokens / 1e6

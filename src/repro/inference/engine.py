@@ -6,9 +6,12 @@ This is the Cortex Platform "Inference Engine" (paper §2) adapted to TPU:
     [max_batch] slots, finished sequences retire early from the decode
     loop, and the scheduler admits queued work at batch boundaries;
   * bucketed prefill (power-of-two lengths) to bound recompilation;
-  * three request kinds: COMPLETE (greedy decode), SCORE (yes/no confidence
+  * four request kinds: COMPLETE (greedy decode), SCORE (yes/no confidence
     from next-token logits — the cascade's s_i, §5.2), CLASSIFY
-    (label-likelihood scoring over a candidate set — AI_CLASSIFY);
+    (label-likelihood scoring over a candidate set — AI_CLASSIFY), EMBED
+    (masked mean-pooled hidden states projected to the requested
+    dimensionality — the semantic index's vectors, priced per input
+    token on the embedding tier);
   * per-request credit metering (AI credits, §4) and latency accounting;
   * fault injection (EngineFailure) so the scheduler's retry/straggler
     logic is testable.
@@ -27,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.inference import tokenizer as tok
-from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, EngineFailure,
-                                     Request, Result, credits_for)
+from repro.inference.backend import (CLASSIFY, COMPLETE, EMBED, SCORE,
+                                     EngineFailure, Request, Result,
+                                     credits_for)
 from repro.models import model_zoo
 
 
@@ -249,6 +253,45 @@ class JaxInferenceEngine:
         lps = np.asarray(fn(self.params, jnp.asarray(toks), jnp.asarray(msk)))
         return lps.tolist(), [int(m.sum() + (1 - m).sum()) for m in msk]
 
+    def _embed_batch(self, requests: Sequence[Request]) -> List[Result]:
+        """Masked mean-pool of the final hidden states, projected to the
+        requested dimensionality by a fixed seeded matrix and unit-
+        normalized.  One encoder pass, no decode loop — which is why the
+        EMBED tier prices input tokens only."""
+        toks, lens, L = self._encode_batch([r.prompt for r in requests],
+                                           self.max_seq)
+        B = len(requests)
+        extra = self._modality_batch(requests, B, L)
+
+        def embed_fn(params, tokens, lengths, extra):
+            batch = {"tokens": tokens, **extra}
+            out = self.model.apply(params, batch, mode="train", remat=False)
+            h = out["hidden"].astype(jnp.float32)          # [B, L, D]
+            mask = (jnp.arange(h.shape[1])[None, :]
+                    < lengths[:, None]).astype(jnp.float32)
+            pooled = jnp.sum(h * mask[..., None], axis=1) \
+                / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+            return pooled
+
+        fn = self._jit(("embed", B, L, tuple(sorted(extra))), embed_fn)
+        pooled = np.asarray(fn(self.params, jnp.asarray(toks),
+                               jnp.asarray(lens),
+                               {k: jnp.asarray(v) for k, v in extra.items()}))
+        results = []
+        for i, r in enumerate(requests):
+            dim = int(r.metadata.get("embed_dim", 64))
+            proj = _hash_embed(f"{self.arch}|embed-proj|{dim}",
+                               (pooled.shape[1], dim), scale=1.0)
+            v = pooled[i] @ proj
+            v = v / max(float(np.linalg.norm(v)), 1e-12)
+            results.append(Result(
+                r.request_id, self.arch, EMBED,
+                embedding=tuple(float(x) for x in v),
+                tokens_in=int(lens[i]),
+                credits=credits_for(self.arch, int(lens[i]), EMBED),
+                engine_id=self.engine_id))
+        return results
+
     def _complete_batch(self, requests: Sequence[Request]) -> List[Result]:
         """Greedy decode over batch slots; finished sequences retire early
         (the scheduler admits new work at batch boundaries)."""
@@ -309,6 +352,8 @@ class JaxInferenceEngine:
                     out.extend(self._score_batch(chunk))
                 elif kind == CLASSIFY:
                     out.extend(self._classify_batch(chunk))
+                elif kind == EMBED:
+                    out.extend(self._embed_batch(chunk))
                 else:
                     out.extend(self._complete_batch(chunk))
         dt = time.perf_counter() - t0

@@ -13,6 +13,12 @@ and this backend plays the role of the LLMs:
     drawn from the remaining candidates.  Multi-label adds per-label
     drop/add noise — reproducing the precision/recall trade-offs of §6.3.
   * COMPLETE: template completion (used for AI_AGG/SUMMARIZE text paths).
+  * EMBED: deterministic topic-correlated unit vectors — word-bag anchor
+    mixtures by default, ground-truth-anchored when the request metadata
+    carries ``truth_labels`` / ``embed_anchor`` (the semantic-index
+    analogue of the SCORE path's ``truth``).  Billed at the per-kind
+    embedding rate through the same meters, and fault-injectable like
+    every other kind (the fault die rolls before any request is served).
 
 Latency/cost model: per-request latency = base + tokens * per_token, with
 constants measured from the real JAX engine and scaled by model size, so
@@ -27,9 +33,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.inference.backend import (CLASSIFY, COMPLETE, SCORE, EngineFailure,
-                                     EngineTimeout, Request, Result,
-                                     credits_for)
+from repro.inference.backend import (CLASSIFY, COMPLETE, EMBED, SCORE,
+                                     EngineFailure, EngineTimeout, Request,
+                                     Result, credits_for)
 
 # model quality/latency profiles: (error_rate_scale, seconds per 1k tokens)
 # latency constants derive from bf16 FLOPs at 197 TFLOP/s/chip with 60% MFU
@@ -47,7 +53,15 @@ MODEL_PROFILES: Dict[str, Dict[str, float]] = {
     "qwen2-vl-7b": {"err_scale": 0.9, "s_per_ktok": 0.080},
     "rwkv6-1.6b": {"err_scale": 1.5, "s_per_ktok": 0.004},
     "whisper-base": {"err_scale": 1.0, "s_per_ktok": 0.002},
+    # EMBED-class models: a single encoder pass, no decode loop
+    "arctic-embed-m": {"err_scale": 1.0, "s_per_ktok": 0.003},
+    "e5-base-embed": {"err_scale": 1.0, "s_per_ktok": 0.004},
 }
+
+# default dimensionality of simulated embeddings (overridable per request
+# via metadata["embed_dim"]); 64 keeps random anchors near-orthogonal
+# (cos ~ N(0, 1/64)) while staying cheap for the kernel path
+EMBED_DIM = 64
 # Per-request overhead is model-proportional: a fixed-depth decode/launch
 # cost equivalent to ~64 tokens of that model's throughput, plus a small
 # model-independent scheduling constant.
@@ -139,7 +153,7 @@ class SimulatedBackend:
                    * (ntok + BASE_OVERHEAD_TOKENS) / 1e3)
             res = self._serve_one(r, prof, ntok)
             res.latency_s = lat
-            res.credits = credits_for(r.model, ntok)
+            res.credits = credits_for(r.model, ntok, r.kind)
             out.append(res)
             batch_s += lat
             self.total_credits += res.credits
@@ -152,6 +166,11 @@ class SimulatedBackend:
     def _serve_one(self, r: Request, prof, ntok: int) -> Result:
         rng = _rng_for(self.seed, r.model, r.kind, r.prompt)
         md = r.metadata
+        if r.kind == EMBED:
+            vec = self._embed(r)
+            return Result(r.request_id, r.model, EMBED,
+                          embedding=tuple(float(x) for x in vec),
+                          tokens_in=ntok)
         if r.kind == SCORE and ("fp_bias" in md or "fn_bias" in md):
             # explicit error-bias calibration (semantic-join pair predicates):
             # a negative pair reads as positive with prob fp_bias (the
@@ -201,15 +220,21 @@ class SimulatedBackend:
                 # is kept with prob 1-drop (conservative-selection recall
                 # loss); each false candidate is added with prob add_frac
                 # (comparative reasoning keeps the count low and independent
-                # of the candidate-set size).
+                # of the candidate-set size).  Every draw is keyed by the
+                # (prompt, label) pair — not the candidate-set composition —
+                # so classifying over a *subset* of the labels (the semantic
+                # index's candidate pruning) returns exactly the full run's
+                # decisions restricted to that subset.
                 drop = float(md.get("drop_prob", 0.0))
                 add = float(md.get("add_frac", 0.0))
                 chosen = []
                 for lb in labels:
+                    lrng = _rng_for(self.seed, r.model, r.kind, r.prompt,
+                                    "label", lb)
                     if lb in truth_labels:
-                        if rng.random() >= drop:
+                        if lrng.random() >= drop:
                             chosen.append(lb)
-                    elif rng.random() < add:
+                    elif lrng.random() < add:
                         chosen.append(lb)
             elif r.multi_label:
                 chosen = []
@@ -239,6 +264,59 @@ class SimulatedBackend:
         text = md.get("canned") or _template_completion(r.prompt)
         return Result(r.request_id, r.model, COMPLETE, text=text,
                       tokens_in=ntok, tokens_out=max(len(text) // 4, 1))
+
+    # ------------------------------------------------------------------
+    # EMBED: deterministic topic-correlated unit vectors
+    # ------------------------------------------------------------------
+
+    def _anchor(self, key: str, dim: int) -> np.ndarray:
+        """Fixed unit vector for a topic/label/word string — shared by
+        every request (and every model), so two texts about the same
+        topic land near each other in embedding space."""
+        v = _rng_for(self.seed, "embed-anchor", key).standard_normal(dim)
+        n = np.linalg.norm(v)
+        return v / max(n, 1e-12)
+
+    def _embed(self, r: Request) -> np.ndarray:
+        """Deterministic embedding of ``r.prompt``.
+
+        Grounding mirrors the SCORE/CLASSIFY paths: when the request's
+        metadata carries ``truth_labels`` (the hidden ``_labels`` column)
+        the vector is the normalized mean of those labels' anchors plus
+        small noise — so a document sits close to exactly its true labels
+        and the index's kNN candidates recover the ground-truth pairs.
+        Without truth metadata the vector is a word-bag mixture of
+        per-word anchors: texts sharing vocabulary are similar, arbitrary
+        texts are near-orthogonal.  Every component is keyed by
+        (seed, text), so results are bit-identical across retries and
+        across the dedup cache.
+        """
+        md = r.metadata
+        dim = int(md.get("embed_dim", EMBED_DIM))
+        noise_scale = float(md.get("embed_noise", 0.05))
+        anchor_key = md.get("embed_anchor")
+        tl = md.get("truth_labels")
+        if anchor_key is not None:
+            # label/category rows: the text *is* the topic (the semantic
+            # index manager marks the label side of a join this way)
+            vec = self._anchor(str(anchor_key), dim)
+        elif tl is not None:
+            tl = list(tl) if isinstance(tl, (tuple, list, set)) else [tl]
+            vec = np.zeros(dim)
+            for lb in tl:
+                vec += self._anchor(str(lb), dim)
+        else:
+            words = r.prompt.split()
+            vec = np.zeros(dim)
+            for w in dict.fromkeys(words):      # distinct words, kept order
+                vec += self._anchor(w.lower(), dim) * words.count(w)
+        vec = vec / max(np.linalg.norm(vec), 1e-12)
+        noise = _rng_for(self.seed, "embed-noise",
+                         r.prompt).standard_normal(dim)
+        noise = noise / max(np.linalg.norm(noise), 1e-12)
+        # bounded angular perturbation: noise_scale ~ radians off-axis
+        vec = vec + noise_scale * noise
+        return vec / max(np.linalg.norm(vec), 1e-12)
 
 
 def _template_completion(prompt: str) -> str:

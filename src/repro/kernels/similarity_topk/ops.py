@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for batched cosine-similarity top-k."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.similarity_topk.kernel import similarity_topk_kernel
+from repro.kernels.similarity_topk.ref import (l2_normalize,
+                                               similarity_topk_ref)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "impl", "block_q", "block_n"))
+def similarity_topk(queries, corpus, k: int, *, impl: str = "auto",
+                    block_q: int = 128, block_n: int = 512):
+    """Top-k corpus rows per query by cosine similarity.
+
+    queries: [Q, D], corpus: [N, D] (any float dtype; normalized here).
+    Returns ``(vals [Q, k] fp32 descending, idx [Q, k] int32)``; with
+    ``k > N`` the tail holds ``-inf`` / ``-1``.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl == "reference":
+        return similarity_topk_ref(queries, corpus, k)
+    return similarity_topk_kernel(
+        l2_normalize(queries), l2_normalize(corpus), k,
+        block_q=block_q, block_n=block_n, interpret=(impl == "interpret"))

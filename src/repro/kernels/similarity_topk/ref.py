@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for batched cosine-similarity top-k retrieval."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_normalize(x, eps: float = 1e-12):
+    """Row-normalize to unit L2 norm (zero rows stay zero)."""
+    x = x.astype(jnp.float32)
+    n = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    return x / jnp.maximum(n, eps)
+
+
+def similarity_topk_ref(queries, corpus, k: int):
+    """Exact top-k by cosine similarity.
+
+    queries: [Q, D]; corpus: [N, D] (any float dtype; normalized
+    internally).  Returns ``(vals [Q, k] fp32 descending, idx [Q, k]
+    int32)``.  Ties broken by the lower corpus index (argmax-first
+    semantics, matching the Pallas kernel's running merge).  With
+    ``k > N`` the tail is padded with ``-inf`` values and index ``-1``.
+    """
+    q = l2_normalize(queries)
+    c = l2_normalize(corpus)
+    n = c.shape[0]
+    sims = q @ c.T                                    # [Q, N]
+    kk = min(k, n)
+    # argsort on (-sim, idx) gives descending values, ascending index ties
+    order = jnp.argsort(-sims, axis=1, stable=True)[:, :kk]
+    vals = jnp.take_along_axis(sims, order, axis=1)
+    idx = order.astype(jnp.int32)
+    if kk < k:
+        pad_v = jnp.full((q.shape[0], k - kk), -jnp.inf, jnp.float32)
+        pad_i = jnp.full((q.shape[0], k - kk), -1, jnp.int32)
+        vals = jnp.concatenate([vals, pad_v], axis=1)
+        idx = jnp.concatenate([idx, pad_i], axis=1)
+    return vals, idx

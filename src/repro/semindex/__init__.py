@@ -1,0 +1,13 @@
+"""Semantic index subsystem: embedding store + IVF-flat ANN index.
+
+Connects the SQL layer to the Pallas kernel library: `EmbeddingStore`
+caches content-addressed vectors, `IvfFlatIndex` retrieves top-k
+neighbours through the ``similarity_topk`` kernel, and
+`SemanticIndexManager` ties both to catalog columns, the inference
+client (EMBED requests) and the optimizer's cost race.  See
+``docs/semantic-index.md``.
+"""
+from repro.semindex.store import EmbeddingStore, content_key  # noqa: F401
+from repro.semindex.index import IvfConfig, IvfFlatIndex      # noqa: F401
+from repro.semindex.manager import (SemanticIndexManager,     # noqa: F401
+                                    SemIndexConfig)

@@ -12,12 +12,16 @@ must agree:
     *less* than materialize-then-truncate, never more;
   * with pilot sampling on, no predicate is ever billed for more rows
     than the table holds (no double billing across partition/pilot
-    paths) and per-operator credits sum to the metered total.
+    paths) and per-operator credits sum to the metered total;
+  * the semantic index is an *accelerator*, never an answer-changer:
+    for every embedding/similarity query in the corpus, index-on and
+    index-off configurations return identical rows, and the index may
+    only ever reduce credits.
 """
 import numpy as np
 import pytest
 
-from repro.core import AisqlEngine, Catalog, ExecConfig
+from repro.core import AisqlEngine, Catalog, ExecConfig, SemIndexConfig
 from repro.data import datasets as D
 from repro.inference.api import make_simulated_client
 from repro.tables.table import Table
@@ -60,6 +64,7 @@ FILTERS = (
     "t.val BETWEEN 0.1 AND 0.9",
     "AI_FILTER(PROMPT('is this row relevant? {0}', t.text))",
     "AI_FILTER(PROMPT('does this mention databases? {0}', t.text))",
+    "AI_SIMILARITY(t.text, 'document body') > 0.4",
 )
 
 
@@ -146,6 +151,55 @@ def test_corpus_is_meaningful():
     assert any("AI_FILTER" in q for q in corpus)
     assert any("ORDER BY" in q for q in corpus)
     assert any("LIMIT" not in q for q in corpus)
+    assert any("AI_SIMILARITY" in q for q in corpus)
+
+
+# ---------------------------------------------------------------------------
+# semantic index on/off differential
+# ---------------------------------------------------------------------------
+
+# embedding/similarity queries: projections, threshold filters, semantic
+# ORDER BY with and without LIMIT, mixed with relational predicates
+INDEX_QUERIES = (
+    "SELECT t.id, AI_SIMILARITY(t.text, 'document body') AS sim FROM t",
+    "SELECT t.id FROM t WHERE AI_SIMILARITY(t.text, 'document body') > 0.4",
+    "SELECT t.id FROM t WHERE t.val < 0.7 AND "
+    "AI_SIMILARITY(t.text, 'document body') > 0.35",
+    "SELECT t.id FROM t ORDER BY AI_SIMILARITY(t.text, 'document body') "
+    "DESC LIMIT 9",
+    "SELECT t.id FROM t ORDER BY AI_SIMILARITY(t.text, 'document body') "
+    "ASC LIMIT 4",
+    "SELECT t.id, t.cat FROM t "
+    "WHERE AI_SIMILARITY(t.text, 'irrelevant topic') > 0.9",   # empty set
+    "SELECT t.cat, COUNT(*) FROM t "
+    "WHERE AI_SIMILARITY(t.text, 'document body') > 0.4 GROUP BY t.cat",
+)
+
+
+@pytest.mark.parametrize("sql", INDEX_QUERIES)
+def test_index_on_off_rows_identical_credits_reduced(sql):
+    """The semantic index must never change results: index-on and
+    index-off return identical rows for every embedding query, the
+    index may only reduce credits, and a warm second run is free."""
+    cat = _catalog()
+    off = AisqlEngine(cat, make_simulated_client())
+    rows_off = _canon_rows(off.sql(sql))
+    on = AisqlEngine(cat, make_simulated_client(),
+                     semindex=SemIndexConfig(impl="reference"))
+    rows_on = _canon_rows(on.sql(sql))
+    cold_calls = on.last_report.ai_calls
+    assert rows_on == rows_off, f"index changed the result set for: {sql}"
+    assert on.last_report.ai_credits <= \
+        off.last_report.ai_credits + 1e-12, f"index overspent on: {sql}"
+    # second run: the store answers every previously-embedded text (a
+    # reordered predicate chain may touch rows the first run skipped,
+    # so "free" is guaranteed only for single-predicate full scans)
+    rows_warm = _canon_rows(on.sql(sql))
+    assert rows_warm == rows_off
+    assert on.last_report.ai_calls <= cold_calls
+    if "AND" not in sql:
+        assert on.last_report.ai_calls == 0, \
+            f"warm store still dispatched EMBED work for: {sql}"
 
 
 def test_pilot_accounting_consistent_across_modes():

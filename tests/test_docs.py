@@ -100,6 +100,54 @@ def test_every_documented_tenantreport_field_exists():
         (set(documented) - actual, actual - set(documented))
 
 
+def test_semantic_index_doc_exists_and_linked():
+    assert os.path.exists(os.path.join(DOCS, "semantic-index.md"))
+    assert "docs/semantic-index.md" in _read("README.md")
+    assert "semantic-index.md" in _read("docs/architecture.md")
+    assert "semantic-index.md" in _read("docs/query-reference.md")
+    assert "semantic-index.md" in _read("docs/serving.md")
+
+
+def test_documented_recall_knobs_exist_in_code():
+    """Every knob in semantic-index.md's recall table is a real config
+    attribute (``Class.field`` first column)."""
+    import dataclasses as dc
+    from repro.core import ExecConfig, SemIndexConfig
+    text = _read("docs/semantic-index.md")
+    section = text.split("## Recall knobs", 1)[1]
+    knobs = re.findall(r"\|\s*`([A-Za-z_]+)\.([A-Za-z_]+)`\s*\|", section)
+    assert knobs, "recall-knob table not found in semantic-index.md"
+    classes = {"SemIndexConfig": SemIndexConfig, "ExecConfig": ExecConfig}
+    for cls_name, field in knobs:
+        cls = classes[cls_name]
+        names = {f.name for f in dc.fields(cls)}
+        assert field in names, f"{cls_name}.{field} documented but missing"
+
+
+def test_documented_semindex_telemetry_keys_match_runtime():
+    from repro.core import AisqlEngine, Catalog, SemIndexConfig
+    from repro.inference.api import make_simulated_client
+    from repro.tables.table import Table
+    import numpy as np
+
+    t = Table({"id": np.arange(30),
+               "text": [f"[d:{i}] body words {i}" for i in range(30)]},
+              name="t")
+    eng = AisqlEngine(Catalog({"t": t}), make_simulated_client(),
+                      semindex=SemIndexConfig(impl="reference"))
+    eng.sql("SELECT t.id FROM t "
+            "ORDER BY AI_SIMILARITY(t.text, 'body words') DESC LIMIT 3")
+    tel = eng.last_report.semindex
+    assert tel is not None
+    doc_row = [ln for ln in _read("docs/query-reference.md").splitlines()
+               if ln.startswith("| `semindex`")]
+    assert doc_row, "QueryReport.semindex row missing from docs"
+    # every runtime key's concept is named in the doc row
+    assert {"index_joins", "index_topk", "probes", "candidates",
+            "verify_calls", "embed_texts", "embed_llm_calls"} == \
+        set(tel.keys())
+
+
 def test_documented_pilot_keys_match_runtime():
     from repro.core import AisqlEngine, Catalog, ExecConfig
     from repro.data import datasets as D

@@ -9,6 +9,7 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.decode_attention.ops import flash_decode
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.similarity_topk.ops import similarity_topk
 
 
 def _rand(key, shape, dtype):
@@ -136,6 +137,54 @@ def test_rwkv6_scan(B, S, H, hd, dtype):
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_r),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# similarity top-k (the semantic index's scoring kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Q,N,D,k,bq,bn", [
+    (13, 201, 48, 5, 8, 64),      # nothing aligns: every pad path hit
+    (32, 512, 64, 17, 16, 128),
+    (1, 1000, 32, 1, 8, 256),     # single query, k=1
+    (64, 64, 128, 64, 64, 64),    # k == N, one block each way
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_similarity_topk_parity(Q, N, D, k, bq, bn, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    q = _rand(ks[0], (Q, D), dtype)
+    c = _rand(ks[1], (N, D), dtype)
+    v_i, i_i = similarity_topk(q, c, k, impl="interpret",
+                               block_q=bq, block_n=bn)
+    v_r, i_r = similarity_topk(q, c, k, impl="reference")
+    np.testing.assert_array_equal(np.asarray(i_i), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(v_i), np.asarray(v_r),
+                               **TOL[jnp.float32])
+
+
+def test_similarity_topk_k_exceeds_corpus():
+    """k > N pads the tail with -inf values and index -1."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    q = _rand(ks[0], (3, 16), jnp.float32)
+    c = _rand(ks[1], (4, 16), jnp.float32)
+    v_i, i_i = similarity_topk(q, c, 7, impl="interpret",
+                               block_q=2, block_n=2)
+    v_r, i_r = similarity_topk(q, c, 7, impl="reference")
+    np.testing.assert_array_equal(np.asarray(i_i), np.asarray(i_r))
+    assert (np.asarray(i_i)[:, 4:] == -1).all()
+    assert np.isneginf(np.asarray(v_i)[:, 4:]).all()
+
+
+def test_similarity_topk_values_descending_and_self_match():
+    ks = jax.random.split(jax.random.PRNGKey(9), 1)
+    c = _rand(ks[0], (50, 24), jnp.float32)
+    v, i = similarity_topk(c[:10], c, 5, impl="interpret",
+                           block_q=4, block_n=16)
+    v = np.asarray(v)
+    assert (np.diff(v, axis=1) <= 1e-6).all()          # descending
+    np.testing.assert_array_equal(np.asarray(i)[:, 0], np.arange(10))
+    np.testing.assert_allclose(v[:, 0], 1.0, atol=1e-5)  # cos(x, x) = 1
 
 
 def test_rwkv6_state_chaining():

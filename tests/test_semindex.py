@@ -1,0 +1,447 @@
+"""Semantic index subsystem: store, IVF index, manager, and the two
+optimizer integrations (index-assisted join blocking, top-k pruning)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AisqlEngine, Catalog, ExecConfig, SemIndexConfig,
+                        ServingEngine)
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+from repro.semindex import (EmbeddingStore, IvfConfig, IvfFlatIndex,
+                            SemanticIndexManager)
+from repro.tables.table import Table
+
+
+def _clustered_vectors(n_clusters=8, per_cluster=40, dim=32, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, dim))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    vecs = np.repeat(centers, per_cluster, axis=0)
+    vecs = vecs + 0.15 * rng.standard_normal(vecs.shape)
+    return vecs.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingStore
+# ---------------------------------------------------------------------------
+
+
+def test_store_content_hash_roundtrip(tmp_path):
+    store = EmbeddingStore()
+    texts = [f"doc {i}" for i in range(10)]
+    vecs = [np.full(4, i, np.float32) for i in range(10)]
+    store.put("m", texts, vecs)
+    got = store.get("m", ["doc 3", "doc 99", "doc 0"])
+    assert got[1] is None
+    np.testing.assert_array_equal(got[0], vecs[3])
+    np.testing.assert_array_equal(got[2], vecs[0])
+    assert store.coverage("m", texts) == 1.0
+    assert store.coverage("other-model", texts) == 0.0  # model in the key
+    store.register_column("t.body", "m", texts)
+    path = os.path.join(tmp_path, "emb")
+    store.save(path)
+    re = EmbeddingStore(path)
+    assert len(re) == len(store)
+    mat, keys = re.column_matrix("t.body")
+    assert mat.shape == (10, 4)
+    np.testing.assert_array_equal(mat[7], vecs[7])
+
+
+def test_store_column_signature_tracks_content():
+    texts = [f"x{i}" for i in range(5)]
+    s1 = EmbeddingStore.column_signature("m", texts)
+    s2 = EmbeddingStore.column_signature("m", texts)
+    s3 = EmbeddingStore.column_signature("m", texts[:-1] + ["changed"])
+    assert s1 == s2 and s1 != s3
+
+
+# ---------------------------------------------------------------------------
+# IvfFlatIndex
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_exact_when_probing_all_cells():
+    vecs = _clustered_vectors()
+    ix = IvfFlatIndex(vecs, IvfConfig(nlist=8, nprobe=8, impl="reference"))
+    q = vecs[::37] + 0.01
+    v_flat, i_flat = ix.search_flat(q, 7)
+    v_ivf, i_ivf = ix.search(q, 7)
+    np.testing.assert_array_equal(i_flat, i_ivf)
+    np.testing.assert_allclose(v_flat, v_ivf, rtol=1e-5)
+
+
+def test_ivf_recall_on_clustered_data():
+    vecs = _clustered_vectors()
+    ix = IvfFlatIndex(vecs, IvfConfig(nlist=8, nprobe=2, impl="reference"))
+    q = vecs[::11]
+    assert ix.measure_recall(q, 5) > 0.9   # clustered data: 2 probes enough
+    assert ix.measure_recall(q, 5, nprobe=8) == 1.0
+
+
+def test_ivf_self_query_returns_self():
+    vecs = _clustered_vectors(per_cluster=10)
+    ix = IvfFlatIndex(vecs, IvfConfig(nlist=4, nprobe=4, impl="reference"))
+    _, idx = ix.search(vecs[17:18], 1)
+    assert int(idx[0][0]) == 17
+
+
+# ---------------------------------------------------------------------------
+# SemanticIndexManager
+# ---------------------------------------------------------------------------
+
+
+def test_manager_embeds_misses_once_and_rebuilds_on_drift():
+    client = make_simulated_client()
+    mgr = SemanticIndexManager(SemIndexConfig(impl="reference", nlist=4,
+                                              min_index_rows=4))
+    texts = [f"text number {i}" for i in range(30)]
+    ix1 = mgr.ensure_index(client, "t.c", texts)
+    calls = client.ai_calls
+    assert calls == 30
+    assert mgr.ensure_index(client, "t.c", texts) is ix1   # cached
+    assert client.ai_calls == calls
+    # one changed row: re-embed exactly the new text
+    ix2 = mgr.ensure_index(client, "t.c", texts[:-1] + ["fresh text"])
+    assert ix2 is not ix1
+    assert client.ai_calls == calls + 1
+
+
+def test_manager_search_and_coverage():
+    client = make_simulated_client()
+    mgr = SemanticIndexManager(SemIndexConfig(impl="reference", nlist=2,
+                                              min_index_rows=2))
+    texts = [f"alpha topic {i}" for i in range(12)]
+    mgr.ensure_index(client, "t.c", texts)
+    assert mgr.coverage(client, texts) == 1.0
+    q = mgr.embed_texts(client, [texts[5]])
+    vals, ids = mgr.search("t.c", q, 3)
+    assert int(ids[0][0]) == 5
+    with pytest.raises(KeyError):
+        mgr.search("t.unknown", q, 3)
+
+
+# ---------------------------------------------------------------------------
+# EMBED pricing (satellite: per-kind table, legacy kinds unchanged)
+# ---------------------------------------------------------------------------
+
+
+def test_embed_priced_per_input_token_and_cheaper():
+    from repro.inference.backend import (EMBED, EMBED_CREDITS_PER_MTOK,
+                                         credits_for)
+    for model, rate in EMBED_CREDITS_PER_MTOK.items():
+        assert credits_for(model, 1000, EMBED) == pytest.approx(
+            rate * 1000 / 1e6)
+    # an embedding over the same tokens costs far below any LLM tier
+    assert credits_for("arctic-embed-m", 1000, EMBED) < \
+        0.2 * credits_for("proxy-8b", 1000)
+
+
+def test_generative_kinds_price_unchanged_by_kind_table():
+    """Regression: SCORE/CLASSIFY/COMPLETE (and the legacy two-argument
+    call) still price exactly ``CREDITS_PER_MTOK[model] * toks / 1e6``."""
+    from repro.inference.backend import (CLASSIFY, COMPLETE,
+                                         CREDITS_PER_MTOK, SCORE,
+                                         credits_for)
+    for model, rate in CREDITS_PER_MTOK.items():
+        legacy = rate * 777 / 1e6
+        assert credits_for(model, 777) == pytest.approx(legacy)
+        for kind in (SCORE, CLASSIFY, COMPLETE, None):
+            assert credits_for(model, 777, kind) == pytest.approx(legacy)
+    assert credits_for("unknown-model", 100) == pytest.approx(0.5 * 100 / 1e6)
+
+
+def test_simulated_embeddings_deterministic_and_topic_correlated():
+    c1 = make_simulated_client()
+    c2 = make_simulated_client()
+    texts = ["database engine storage query",
+             "query engine for database storage",
+             "soccer final tonight"]
+    v1 = c1.embed(texts)
+    v2 = c2.embed(texts)
+    np.testing.assert_array_equal(v1, v2)           # seed-deterministic
+    np.testing.assert_allclose(np.linalg.norm(v1, axis=1), 1.0, atol=1e-6)
+    assert v1[0] @ v1[1] > 0.5                      # shared vocabulary
+    assert v1[0] @ v1[2] < 0.4                      # disjoint topics
+
+
+def test_embed_faults_injected_before_billing():
+    from repro.inference.backend import EngineFailure, Request, EMBED
+    from repro.inference.simulator import SimulatedBackend
+    be = SimulatedBackend(seed=0, fault_rate=1.0)
+    with pytest.raises(EngineFailure):
+        be.submit_batch([Request("text", "arctic-embed-m", EMBED)])
+    assert be.total_credits == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SQL surface: AI_EMBED / AI_SIMILARITY
+# ---------------------------------------------------------------------------
+
+
+def _text_catalog(n=90, seed=0):
+    rng = np.random.default_rng(seed)
+    words = ["database engine", "vector index", "soccer match",
+             "film review"]
+    return Catalog({"t": Table({
+        "id": np.arange(n),
+        "val": rng.random(n),
+        "text": [f"[t:{i}] {words[i % 4]} body {i}" for i in range(n)],
+    }, name="t")})
+
+
+def test_parse_ai_embed_and_similarity():
+    from repro.core import sqlparse
+    from repro.core import expr as E
+    q = sqlparse.parse("SELECT AI_EMBED(t.text) FROM t "
+                       "WHERE AI_SIMILARITY(t.text, 'query') > 0.5")
+    assert isinstance(q.select[0].expr, E.AIEmbed)
+    assert isinstance(q.where.left, E.AISimilarity)
+    with pytest.raises(SyntaxError):
+        sqlparse.parse("SELECT AI_SIMILARITY(t.text) FROM t")
+
+
+def test_similarity_projection_and_threshold_filter():
+    cat = _text_catalog()
+    eng = AisqlEngine(cat, make_simulated_client())
+    out = eng.sql("SELECT t.id, AI_SIMILARITY(t.text, 'database engine') "
+                  "AS sim FROM t")
+    sims = out.column("sim")
+    ids = out.column("t.id")
+    on_topic = sims[ids % 4 == 0]
+    off_topic = sims[ids % 4 == 2]
+    assert on_topic.min() > off_topic.max()    # topics separate cleanly
+    flt = eng.sql("SELECT t.id FROM t "
+                  "WHERE AI_SIMILARITY(t.text, 'database engine') > 0.5")
+    assert set(flt.column("t.id").tolist()) == \
+        set(ids[sims > 0.5].tolist())
+
+
+def test_embed_projection_returns_unit_vectors():
+    cat = _text_catalog(12)
+    eng = AisqlEngine(cat, make_simulated_client())
+    out = eng.sql("SELECT t.id, AI_EMBED(t.text) AS v FROM t")
+    first = np.asarray(out.column("v")[0])
+    assert len(first) == 64
+    assert np.linalg.norm(first) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_similarity_topk_index_on_off_identical_and_warm_free():
+    cat = _text_catalog()
+    sql = ("SELECT t.id FROM t "
+           "ORDER BY AI_SIMILARITY(t.text, 'database engine') DESC "
+           "LIMIT 7")
+    off = AisqlEngine(cat, make_simulated_client())
+    rows_off = list(off.sql(sql).column("t.id"))
+    on = AisqlEngine(cat, make_simulated_client(),
+                     semindex=SemIndexConfig(impl="reference"))
+    rows_on = list(on.sql(sql).column("t.id"))
+    assert rows_on == rows_off
+    assert on.last_report.ai_credits <= off.last_report.ai_credits + 1e-12
+    assert on.last_report.semindex["index_topk"] == 1
+    # warm repeat: the store answers everything, zero EMBED dispatches
+    rows_warm = list(on.sql(sql).column("t.id"))
+    assert rows_warm == rows_off
+    assert on.last_report.ai_calls == 0
+
+
+def test_similarity_topk_ivf_probing_path():
+    """exact_topk=False routes the top-k through IVF probing; with
+    nprobe == nlist the probe set covers every cell, so the result is
+    still exact — the machinery is exercised without a recall gamble."""
+    cat = _text_catalog()
+    sql = ("SELECT t.id FROM t "
+           "ORDER BY AI_SIMILARITY(t.text, 'database engine') DESC "
+           "LIMIT 6")
+    off = AisqlEngine(cat, make_simulated_client())
+    on = AisqlEngine(cat, make_simulated_client(),
+                     semindex=SemIndexConfig(impl="reference",
+                                             exact_topk=False, nlist=6,
+                                             nprobe=6, min_index_rows=8))
+    assert list(on.sql(sql).column("t.id")) == \
+        list(off.sql(sql).column("t.id"))
+    assert on.semindex.index_builds == 1     # the managed IVF index ran
+
+
+def test_similarity_order_by_asc_matches_host_sort():
+    cat = _text_catalog()
+    sql = ("SELECT t.id FROM t "
+           "ORDER BY AI_SIMILARITY(t.text, 'database engine') ASC LIMIT 5")
+    off = AisqlEngine(cat, make_simulated_client())
+    on = AisqlEngine(cat, make_simulated_client(),
+                     semindex=SemIndexConfig(impl="reference"))
+    assert list(on.sql(sql).column("t.id")) == \
+        list(off.sql(sql).column("t.id"))
+
+
+# ---------------------------------------------------------------------------
+# index-assisted semantic join
+# ---------------------------------------------------------------------------
+
+
+def _race(cat, sql, *, semindex=None, seed=0):
+    eng = AisqlEngine(cat, make_simulated_client(seed=seed),
+                      semindex=semindex)
+    out = eng.sql(sql)
+    pairs = set(zip((int(x) for x in out.column("l.id")),
+                    (str(x) for x in out.column("r.label"))))
+    return eng, pairs
+
+
+def test_index_join_wins_race_and_pairs_subset():
+    left, right, _ = D.join_tables("EURLEX")
+    cat = Catalog({"l": left, "r": right})
+    sql = ("SELECT * FROM l JOIN r ON "
+           f"AI_FILTER(PROMPT('{D.JOIN_PROMPTS['EURLEX']}', "
+           "l.content, r.label))")
+    eng_c, pairs_c = _race(cat, sql)
+    eng_i, pairs_i = _race(cat, sql,
+                           semindex=SemIndexConfig(impl="reference",
+                                                   join_k=16))
+    assert any("rewrite-winner: index" in t
+               for t in eng_i.last_report.optimizer_trace)
+    assert "SemanticJoinIndex" in eng_i.last_report.plan
+    # per-label decisions are composition-independent: the index's
+    # verified pairs are the rewrite's selections restricted to the
+    # candidate set — never new pairs (EURLEX averages 4 true labels
+    # per row, which dilutes the anchors; recall is bounded, not exact)
+    assert pairs_i <= pairs_c
+    assert len(pairs_i) >= 0.7 * len(pairs_c)      # candidate recall
+    assert eng_i.last_report.ai_credits < 0.5 * eng_c.last_report.ai_credits
+    tel = eng_i.last_report.semindex
+    assert tel["index_joins"] == 1 and tel["probes"] == left.num_rows
+
+
+def test_index_join_identical_rows_without_add_noise():
+    """With the add-noise knob at zero, candidate pruning cannot lose a
+    selected pair (selections ⊆ true labels ⊆ candidates) — result rows
+    must be identical to the full classification rewrite."""
+    left, right, _ = D.join_tables("AGNEWS_100")
+    left = left.with_column("_add_frac", np.zeros(left.num_rows))
+    cat = Catalog({"l": left, "r": right})
+    sql = ("SELECT * FROM l JOIN r ON "
+           f"AI_FILTER(PROMPT('{D.JOIN_PROMPTS['AGNEWS_100']}', "
+           "l.content, r.label))")
+    _, pairs_c = _race(cat, sql)
+    eng_i, pairs_i = _race(cat, sql,
+                           semindex=SemIndexConfig(impl="reference",
+                                                   join_k=8))
+    assert pairs_i == pairs_c
+    assert eng_i.last_report.semindex["verify_calls"] == left.num_rows
+
+
+def test_index_join_multipass_matches_hybrid_rewrite():
+    """classify_passes applies to the index join's verification too:
+    with zero add-noise the 2-pass index join equals the 2-pass hybrid
+    rewrite (pass-tagged prompts draw identically on both paths)."""
+    left, right, _ = D.join_tables("AGNEWS_100")
+    left = left.with_column("_add_frac", np.zeros(left.num_rows))
+    cat = Catalog({"l": left, "r": right})
+    sql = ("SELECT * FROM l JOIN r ON "
+           f"AI_FILTER(PROMPT('{D.JOIN_PROMPTS['AGNEWS_100']}', "
+           "l.content, r.label))")
+    def run(semindex):
+        eng = AisqlEngine(cat, make_simulated_client(), semindex=semindex,
+                          executor=ExecConfig(classify_passes=2))
+        out = eng.sql(sql)
+        return eng, set(zip((int(x) for x in out.column("l.id")),
+                            (str(x) for x in out.column("r.label"))))
+    _, pairs_c = run(None)
+    eng_i, pairs_i = run(SemIndexConfig(impl="reference", join_k=8))
+    assert pairs_i == pairs_c
+    assert eng_i.last_report.semindex["verify_calls"] == 2 * left.num_rows
+
+
+def test_index_join_learns_candidate_rate():
+    from repro.core.stats import index_join_fingerprint
+    left, right, _ = D.join_tables("AGNEWS_100")
+    cat = Catalog({"l": left, "r": right})
+    sql = ("SELECT * FROM l JOIN r ON "
+           f"AI_FILTER(PROMPT('{D.JOIN_PROMPTS['AGNEWS_100']}', "
+           "l.content, r.label))")
+    eng, _ = _race(cat, sql, semindex=SemIndexConfig(impl="reference",
+                                                     join_k=6))
+    keys = [k for k in eng.stats.keys() if k.startswith("INDEX_JOIN|")]
+    assert keys
+    obs = eng.stats.get(keys[0])
+    assert obs.index_probes == left.num_rows
+    assert 0 < obs.candidates_per_probe <= 6
+
+
+def test_topk_index_score_escalates_candidates_only():
+    rng = np.random.default_rng(3)
+    n = 160
+    topic = rng.random(n) < 0.25
+    t = Table({
+        "id": np.arange(n),
+        "text": [f"[r:{i}] " + ("database query engine index"
+                                if topic[i] else "travel food films")
+                 + f" tail {i}" for i in range(n)],
+        "_truth": topic,
+        "_difficulty": np.full(n, 0.05),
+    }, name="t")
+    eng = AisqlEngine(Catalog({"t": t}), make_simulated_client(),
+                      semindex=SemIndexConfig(impl="reference"),
+                      executor=ExecConfig(topk_index_score=True))
+    out = eng.sql("SELECT t.id FROM t ORDER BY AI_SCORE(PROMPT("
+                  "'is this about database systems? {0}', t.text)) DESC "
+                  "LIMIT 5")
+    assert out.num_rows == 5
+    assert any("topk-index" in ev
+               for ev in eng.last_report.reoptimizations)
+    # the oracle only saw the escalated candidates, not all n rows
+    oracle_ops = [op for op in eng.last_report.operators
+                  if "AI_SCORE" in op.operator and "oracle" in op.operator]
+    assert oracle_ops and oracle_ops[0].actual_rows_in < n
+    assert all(bool(t.column("_truth")[i]) for i in out.column("t.id"))
+
+
+# ---------------------------------------------------------------------------
+# serving: one index shared across tenant sessions
+# ---------------------------------------------------------------------------
+
+
+def test_serving_shares_index_across_tenants():
+    cat = _text_catalog()
+    sql = ("SELECT t.id FROM t "
+           "ORDER BY AI_SIMILARITY(t.text, 'database engine') DESC "
+           "LIMIT 5")
+    serial = AisqlEngine(cat, make_simulated_client(),
+                         semindex=SemIndexConfig(impl="reference"))
+    rows_serial = list(serial.sql(sql).column("t.id"))
+    with ServingEngine.simulated(
+            cat, semindex=SemIndexConfig(impl="reference")) as srv:
+        t_a = srv.submit("tenant-a", sql)
+        t_a.result()
+        srv.drain()
+        embeds_after_a = srv.semindex.embed_llm_calls
+        t_b = srv.submit("tenant-b", sql)
+        t_b.result()
+        srv.drain()
+        # tenant B's query was answered from tenant A's embeddings:
+        # the shared store dispatched no new EMBED work
+        assert srv.semindex.embed_llm_calls == embeds_after_a
+        assert list(t_a.result().column("t.id")) == rows_serial
+        assert list(t_b.result().column("t.id")) == rows_serial
+
+
+def test_persisted_store_warm_starts_new_engine(tmp_path):
+    cat = _text_catalog(40)
+    sql = ("SELECT t.id FROM t "
+           "ORDER BY AI_SIMILARITY(t.text, 'database engine') DESC "
+           "LIMIT 4")
+    path = os.path.join(tmp_path, "semidx")
+    e1 = AisqlEngine(cat, make_simulated_client(),
+                     semindex=SemIndexConfig(impl="reference"),
+                     semindex_path=path)
+    rows1 = list(e1.sql(sql).column("t.id"))
+    assert e1.last_report.ai_calls > 0
+    # a brand-new engine (new client, new manager) loads the store from
+    # disk: same rows, zero EMBED dispatches
+    e2 = AisqlEngine(cat, make_simulated_client(),
+                     semindex=SemIndexConfig(impl="reference"),
+                     semindex_path=path)
+    rows2 = list(e2.sql(sql).column("t.id"))
+    assert rows2 == rows1
+    assert e2.last_report.ai_calls == 0
