@@ -37,8 +37,10 @@ def main(argv=None) -> int:
         ("beyond-paper: hybrid k-pass join", bench_hybrid_join.main),
     ]
     if not args.skip_serving:
-        from benchmarks import bench_serving
+        from benchmarks import bench_backend, bench_serving
         benches.append(("S2 serving throughput", bench_serving.main))
+        benches.append(("S2 decode backend: continuous vs static batching",
+                        lambda: bench_backend.main(["--quick"])))
 
     t0 = time.perf_counter()
     for name, fn in benches:

@@ -237,15 +237,18 @@ def make_engine_client(archs: Sequence[str] = ("proxy-8b", "oracle-70b"), *,
                        default_model: Optional[str] = None,
                        pipelined: bool = False,
                        pipeline: Union[None, PipelineConfig,
-                                       RequestPipeline] = None
-                       ) -> CortexClient:
-    """Convenience: a CortexClient over real JAX engines (smoke-size)."""
+                                       RequestPipeline] = None,
+                       backend: str = "auto") -> CortexClient:
+    """Convenience: a CortexClient over real JAX engines (smoke-size).
+    ``backend`` pins the engines' decode backend ("auto" picks continuous
+    batching wherever the architecture supports the paged KV cache)."""
     from repro.inference.engine import JaxInferenceEngine
     sched = Scheduler()
     for arch in archs:
         for rep in range(replicas):
             sched.register(JaxInferenceEngine(
-                arch, engine_id=f"{arch}#{rep}", seed=seed + rep))
+                arch, engine_id=f"{arch}#{rep}", seed=seed + rep,
+                backend=backend))
     return CortexClient(sched, default_model=default_model or archs[-1],
                         proxy_model=archs[0],
                         pipeline=_make_pipeline(pipelined, pipeline))

@@ -1,11 +1,18 @@
-"""JAX inference engine: one hosted model, slot-based continuous batching.
+"""JAX inference engine: one hosted model, continuous-batching decode.
 
 This is the Cortex Platform "Inference Engine" (paper §2) adapted to TPU:
 
-  * static-shape batch slots (XLA-friendly continuous batching): fixed
-    [max_batch] slots, finished sequences retire early from the decode
-    loop, and the scheduler admits queued work at batch boundaries;
-  * bucketed prefill (power-of-two lengths) to bound recompilation;
+  * **continuous batching** (default for pure-attention decoders): fixed
+    [max_batch] slots over a paged KV cache; finished sequences retire at
+    EOS and queued work is admitted at *every* decode step, with long
+    prompts chunk-prefilled between steps (``inference/continuous.py``).
+    SCORE and COMPLETE ride this path; CLASSIFY/EMBED (single forward
+    passes) and non-attention architectures use the static path below,
+    with **bit-identical results** either way;
+  * static-shape batch fallback: one blocking prefill+decode call per
+    batch, finished sequences retiring early from the decode loop;
+  * bucketed prefill (power-of-two lengths) and bucketed decode batch
+    sizes to bound recompilation;
   * four request kinds: COMPLETE (greedy decode), SCORE (yes/no confidence
     from next-token logits — the cascade's s_i, §5.2), CLASSIFY
     (label-likelihood scoring over a candidate set — AI_CLASSIFY), EMBED
@@ -54,7 +61,11 @@ class JaxInferenceEngine:
 
     def __init__(self, arch: str, *, engine_id: str = "", smoke: bool = True,
                  max_batch: int = 8, max_seq: int = 384, seed: int = 0,
-                 failure_rate: float = 0.0, straggle_s: float = 0.0):
+                 failure_rate: float = 0.0, straggle_s: float = 0.0,
+                 backend: str = "auto", block_size: int = 32,
+                 kv_blocks: Optional[int] = None, prefill_chunk: int = 32,
+                 decode_impl: str = "auto"):
+        from repro.inference import continuous as cb
         self.arch = arch
         self.engine_id = engine_id or f"{arch}#0"
         self.model = model_zoo.build(arch, smoke=smoke)
@@ -67,6 +78,22 @@ class JaxInferenceEngine:
         self._rng = np.random.default_rng(seed + 17)
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
         self._jit_cache: Dict[Any, Any] = {}
+        self.jit_compiles = 0      # distinct jit entries (compile proxy)
+        # decode backend: continuous batching wherever the architecture
+        # supports a paged cache, unless explicitly pinned
+        if backend == "auto":
+            backend = "continuous" if cb.supports(self.cfg) else "static"
+        elif backend == "continuous" and not cb.supports(self.cfg):
+            raise ValueError(f"{arch}: architecture does not support the "
+                             "continuous paged-KV backend")
+        elif backend not in ("continuous", "static"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self._batcher = None
+        if backend == "continuous":
+            self._batcher = cb.ContinuousBatcher(
+                self, block_size=block_size, num_blocks=kv_blocks,
+                prefill_chunk=prefill_chunk, decode_impl=decode_impl)
         # telemetry
         self.total_requests = 0
         self.total_tokens = 0
@@ -113,9 +140,10 @@ class JaxInferenceEngine:
             extra["positions"] = pos
         return extra
 
-    def _jit(self, key, fn):
+    def _jit(self, key, fn, donate=()):
         if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(fn)
+            self.jit_compiles += 1
+            self._jit_cache[key] = jax.jit(fn, donate_argnums=donate)
         return self._jit_cache[key]
 
     def _prefill(self, requests: Sequence[Request], cap: Optional[int] = None,
@@ -143,22 +171,27 @@ class JaxInferenceEngine:
     # request kinds
     # ------------------------------------------------------------------
 
-    def _score_batch(self, requests: Sequence[Request]) -> List[Result]:
+    def _score_batch(self, requests: Sequence[Request],
+                     t0: Optional[float] = None) -> List[Result]:
+        t0 = time.perf_counter() if t0 is None else t0
         logits, _, lens, _ = self._prefill(requests)
         lf = np.asarray(logits, np.float32)
         py = lf[:, tok.YES_ID]
         pn = lf[:, tok.NO_ID]
         score = 1.0 / (1.0 + np.exp(-(py - pn)))   # P(yes | {yes,no})
+        lat = time.perf_counter() - t0
         return [
             Result(r.request_id, self.arch, SCORE, score=float(score[i]),
                    tokens_in=int(lens[i]),
                    credits=credits_for(self.arch, int(lens[i])),
-                   engine_id=self.engine_id)
+                   latency_s=lat, engine_id=self.engine_id)
             for i, r in enumerate(requests)]
 
-    def _classify_batch(self, requests: Sequence[Request]) -> List[Result]:
+    def _classify_batch(self, requests: Sequence[Request],
+                        t0: Optional[float] = None) -> List[Result]:
         """Label-likelihood classification: logprob of each candidate label
         as a continuation of the prompt, softmax over candidates."""
+        t0 = time.perf_counter() if t0 is None else t0
         results = []
         flat_prompts, flat_labels, owners = [], [], []
         for i, r in enumerate(requests):
@@ -176,7 +209,7 @@ class JaxInferenceEngine:
                     r.request_id, self.arch, CLASSIFY, label=None, labels=(),
                     tokens_in=ti, credits=credits_for(self.arch, ti),
                     engine_id=self.engine_id))
-            return out
+            return _stamp_latency(out, t0)
         lps, tokens_used = self._sequence_logprob(flat_prompts, flat_labels)
         per_req: Dict[int, List[Tuple[str, float]]] = {}
         for o, lb, lp in zip(owners, flat_labels, lps):
@@ -213,7 +246,7 @@ class JaxInferenceEngine:
                 r.request_id, self.arch, CLASSIFY, label=top, labels=chosen,
                 tokens_in=ti, credits=credits_for(self.arch, ti),
                 engine_id=self.engine_id))
-        return results
+        return _stamp_latency(results, t0)
 
     def _sequence_logprob(self, prompts: Sequence[str],
                           continuations: Sequence[str]):
@@ -253,11 +286,13 @@ class JaxInferenceEngine:
         lps = np.asarray(fn(self.params, jnp.asarray(toks), jnp.asarray(msk)))
         return lps.tolist(), [int(m.sum() + (1 - m).sum()) for m in msk]
 
-    def _embed_batch(self, requests: Sequence[Request]) -> List[Result]:
+    def _embed_batch(self, requests: Sequence[Request],
+                     t0: Optional[float] = None) -> List[Result]:
         """Masked mean-pool of the final hidden states, projected to the
         requested dimensionality by a fixed seeded matrix and unit-
         normalized.  One encoder pass, no decode loop — which is why the
         EMBED tier prices input tokens only."""
+        t0 = time.perf_counter() if t0 is None else t0
         toks, lens, L = self._encode_batch([r.prompt for r in requests],
                                            self.max_seq)
         B = len(requests)
@@ -290,15 +325,26 @@ class JaxInferenceEngine:
                 tokens_in=int(lens[i]),
                 credits=credits_for(self.arch, int(lens[i]), EMBED),
                 engine_id=self.engine_id))
-        return results
+        return _stamp_latency(results, t0)
 
-    def _complete_batch(self, requests: Sequence[Request]) -> List[Result]:
+    def _complete_batch(self, requests: Sequence[Request],
+                        t0: Optional[float] = None) -> List[Result]:
         """Greedy decode over batch slots; finished sequences retire early
-        (the scheduler admits new work at batch boundaries)."""
+        (the static fallback path — the continuous backend admits new work
+        at every step instead of batch boundaries)."""
+        t0 = time.perf_counter() if t0 is None else t0
+        B0 = len(requests)
         max_new = max(r.max_tokens for r in requests)
+        # bucket the decode batch to powers of two: per-row results are
+        # batch-independent, so padding with sentinel rows costs nothing
+        # and keeps the decode jit key count logarithmic in batch size
+        Bp = _bucket(B0, lo=1)
+        padded: List[Request] = list(requests) + [
+            Request("", self.arch, COMPLETE, max_tokens=1)
+            for _ in range(Bp - B0)]
         logits, cache, lens, L = self._prefill(
-            requests, extra_capacity=_bucket(max_new, lo=16))
-        B = len(requests)
+            padded, extra_capacity=_bucket(max(max_new, 1), lo=16))
+        B = Bp
 
         def decode_fn(params, cache, tokens):
             out = self.model.apply(params, {"tokens": tokens}, mode="decode",
@@ -310,16 +356,19 @@ class JaxInferenceEngine:
         cur = np.asarray(jnp.argmax(logits, -1), np.int32)[:, None]
         done = np.zeros(B, bool)
         outs: List[List[int]] = [[] for _ in range(B)]
+        finish = [t0] * B
         for step in range(max_new):
             for i in range(B):
                 if not done[i]:
                     outs[i].append(int(cur[i, 0]))
-                    if cur[i, 0] == tok.EOS_ID or len(outs[i]) >= requests[i].max_tokens:
+                    if cur[i, 0] == tok.EOS_ID or len(outs[i]) >= padded[i].max_tokens:
                         done[i] = True
+                        finish[i] = time.perf_counter()
             if done.all():
                 break
             lg, cache = fn(self.params, cache, jnp.asarray(cur))
             cur = np.asarray(jnp.argmax(lg, -1), np.int32)[:, None]
+        end = time.perf_counter()
         results = []
         for i, r in enumerate(requests):
             text = tok.decode(outs[i])
@@ -328,6 +377,7 @@ class JaxInferenceEngine:
                 r.request_id, self.arch, COMPLETE, text=text,
                 tokens_in=int(lens[i]), tokens_out=len(outs[i]),
                 credits=credits_for(self.arch, ntok),
+                latency_s=(finish[i] if done[i] else end) - t0,
                 engine_id=self.engine_id))
         return results
 
@@ -342,37 +392,90 @@ class JaxInferenceEngine:
             time.sleep(self.straggle_s)
         t0 = time.perf_counter()
         out: List[Result] = []
+        cont: List[Request] = []
         by_kind: Dict[str, List[Request]] = {}
         for r in requests:
-            by_kind.setdefault(r.kind, []).append(r)
+            if self._batcher is not None and r.kind in (SCORE, COMPLETE):
+                cont.append(r)
+            else:
+                by_kind.setdefault(r.kind, []).append(r)
+        if cont:
+            out.extend(self._batcher.serve(cont, t0))
         for kind, reqs in by_kind.items():
             for i in range(0, len(reqs), self.max_batch):
                 chunk = reqs[i:i + self.max_batch]
                 if kind == SCORE:
-                    out.extend(self._score_batch(chunk))
+                    out.extend(self._score_batch(chunk, t0))
                 elif kind == CLASSIFY:
-                    out.extend(self._classify_batch(chunk))
+                    out.extend(self._classify_batch(chunk, t0))
                 elif kind == EMBED:
-                    out.extend(self._embed_batch(chunk))
+                    out.extend(self._embed_batch(chunk, t0))
                 else:
-                    out.extend(self._complete_batch(chunk))
-        dt = time.perf_counter() - t0
-        per = dt / max(len(requests), 1)
+                    out.extend(self._complete_batch(chunk, t0))
         for r in out:
-            r.latency_s = per
             self.total_credits += r.credits
             self.total_tokens += r.tokens_in + r.tokens_out
         self.total_requests += len(requests)
-        order = {r.request_id: i for i, r in enumerate(requests)}
-        out.sort(key=lambda r: order.get(r.request_id, 0))
-        return out
+        return self._restore_order(requests, out)
+
+    def _restore_order(self, requests: Sequence[Request],
+                       out: List[Result]) -> List[Result]:
+        """Return results in submission order.  Duplicated request ids map
+        to submission positions in production order (stable); a result
+        whose id was never submitted is an engine invariant violation."""
+        slots: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            slots.setdefault(r.request_id, []).append(i)
+        taken: Dict[int, int] = {}
+        keyed: List[Tuple[int, Result]] = []
+        for res in out:
+            positions = slots.get(res.request_id)
+            k = taken.get(res.request_id, 0)
+            if positions is None or k >= len(positions):
+                raise EngineFailure(
+                    f"{self.engine_id}: result for unknown request_id "
+                    f"{res.request_id!r}")
+            taken[res.request_id] = k + 1
+            keyed.append((positions[k], res))
+        keyed.sort(key=lambda t: t[0])
+        return [res for _, res in keyed]
 
     def hosted_models(self) -> List[str]:
         return [self.arch]
 
     def capacity_hint(self) -> int:
-        """Preferred per-dispatch batch size (scheduler right-sizing)."""
+        """Preferred per-dispatch batch size (scheduler right-sizing).
+        The continuous backend absorbs oversized batches through per-step
+        admission, so it advertises a deeper queue."""
+        if self._batcher is not None:
+            return self.max_batch * 4
         return self.max_batch
+
+    def backend_stats(self) -> Dict[str, Any]:
+        """Decode-backend telemetry (continuous batching + jit entries)."""
+        d: Dict[str, Any] = {"backend": self.backend,
+                             "jit_entries": self.jit_compiles}
+        if self._batcher is not None:
+            d.update(self._batcher.stats())
+        return d
+
+    def backend_roofline(self) -> Dict[str, Any]:
+        """Roofline-derived utilization of the continuous backend's step
+        functions (prefill vs decode), from ``launch/roofline.py``; empty
+        on the static backend or before any request was served."""
+        if self._batcher is None:
+            return {}
+        return self._batcher.roofline_report()
+
+
+def _stamp_latency(results: List[Result], t0: float) -> List[Result]:
+    """Chunk-level latency for single-forward-pass kinds: every request in
+    the chunk finished when the chunk did (no per-request step loop to
+    attribute from)."""
+    lat = time.perf_counter() - t0
+    for r in results:
+        r.latency_s = lat
+    return results
 
 
 def cache_sig(cache):

@@ -99,6 +99,23 @@ class Scheduler:
         return (self._busy_s.get(id(engine), 0.0)
                 + float(self._depth.get(id(engine), 0)))
 
+    def backend_stats(self) -> Dict[str, Dict]:
+        """Decode-backend telemetry per registered engine (engines that
+        expose ``backend_stats``), keyed by engine id — what the serving
+        report surfaces for continuous-batching occupancy/step counts."""
+        with self._lock:
+            out: Dict[str, Dict] = {}
+            seen = set()
+            for reps in self._replicas.values():
+                for e in reps:
+                    if id(e) in seen:
+                        continue
+                    seen.add(id(e))
+                    fn = getattr(e, "backend_stats", None)
+                    if callable(fn):
+                        out[getattr(e, "engine_id", f"engine#{len(out)}")] = fn()
+            return out
+
     def atomic_batch(self, model: str) -> Optional[int]:
         """Largest single-model batch ``submit`` will never split across
         replicas (None = single replica, unbounded).  A caller that

@@ -54,6 +54,32 @@ def flash_decode(q, k_cache, v_cache, lengths, *, impl: str = "auto",
     return out[:, None]
 
 
+def gather_kv_blocks(pool, tables):
+    """Dense cache view of a paged KV pool.
+
+    pool: [NB, bs, ...] fixed-size blocks; tables: int32 [B, nb] per-
+    sequence block tables.  Returns [B, nb*bs, ...] — sequence ``b``'s
+    tokens contiguous at positions ``0..len_b-1`` (table order).
+    """
+    g = jnp.take(pool, tables.reshape(-1), axis=0)     # [B*nb, bs, ...]
+    B, nb = tables.shape
+    return g.reshape((B, nb * pool.shape[1]) + pool.shape[2:])
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_k"))
+def flash_decode_paged(q, k_pool, v_pool, tables, lengths, *,
+                       impl: str = "auto", block_k: int = 512):
+    """Flash-decode against paged KV pools via block-table gather.
+
+    q: [B,1,H,hd]; k_pool,v_pool: [NB,bs,KV,hd]; tables: int32 [B,nb];
+    lengths: [B] valid tokens per sequence.  Returns [B,1,H,hd], bitwise
+    equal to ``flash_decode`` over the equivalent dense [B,nb*bs] cache.
+    """
+    kc = gather_kv_blocks(k_pool, tables)
+    vc = gather_kv_blocks(v_pool, tables)
+    return flash_decode(q, kc, vc, lengths, impl=impl, block_k=block_k)
+
+
 def flash_decode_sharded(q, k_cache, v_cache, lengths, *, mesh, seq_axis: str,
                          dp_axes, impl: str = "auto", block_k: int = 512):
     """Flash-decode with the cache sequence axis sharded over ``seq_axis``.

@@ -13,6 +13,7 @@ swapped in via ``attention_impl='pallas'`` on real TPUs.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -22,6 +23,26 @@ import jax.numpy as jnp
 from repro.models import shardctx
 
 NEG_INF = -1e30
+
+# Single-token decode attention implementation. "dense" is the pure-jnp
+# reference below; anything else routes through the kernels/decode_attention
+# flash path ("auto" = Pallas on TPU, the bitwise-equal reference off-TPU).
+# Trace-time state: the continuous-batching backend arms it around its
+# jitted decode step, so the choice is baked into each compiled step fn.
+_DECODE_IMPL = "dense"
+
+
+@contextlib.contextmanager
+def use_decode_impl(impl: str):
+    """Route single-token :func:`decode_attention` calls traced inside this
+    context through ``kernels/decode_attention`` (``impl`` in {"dense",
+    "auto", "reference", "interpret", "pallas"})."""
+    global _DECODE_IMPL
+    prev, _DECODE_IMPL = _DECODE_IMPL, impl
+    try:
+        yield
+    finally:
+        _DECODE_IMPL = prev
 
 
 def _grouped_logits(q, k):
@@ -158,6 +179,10 @@ def decode_attention(q, k_cache, v_cache, lengths):
     flash-decode kernel replaces with a logsumexp-combine on TPU.
     """
     B, T, H, hd = q.shape
+    if T == 1 and _DECODE_IMPL != "dense":
+        from repro.kernels.decode_attention import ops as dec_ops
+        return dec_ops.flash_decode(q, k_cache, v_cache, lengths,
+                                    impl=_DECODE_IMPL)
     Smax = k_cache.shape[1]
     kv_pos = jnp.arange(Smax, dtype=jnp.int32)[None]           # [1,Smax]
     q_pos = (lengths[:, None] - T) + jnp.arange(T, dtype=jnp.int32)[None]

@@ -165,3 +165,23 @@ def test_documented_pilot_keys_match_runtime():
     assert pilot is not None
     assert set(documented) == set(pilot.keys()), (documented,
                                                   sorted(pilot.keys()))
+
+
+def test_backend_doc_exists_and_linked():
+    assert os.path.exists(os.path.join(DOCS, "backend-serving.md"))
+    assert "docs/backend-serving.md" in _read("README.md")
+    assert "backend-serving.md" in _read("docs/architecture.md")
+    assert "backend-serving.md" in _read("docs/serving.md")
+
+
+def test_documented_backend_knobs_exist_in_code():
+    """Every knob in backend-serving.md's table is a real
+    JaxInferenceEngine constructor parameter."""
+    import inspect
+    from repro.inference.engine import JaxInferenceEngine
+    text = _read("docs/backend-serving.md")
+    knobs = _table_fields(text, "## Knobs")
+    assert knobs, "knob table not found in backend-serving.md"
+    params = set(inspect.signature(JaxInferenceEngine.__init__).parameters)
+    unknown = set(knobs) - params
+    assert not unknown, f"documented but not a constructor param: {unknown}"
