@@ -82,6 +82,7 @@ from repro.core.stats import (StatsStore, index_join_fingerprint,
 from repro.inference.api import CortexClient
 from repro.inference.backend import CLASSIFY, COMPLETE, SCORE, Request
 from repro.inference.pipeline import ResultFuture
+from repro.tables.chunked import ChunkedTable
 from repro.tables.table import Table, _hash_join_indices
 
 
@@ -140,11 +141,11 @@ def row_metadata(table: Table, rows: np.ndarray,
         leaf = c.rsplit(".", 1)[-1]
         if leaf.startswith("_truth__"):
             if leaf[len("_truth__"):] in arg_set:
-                scoped_truth.append(table.column(c)[rows])
+                scoped_truth.append(table.gather(c, rows))
         elif leaf in _MD_MAP:
             # last matching column wins (pre-existing contract for joined
             # tables that carry several hidden columns of the same leaf)
-            hidden[_MD_MAP[leaf]] = table.column(c)[rows]
+            hidden[_MD_MAP[leaf]] = table.gather(c, rows)
     if scoped_truth:
         # scoped truth wins over table-wide _truth; a predicate that
         # references several scoped-truth columns is true iff all are
@@ -722,6 +723,44 @@ class Executor:
     # partition-pull streaming execution (the partitioned mode driver)
     # ------------------------------------------------------------------
 
+    def _partition_spans(self, table: Table
+                         ) -> List[Tuple[int, int, Optional[int]]]:
+        """Partition boundaries ``(lo, hi, segment_id)`` for the pull
+        loop.  On a chunk-backed table, partitions are aligned to never
+        straddle a chunk — each span maps to exactly one segment whose
+        morsel view feeds the predicate chain zero-copy; on a monolithic
+        table ``segment_id`` is None and spans are plain
+        ``partition_rows`` strides."""
+        n = table.num_rows
+        psize = max(self.cfg.partition_rows, 1)
+        if isinstance(table, ChunkedTable):
+            spans: List[Tuple[int, int, Optional[int]]] = []
+            for sid, (slo, shi) in enumerate(table.segment_bounds()):
+                for lo in range(slo, shi, psize):
+                    spans.append((lo, min(lo + psize, shi), sid))
+            return spans or [(0, 0, None)]
+        return [(lo, min(lo + psize, n), None)
+                for lo in range(0, n, psize)] or [(0, 0, None)]
+
+    def _span_morsel(self, table: Table, sid: Optional[int]
+                     ) -> Tuple[Table, int]:
+        """The (morsel table, global row offset) a span evaluates on."""
+        if sid is None:
+            return table, 0
+        return table.morsel(sid), table.segment_bounds()[sid][0]
+
+    @staticmethod
+    def _localize_known(known: Optional[Dict[str, Dict[int, bool]]],
+                        moff: int, mend: int
+                        ) -> Optional[Dict[str, Dict[int, bool]]]:
+        """Rebase pilot-known row results (global indices) onto a
+        morsel's local indices for rows inside ``[moff, mend)``."""
+        if not known or moff == 0:
+            return known
+        return {key: {g - moff: v for g, v in km.items()
+                      if moff <= g < mend}
+                for key, km in known.items()}
+
     def _partition_pull(self, table: Table, preds: List[E.Expr],
                         known: Optional[Dict[str, Dict[int, bool]]],
                         limit: Optional[int]) -> np.ndarray:
@@ -730,11 +769,13 @@ class Executor:
         an independently submitted batch the scheduler spreads across
         replicas), feeding a `StreamingLimit` consumer.  With a limit the
         loop stops — and cancels still-queued prefetches — as soon as
-        ``n`` surviving rows exist.  Returns the selected global row
-        indices in table order."""
-        n = table.num_rows
+        ``n`` surviving rows exist.  On a `ChunkedTable` each partition
+        evaluates against its chunk's morsel view, so the table is never
+        materialized; surviving-row bookkeeping stays in global indices
+        throughout.  Returns the selected global row indices in table
+        order."""
         psize = max(self.cfg.partition_rows, 1)
-        starts = list(range(0, n, psize)) or [0]
+        spans = self._partition_spans(table)
         consumer = StreamingLimit(limit)
         order = list(preds)
         prefetched: Dict[int, Tuple[str, np.ndarray, SemanticHandle]] = {}
@@ -742,16 +783,19 @@ class Executor:
         # flush can dispatch mid-submit); folded into the predicate's
         # accounting at consume time so no spend is ever orphaned
         self._prefetch_spend: Dict[str, float] = {}
-        tel = {"partitions_total": len(starts), "partitions_executed": 0,
+        tel = {"partitions_total": len(spans), "partitions_executed": 0,
                "partitions_cancelled": 0, "partition_rows": psize,
                "rows_scanned": 0, "rows_emitted": 0,
                "early_terminated": False, "cancelled_requests": 0}
         try:
-            for i, lo in enumerate(starts):
-                part = np.arange(lo, min(lo + psize, n), dtype=np.int64)
+            for i, (lo, hi, sid) in enumerate(spans):
+                part = np.arange(lo, hi, dtype=np.int64)
                 tel["rows_scanned"] += int(len(part))
-                self._prefetch_first_pred(table, order, known, starts, i,
-                                          psize, n, prefetched)
+                self._prefetch_first_pred(table, order, known, spans, i,
+                                          prefetched)
+                mtable, moff = self._span_morsel(table, sid)
+                kloc = known if sid is None else self._localize_known(
+                    known, moff, table.segment_bounds()[sid][1])
                 alive = part
                 for pred in order:
                     if not len(alive):
@@ -762,7 +806,8 @@ class Executor:
                         res = self._consume_prefetched(pred, rows, handle,
                                                        alive)
                     else:
-                        res = self._timed_pred(pred, table, alive, known)
+                        res = self._timed_pred(pred, mtable, alive - moff,
+                                               kloc)
                     alive = alive[res]
                 # a prefetch this partition never reached (rows died first,
                 # or a reorder changed the chain): withdraw it
@@ -773,7 +818,8 @@ class Executor:
                 tel["partitions_executed"] += 1
                 consumer.add(alive)
                 # adaptive reordering between partitions (§5.1 runtime)
-                if self.cfg.adaptive_reorder and order and lo + psize < n:
+                if self.cfg.adaptive_reorder and order \
+                        and i + 1 < len(spans):
                     ranked = sorted(order,
                                     key=lambda p: self._stats_for(p).rank)
                     if ranked != order:
@@ -782,7 +828,7 @@ class Executor:
                             + ", ".join(self._pred_key(p) for p in ranked))
                         order = ranked
                 if consumer.satisfied:
-                    remaining = len(starts) - (i + 1)
+                    remaining = len(spans) - (i + 1)
                     if remaining or prefetched:
                         tel["early_terminated"] = True
                     tel["partitions_cancelled"] = remaining
@@ -815,12 +861,15 @@ class Executor:
         return out
 
     def _prefetch_first_pred(self, table: Table, order: List[E.Expr],
-                             known, starts: List[int], i: int, psize: int,
-                             n: int, prefetched: Dict[int, Tuple]) -> None:
+                             known, spans: List[Tuple], i: int,
+                             prefetched: Dict[int, Tuple]) -> None:
         """Speculatively queue the first AI predicate of the next
         ``partition_lookahead`` partitions into the pipeline so their
         rows coalesce into one engine batch (split across replicas by
-        the scheduler).  Bounded speculation: on early termination the
+        the scheduler).  On a chunked table each lookahead span renders
+        from its own morsel view (prompts are identical to a full-table
+        render, so cache/dedup keys agree across stores); bookkeeping
+        stays global.  Bounded speculation: on early termination the
         still-queued requests are cancelled, never dispatched or
         billed."""
         lookahead = self.cfg.partition_lookahead
@@ -834,12 +883,13 @@ class Executor:
         if (known or {}).get(key):
             return      # pilot already paid for rows; avoid recounting
         c0 = self.client.ai_credits
-        for j in range(i, min(i + lookahead, len(starts))):
-            lo = starts[j]
+        for j in range(i, min(i + lookahead, len(spans))):
+            lo, hi, sid = spans[j]
             if lo in prefetched:
                 continue
-            rows = np.arange(lo, min(lo + psize, n), dtype=np.int64)
-            op = SemanticOp.from_filter(pred, table, rows,
+            rows = np.arange(lo, hi, dtype=np.int64)
+            mtable, moff = self._span_morsel(table, sid)
+            op = SemanticOp.from_filter(pred, mtable, rows - moff,
                                         self._filter_model(pred))
             prefetched[lo] = (key, rows, op.submit(self.client))
         spent = self.client.ai_credits - c0

@@ -318,8 +318,12 @@ def eval_expr(e: Expr, table: Table, rows: Optional[np.ndarray] = None
     n = table.num_rows if rows is None else len(rows)
 
     def col(name):
-        c = table.column(resolve_column(table, name))
-        return c if rows is None else c[rows]
+        resolved = resolve_column(table, name)
+        if rows is None:
+            return table.column(resolved)
+        # segment-wise on chunked tables: touches only the chunks that
+        # hold `rows`, never the whole column
+        return table.gather(resolved, rows)
 
     if isinstance(e, Column):
         return col(e.name)

@@ -285,6 +285,9 @@ class ServingReport:
     queue_wait_p95_s: float
     latency_p50_s: float
     latency_p95_s: float
+    # aggregated spill-manager counters (chunked catalog tables + the
+    # embedding store); None when nothing spillable is attached
+    storage: Optional[Dict[str, int]] = None
 
     def render(self) -> str:
         lines = [
@@ -302,6 +305,13 @@ class ServingReport:
             f"{self.queue_wait_p95_s:.3f}s, exec p50/p95 "
             f"{self.latency_p50_s:.3f}/{self.latency_p95_s:.3f}s",
         ]
+        if self.storage is not None:
+            s = self.storage
+            lines.append(
+                f"-- storage: peak {s['peak_bytes']} tracked bytes "
+                f"({s['tracked_bytes']} resident), "
+                f"{s['spill_events']} spills / "
+                f"{s['reload_events']} reloads")
         for t in self.tenants.values():
             budget = ("∞" if t.credit_budget is None
                       else f"{t.credit_budget:.4g}")
@@ -377,15 +387,19 @@ class ServingEngine:
     @classmethod
     def simulated(cls, catalog: Catalog, *, seed: int = 0,
                   fault_rate: float = 0.0, timeout_rate: float = 0.0,
+                  fault_burst_every: int = 0, fault_burst_len: int = 0,
                   replicas: int = 1, **kw) -> "ServingEngine":
         """Convenience: a serving engine over the calibrated simulator
-        (optionally with injected transient faults/timeouts)."""
+        (optionally with injected transient faults/timeouts; burst
+        parameters cluster those faults in attempt-time)."""
         from repro.inference.simulator import SimulatedBackend
         sched = Scheduler()
         for rep in range(max(replicas, 1)):
             sched.register(SimulatedBackend(
                 seed=seed, fault_rate=fault_rate, timeout_rate=timeout_rate,
-                fault_seed=seed + 101 * rep))
+                fault_seed=seed + 101 * rep,
+                fault_burst_every=fault_burst_every,
+                fault_burst_len=fault_burst_len))
         return cls(catalog, sched, **kw)
 
     # -- context manager ----------------------------------------------
@@ -520,6 +534,27 @@ class ServingEngine:
         return False
 
     # -- reporting -----------------------------------------------------
+    def storage_stats(self) -> Optional[Dict[str, int]]:
+        """Aggregate spill-manager counters across every chunk-backed
+        catalog table and the embedding store (managers deduplicated:
+        tables sharing one manager are counted once)."""
+        managers = {}
+        for t in self.catalog.tables.values():
+            mgr = getattr(t, "spill", None)
+            if mgr is not None:
+                managers[id(mgr)] = mgr
+        if self.semindex is not None:
+            mgr = getattr(self.semindex.store, "spill", None)
+            if mgr is not None:
+                managers[id(mgr)] = mgr
+        if not managers:
+            return None
+        agg: Dict[str, int] = {}
+        for mgr in managers.values():
+            for k, v in mgr.stats().items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
     def backend_credits(self) -> Optional[float]:
         """Sum of the backends' own credit meters (independent source
         for the conservation check); None if no backend exposes one."""
@@ -579,4 +614,5 @@ class ServingEngine:
             queue_wait_p50_s=_percentile(all_waits, 0.50),
             queue_wait_p95_s=_percentile(all_waits, 0.95),
             latency_p50_s=_percentile(all_lats, 0.50),
-            latency_p95_s=_percentile(all_lats, 0.95))
+            latency_p95_s=_percentile(all_lats, 0.95),
+            storage=self.storage_stats())

@@ -92,13 +92,20 @@ class SimulatedBackend:
 
     def __init__(self, models: Optional[Sequence[str]] = None, *, seed: int = 0,
                  batch_parallelism: int = 8, fault_rate: float = 0.0,
-                 timeout_rate: float = 0.0, fault_seed: Optional[int] = None):
+                 timeout_rate: float = 0.0, fault_seed: Optional[int] = None,
+                 fault_burst_every: int = 0, fault_burst_len: int = 0):
         self.models = list(models or MODEL_PROFILES)
         self.seed = seed
         self.batch_parallelism = batch_parallelism
         self.fault_rate = float(fault_rate)
         self.timeout_rate = float(timeout_rate)
         self.fault_seed = seed if fault_seed is None else fault_seed
+        # bursty fault process (production outages cluster in time): with
+        # fault_burst_every > 0 the fault/timeout die only rolls during
+        # the first fault_burst_len attempts of each fault_burst_every
+        # window of the attempt counter; service is clean in between
+        self.fault_burst_every = int(fault_burst_every)
+        self.fault_burst_len = int(fault_burst_len)
         self.clock_s = 0.0
         self.total_credits = 0.0
         self.calls_by_model: Dict[str, int] = {}
@@ -128,6 +135,10 @@ class SimulatedBackend:
         if not (self.fault_rate or self.timeout_rate):
             return
         self._fault_attempts += 1
+        if self.fault_burst_every > 0:
+            phase = (self._fault_attempts - 1) % self.fault_burst_every
+            if phase >= self.fault_burst_len:
+                return          # between bursts: clean service
         rng = _rng_for(self.fault_seed, "fault", self._fault_attempts)
         u = rng.random()
         if u < self.fault_rate:

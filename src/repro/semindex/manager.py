@@ -46,6 +46,11 @@ class SemIndexConfig:
             pruning and join blocking alike — use the exact flat scan,
             guaranteeing index-on == index-off rows; False trades that
             for IVF probing at ``nprobe`` cells per query.
+        embed_budget_bytes: when set, the `EmbeddingStore` pages its
+            vectors through a byte-budgeted `SpillManager` (LRU page
+            eviction to disk) instead of holding every vector resident.
+        embed_page_rows: vectors per spillable page (the store's
+            eviction granularity).
     """
     model: Optional[str] = None
     dim: int = 64
@@ -57,6 +62,8 @@ class SemIndexConfig:
     join_k: int = 8
     join_min_sim: Optional[float] = None
     exact_topk: bool = True
+    embed_budget_bytes: Optional[int] = None
+    embed_page_rows: int = 1024
 
 
 class SemanticIndexManager:
@@ -66,7 +73,16 @@ class SemanticIndexManager:
                  store: Optional[EmbeddingStore] = None,
                  path: Optional[str] = None):
         self.cfg = cfg or SemIndexConfig()
-        self.store = store if store is not None else EmbeddingStore(path)
+        if store is not None:
+            self.store = store
+        elif self.cfg.embed_budget_bytes is not None:
+            from repro.tables.spill import SpillManager
+            self.store = EmbeddingStore(
+                path, spill=SpillManager(
+                    budget_bytes=self.cfg.embed_budget_bytes),
+                page_rows=self.cfg.embed_page_rows)
+        else:
+            self.store = EmbeddingStore(path)
         self._lock = threading.RLock()
         # column key -> (signature, IvfFlatIndex)
         self._indexes: Dict[str, Tuple[str, IvfFlatIndex]] = {}

@@ -28,6 +28,89 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+class _VectorPage:
+    """A fixed-capacity [page_rows, D] float32 slab of vectors, held as
+    one spillable segment.  Open (appendable) pages are pinned in
+    memory; once full they seal and become LRU-evictable like any table
+    chunk."""
+
+    def __init__(self, spill, dim: int, capacity: int):
+        from repro.tables.spill import SpillSegment
+        self.capacity = capacity
+        self.count = 0
+        self.seg = SpillSegment(
+            spill, {"v": np.zeros((capacity, dim), np.float32)},
+            sealed=False)
+
+    def append(self, vec: np.ndarray) -> int:
+        slot = self.count
+        self.seg.arrays()["v"][slot] = vec
+        self.count += 1
+        if self.count == self.capacity:
+            self.seg.seal()
+        return slot
+
+    def vector(self, slot: int) -> np.ndarray:
+        return self.seg.arrays()["v"][slot]
+
+
+class _PagedVectorMap:
+    """dict-of-vectors facade over spillable `_VectorPage`s.
+
+    Vectors are content-addressed and therefore write-once: a repeated
+    ``[key] = vec`` always carries the same value, so sealed pages never
+    need rewriting on disk.  One open page per dimensionality."""
+
+    def __init__(self, spill, page_rows: int = 1024):
+        self._spill = spill
+        self._page_rows = max(int(page_rows), 1)
+        self._loc: Dict[str, Tuple[_VectorPage, int]] = {}
+        self._open: Dict[int, _VectorPage] = {}
+
+    def get(self, key: str, default=None):
+        loc = self._loc.get(key)
+        if loc is None:
+            return default
+        return loc[0].vector(loc[1])
+
+    def __getitem__(self, key: str) -> np.ndarray:
+        page, slot = self._loc[key]
+        return page.vector(slot)
+
+    def __setitem__(self, key: str, vec) -> None:
+        vec = np.asarray(vec, np.float32)
+        loc = self._loc.get(key)
+        if loc is not None:          # content-addressed: same value
+            loc[0].seg.arrays()["v"][loc[1]] = vec
+            return
+        d = int(vec.shape[-1])
+        page = self._open.get(d)
+        if page is None or page.count >= page.capacity:
+            page = _VectorPage(self._spill, d, self._page_rows)
+            self._open[d] = page
+        self._loc[key] = (page, page.append(vec))
+
+    def setdefault(self, key: str, vec) -> np.ndarray:
+        got = self.get(key)
+        if got is not None:
+            return got
+        self[key] = vec
+        return self[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._loc
+
+    def __len__(self) -> int:
+        return len(self._loc)
+
+    def __iter__(self):
+        return iter(self._loc)
+
+    def clear(self) -> None:
+        self._loc.clear()
+        self._open.clear()
+
+
 def content_key(model: str, text: str, dim: Optional[int] = None) -> str:
     """Content-hash identity of one (model, text, dim) embedding.  The
     dimensionality is part of the key: the same text embedded at two
@@ -49,16 +132,28 @@ class EmbeddingStore:
     ``path`` is a *prefix*: ``save`` writes ``<path>.json`` and
     ``<path>.npz``; construction loads them when present (merge-on-load,
     like `StatsStore`).
+
+    With ``spill`` set (a `repro.tables.spill.SpillManager`), vectors
+    live in fixed-size spillable pages under that manager's byte budget
+    instead of one resident dict — same observable behaviour, bounded
+    memory.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None, *,
+                 spill=None, page_rows: int = 1024):
         self.path = path
+        self.spill = spill
         self._lock = threading.RLock()
-        self._vecs: Dict[str, np.ndarray] = {}
+        self._vecs = (_PagedVectorMap(spill, page_rows)
+                      if spill is not None
+                      else {})  # type: Dict[str, np.ndarray]
         # column name -> {"model", "keys" (row order), "signature"}
         self._columns: Dict[str, Dict] = {}
         if path is not None and os.path.exists(path + ".json"):
             self.load(path)
+
+    def spill_stats(self) -> Optional[Dict[str, int]]:
+        return self.spill.stats() if self.spill is not None else None
 
     # -- access --------------------------------------------------------
     def __len__(self) -> int:

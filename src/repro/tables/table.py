@@ -42,6 +42,22 @@ def fl_is_audio(f: Any) -> bool:
 _COLUMN_TYPES = ("int", "float", "str", "bool", "file")
 
 
+def _typed_column(values, t: str) -> np.ndarray:
+    """Convert ``values`` to the canonical numpy representation of type
+    ``t`` (int64 / float64 / bool, object array for str/file)."""
+    if t == "int":
+        return np.asarray(values, dtype=np.int64)
+    if t == "float":
+        return np.asarray(values, dtype=np.float64)
+    if t == "bool":
+        return np.asarray(values, dtype=bool)
+    vals = list(values)
+    arr = np.empty(len(vals), dtype=object)
+    for i, x in enumerate(vals):   # keeps tuple cells 1-D
+        arr[i] = x
+    return arr
+
+
 def _infer_type(values) -> str:
     for v in values:
         if v is None:
@@ -74,20 +90,28 @@ class Table:
         self.types: Dict[str, str] = {}
         for k, v in columns.items():
             t = (types or {}).get(k) or _infer_type(v)
-            assert t in _COLUMN_TYPES, t
+            if t not in _COLUMN_TYPES:
+                raise ValueError(
+                    f"column {k!r}: unknown type {t!r}"
+                    f" (expected one of {_COLUMN_TYPES})")
             self.types[k] = t
-            if t == "int":
-                self._cols[k] = np.asarray(v, dtype=np.int64)
-            elif t == "float":
-                self._cols[k] = np.asarray(v, dtype=np.float64)
-            elif t == "bool":
-                self._cols[k] = np.asarray(v, dtype=bool)
-            else:
-                vals = list(v)
-                arr = np.empty(len(vals), dtype=object)
-                for i, x in enumerate(vals):   # keeps tuple cells 1-D
-                    arr[i] = x
-                self._cols[k] = arr
+            self._cols[k] = _typed_column(v, t)
+
+    @classmethod
+    def _from_arrays(cls, cols: Dict[str, np.ndarray],
+                     types: Dict[str, str], name: str = "") -> "Table":
+        """Adopt already-typed arrays without copying.
+
+        Trusted internal constructor: callers guarantee the arrays are in
+        the canonical representation (`_typed_column` output) and equal
+        length.  `ChunkedTable.morsel` relies on this to hand the
+        executor zero-copy views of a chunk's columns.
+        """
+        t = cls.__new__(Table)
+        t.name = name
+        t._cols = dict(cols)
+        t.types = dict(types)
+        return t
 
     # ---- basics ----
     @property
@@ -106,6 +130,15 @@ class Table:
 
     def __contains__(self, name: str) -> bool:
         return name in self._cols
+
+    def gather(self, name: str, rows) -> np.ndarray:
+        """Values of column ``name`` at row indices ``rows``.
+
+        On a monolithic table this is fancy indexing; `ChunkedTable`
+        overrides it to gather segment-wise, so expression evaluation
+        over a row subset never materializes the full column.
+        """
+        return self.column(name)[np.asarray(rows, dtype=np.int64)]
 
     def row(self, i: int) -> Dict[str, Any]:
         return {k: v[i] for k, v in self._cols.items()}

@@ -2,10 +2,14 @@
 
 A seeded randomized query corpus (filters × joins × aggregates × order
 × limits) is executed under every execution mode — eager, pipelined,
-partitioned (and partitioned over a pipelined client) — and the modes
-must agree:
+partitioned (and partitioned over a pipelined client) — on both storage
+backends — the monolithic numpy `Table` and the chunk-backed
+`ChunkedTable` — and the modes must agree:
 
   * identical result rows, always;
+  * across stores (same mode, chunks aligned with ``partition_rows``):
+    identical rows, credits, and `StatsStore` observations — the
+    storage refactor must be observationally invisible;
   * identical total credits billed on unbounded queries (no mode may
     silently buy more — or less — inference than another);
   * on LIMIT-bounded queries the partitioned mode may only ever spend
@@ -24,6 +28,7 @@ import pytest
 from repro.core import AisqlEngine, Catalog, ExecConfig, SemIndexConfig
 from repro.data import datasets as D
 from repro.inference.api import make_simulated_client
+from repro.tables.chunked import ChunkedTable
 from repro.tables.table import Table
 
 SEED = 20260731
@@ -37,11 +42,13 @@ MODES = {
     "partitioned-pipelined": (True, True),
 }
 
+STORES = ("monolithic", "chunked")
 
-def _catalog(seed=SEED):
+
+def _catalog(seed=SEED, store="monolithic", chunk_rows=48):
     rng = np.random.default_rng(seed)
     n = 120
-    t = Table({
+    t_cols = {
         "id": np.arange(n),
         "gid": np.arange(n) % 30,
         "val": rng.random(n),
@@ -49,11 +56,17 @@ def _catalog(seed=SEED):
         "text": [f"[t:{i}] document body {i}" for i in range(n)],
         "_truth": rng.random(n) < 0.45,
         "_difficulty": np.full(n, 0.05),
-    }, name="t")
-    u = Table({
+    }
+    u_cols = {
         "k": np.arange(30),
         "w": rng.random(30),
-    }, name="u")
+    }
+    if store == "chunked":
+        t = ChunkedTable(t_cols, name="t", chunk_rows=chunk_rows)
+        u = ChunkedTable(u_cols, name="u", chunk_rows=chunk_rows)
+    else:
+        t = Table(t_cols, name="t")
+        u = Table(u_cols, name="u")
     return Catalog({"t": t, "u": u})
 
 
@@ -108,7 +121,16 @@ def _run(cat, sql, *, pipelined, partitioned):
         partitioned=partitioned, partition_rows=48, chunk_rows=48,
         adaptive_reorder=False, pilot_rows=0))
     out = eng.sql(sql)
-    return out, eng.last_report
+    return out, eng.last_report, _observations(eng)
+
+
+def _observations(eng):
+    """StatsStore content minus wall-clock timing (never comparable)."""
+    out = {}
+    for key in eng.stats.keys():
+        d = eng.stats.get(key).to_dict()
+        out[key] = {k: v for k, v in d.items() if k != "seconds"}
+    return out
 
 
 def _canon_rows(table: Table):
@@ -119,27 +141,60 @@ def _canon_rows(table: Table):
 
 @pytest.mark.parametrize("sql", _corpus())
 def test_modes_agree_on_rows_and_credits(sql):
-    cat = _catalog()
-    results = {name: _run(cat, sql, pipelined=p, partitioned=q)
-               for name, (p, q) in MODES.items()}
-    base_out, base_rep = results["eager"]
+    cats = {store: _catalog(store=store) for store in STORES}
+    results = {(store, name): _run(cats[store], sql,
+                                   pipelined=p, partitioned=q)
+               for store in STORES for name, (p, q) in MODES.items()}
+    base_out, base_rep, _ = results[("monolithic", "eager")]
     base_rows = _canon_rows(base_out)
     bounded = "LIMIT" in sql
-    for name, (out, rep) in results.items():
+    for (store, name), (out, rep, _) in results.items():
         assert _canon_rows(out) == base_rows, \
-            f"{name} changed the result set for: {sql}"
+            f"{store}/{name} changed the result set for: {sql}"
         if bounded and "partitioned" in name:
             # early termination may only ever reduce spend
             assert rep.ai_credits <= base_rep.ai_credits + 1e-12, \
-                f"{name} overspent on: {sql}"
+                f"{store}/{name} overspent on: {sql}"
             assert rep.ai_calls <= base_rep.ai_calls, \
-                f"{name} issued more calls on: {sql}"
+                f"{store}/{name} issued more calls on: {sql}"
         else:
             assert rep.ai_credits == pytest.approx(
                 base_rep.ai_credits, abs=1e-12), \
-                f"{name} billed differently for: {sql}"
+                f"{store}/{name} billed differently for: {sql}"
             assert rep.ai_calls == base_rep.ai_calls, \
-                f"{name} call count diverged for: {sql}"
+                f"{store}/{name} call count diverged for: {sql}"
+    # chunked-vs-monolithic, same mode: chunks are aligned with
+    # partition_rows, so the storage backend must be observationally
+    # invisible — byte-identical credits, calls, and StatsStore content
+    for name in MODES:
+        _, rep_m, obs_m = results[("monolithic", name)]
+        _, rep_c, obs_c = results[("chunked", name)]
+        assert rep_c.ai_credits == pytest.approx(
+            rep_m.ai_credits, abs=1e-12), \
+            f"chunked store changed billing under {name} for: {sql}"
+        assert rep_c.ai_calls == rep_m.ai_calls, \
+            f"chunked store changed call count under {name} for: {sql}"
+        assert obs_c == obs_m, \
+            f"chunked store changed StatsStore content under {name}: {sql}"
+
+
+@pytest.mark.parametrize("sql", [q for q in _corpus()
+                                 if "LIMIT" not in q][:6])
+def test_chunk_misalignment_rows_identical(sql):
+    """Chunk boundaries that do NOT line up with ``partition_rows``
+    still return identical rows and — on unbounded queries — identical
+    credits: per-request pricing makes partition shape billing-neutral
+    when reordering and pilot sampling are off."""
+    cat_m = _catalog()
+    cat_c = _catalog(store="chunked", chunk_rows=37)
+    for name, (p, q) in MODES.items():
+        out_m, rep_m, _ = _run(cat_m, sql, pipelined=p, partitioned=q)
+        out_c, rep_c, _ = _run(cat_c, sql, pipelined=p, partitioned=q)
+        assert _canon_rows(out_c) == _canon_rows(out_m), \
+            f"misaligned chunks changed rows under {name} for: {sql}"
+        assert rep_c.ai_credits == pytest.approx(
+            rep_m.ai_credits, abs=1e-12), \
+            f"misaligned chunks changed billing under {name} for: {sql}"
 
 
 def test_corpus_is_meaningful():

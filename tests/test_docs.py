@@ -167,6 +167,46 @@ def test_documented_pilot_keys_match_runtime():
                                                   sorted(pilot.keys()))
 
 
+def test_storage_doc_exists_and_linked():
+    assert os.path.exists(os.path.join(DOCS, "storage.md"))
+    assert "docs/storage.md" in _read("README.md")
+    assert "storage.md" in _read("docs/architecture.md")
+    assert "storage.md" in _read("docs/serving.md")
+
+
+def test_documented_storage_knobs_exist_in_code():
+    """Every `Class.field` knob in storage.md's tables is a real
+    constructor parameter / dataclass field."""
+    import inspect
+    import sys as _sys
+    from repro.core import SemIndexConfig
+    from repro.tables.chunked import ChunkedTable
+    from repro.tables.spill import SpillManager
+    _sys.path.insert(0, os.path.join(REPO, "tools"))
+    from replay import TraceConfig
+    text = _read("docs/storage.md")
+    knobs = re.findall(r"\|\s*`([A-Za-z_]+)\.([A-Za-z_]+)`\s*\|", text)
+    assert knobs, "knob tables not found in storage.md"
+    classes = {
+        "ChunkedTable": set(
+            inspect.signature(ChunkedTable.__init__).parameters),
+        "SpillManager": set(
+            inspect.signature(SpillManager.__init__).parameters),
+        "SemIndexConfig": {f.name for f in
+                           dataclasses.fields(SemIndexConfig)},
+        "TraceConfig": {f.name for f in dataclasses.fields(TraceConfig)},
+    }
+    for cls_name, field in knobs:
+        assert field in classes[cls_name], \
+            f"{cls_name}.{field} documented but missing in code"
+    # every TraceConfig field is documented (the trace format is the
+    # replay harness's public contract)
+    documented = {f for c, f in knobs if c == "TraceConfig"}
+    assert documented == classes["TraceConfig"], \
+        f"TraceConfig fields missing from docs: " \
+        f"{classes['TraceConfig'] - documented}"
+
+
 def test_backend_doc_exists_and_linked():
     assert os.path.exists(os.path.join(DOCS, "backend-serving.md"))
     assert "docs/backend-serving.md" in _read("README.md")

@@ -1,0 +1,132 @@
+"""Workload-replay determinism (slow suite — run with ``--runslow``).
+
+Pins the `tools/replay.py` determinism contract:
+
+  * same trace seed ⇒ byte-identical per-tenant row digests, billing
+    and retry counters across two serial runs — with fault bursts on;
+  * per-tenant rows and billing identical across worker counts (1 vs 8)
+    on a tenant-salted, billing-pure, fault-free trace; total credits
+    identical across worker counts even unsalted;
+  * a tiny spill byte-budget forces eviction (``spill_events > 0``)
+    yet changes nothing observable: identical rows and billing.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+from replay import (TraceConfig, build_catalog, generate_trace,  # noqa: E402
+                    replay)
+
+pytestmark = pytest.mark.slow
+
+
+def _tenant_rows(rep):
+    return {t: o.rows_sha256 for t, o in rep.per_tenant.items()}
+
+
+def _tenant_billing(rep):
+    return {t: (o.rows_sha256, round(o.credits, 12), o.dispatched_calls)
+            for t, o in rep.per_tenant.items()}
+
+
+def test_same_seed_same_everything_serial():
+    """Two serial replays of one trace — fault bursts active — agree on
+    rows, billing AND retry counters (serial mode sees the same batch
+    sequence, so even the fault die lands identically)."""
+    cfg = TraceConfig(seed=11, sessions=60, tenants=4, rows=256,
+                      chunk_rows=64)
+    trace = generate_trace(cfg)
+    runs = [replay(trace, build_catalog(cfg), workers=1, seed=11,
+                   fault_rate=0.05, fault_burst_every=40,
+                   fault_burst_len=6)
+            for _ in range(2)]
+    a, b = runs
+    assert a.faults_injected > 0          # the burst process actually fired
+    assert _tenant_billing(a) == _tenant_billing(b)
+    assert a.failed_queries == b.failed_queries == 0
+    assert (a.retries, a.scheduler_retries, a.faults_injected,
+            a.timeouts_injected) == \
+           (b.retries, b.scheduler_retries, b.faults_injected,
+            b.timeouts_injected)
+    assert abs(a.total_credits - b.total_credits) < 1e-9
+
+
+def test_worker_count_invariance():
+    """1-worker and 8-worker replays of a tenant-salted billing-pure
+    trace agree on per-tenant rows and billing; an unsalted trace still
+    agrees on rows and on *total* credits (attribution of shared embed
+    requests is schedule-dependent by design)."""
+    cfg = TraceConfig(seed=5, sessions=80, tenants=4, rows=256,
+                      chunk_rows=64, tenant_salt=True, billing_pure=True)
+    trace = generate_trace(cfg)
+    w1 = replay(trace, build_catalog(cfg), workers=1, seed=5)
+    w8 = replay(trace, build_catalog(cfg), workers=8, seed=5)
+    assert _tenant_billing(w1) == _tenant_billing(w8)
+    assert abs(w1.total_credits - w8.total_credits) < 1e-9
+    assert w1.failed_queries == w8.failed_queries == 0
+
+    plain = TraceConfig(seed=5, sessions=80, tenants=4, rows=256,
+                        chunk_rows=64)
+    trace2 = generate_trace(plain)
+    p1 = replay(trace2, build_catalog(plain), workers=1, seed=5)
+    p8 = replay(trace2, build_catalog(plain), workers=8, seed=5)
+    assert _tenant_rows(p1) == _tenant_rows(p8)
+    assert abs(p1.total_credits - p8.total_credits) < 1e-9
+
+
+def test_spill_budget_is_observationally_invisible():
+    """A byte budget small enough to force constant chunk eviction must
+    not change a single result row or billed credit."""
+    cfg = TraceConfig(seed=11, sessions=60, tenants=4, rows=256,
+                      chunk_rows=64)
+    trace = generate_trace(cfg)
+    free = replay(trace, build_catalog(cfg), workers=2, seed=11)
+    tight = replay(trace, build_catalog(cfg, budget_bytes=4096),
+                   workers=2, seed=11)
+    assert tight.storage is not None
+    assert tight.storage["spill_events"] > 0
+    assert tight.storage["reload_events"] > 0
+    assert _tenant_rows(free) == _tenant_rows(tight)
+    assert abs(free.total_credits - tight.total_credits) < 1e-9
+    assert free.failed_queries == tight.failed_queries == 0
+
+
+def test_trace_generator_is_pure():
+    """generate_trace is a pure function of its config."""
+    cfg = TraceConfig(seed=42, sessions=50, tenants=6)
+    t1, t2 = generate_trace(cfg), generate_trace(cfg)
+    assert t1 == t2
+    # skew sanity: the trace exercises both kinds and shared templates
+    kinds = {e.kind for e in t1}
+    assert kinds == {"dashboard", "adhoc"}
+    assert any("shared" in e.sql for e in t1)
+    # distinct seeds diverge
+    assert generate_trace(TraceConfig(seed=43, sessions=50, tenants=6)) != t1
+
+
+def test_replay_report_shape():
+    """The report carries the headline serving metrics the bench gates
+    read: QPS, p95, cache-hit rates, storage counters."""
+    cfg = TraceConfig(seed=2, sessions=30, tenants=3, rows=256,
+                      chunk_rows=64)
+    trace = generate_trace(cfg)
+    rep = replay(trace, build_catalog(cfg), workers=4, seed=2)
+    assert rep.queries == len(trace)
+    assert rep.qps > 0 and rep.wall_s > 0
+    assert rep.latency_p95_s >= rep.latency_p50_s >= 0
+    assert 0.0 <= rep.dedup_hit_rate <= 1.0
+    assert 0.0 <= rep.cross_query_hit_rate <= rep.dedup_hit_rate + 1e-9
+    # Zipf-hot + shared templates must actually produce sharing
+    assert rep.cross_query_hit_rate > 0.1
+    assert rep.storage is not None and rep.storage["peak_bytes"] > 0
+    assert sum(o.queries for o in rep.per_tenant.values()) == rep.queries
+    assert abs(sum(o.credits for o in rep.per_tenant.values())
+               - rep.total_credits) < 1e-9
+    # conservation against the backends' own meter
+    assert rep.backend_credits is not None
+    assert abs(rep.total_credits - rep.backend_credits) < 1e-9
+    text = rep.render()
+    assert "qps" in text and "p95" in text and "storage" in text

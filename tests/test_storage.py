@@ -1,0 +1,244 @@
+"""Chunk-backed columnar store: observational equivalence + spill.
+
+Property tests (hypothesis, skipped cleanly when it is not installed)
+assert that `ChunkedTable` is observationally identical to the
+monolithic `Table` over random column types, chunk sizes, slices,
+filters, joins and group-bys — and that morsel views are genuinely
+zero-copy (`np.shares_memory` with the chunk's own arrays).
+
+Example-based tests cover the spill manager (byte budget, LRU
+eviction, transparent reload, counters) and the `Table.__init__`
+unknown-type regression (a `ValueError` naming the column, not a bare
+assert that vanishes under ``python -O``).
+"""
+import numpy as np
+import pytest
+
+from repro.tables.chunked import ChunkedTable
+from repro.tables.spill import SpillManager, array_bytes
+from repro.tables.table import FileRef, Table
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# random table generation
+# ---------------------------------------------------------------------------
+
+def _make_columns(rng: np.random.Generator, n_rows: int, col_types):
+    cols, types = {}, {}
+    for i, t in enumerate(col_types):
+        name = f"c{i}_{t}"
+        types[name] = t
+        if t == "int":
+            cols[name] = rng.integers(-5, 6, n_rows)
+        elif t == "float":
+            cols[name] = rng.random(n_rows)
+        elif t == "bool":
+            cols[name] = rng.random(n_rows) < 0.5
+        elif t == "file":
+            cols[name] = [FileRef(f"s3://b/{int(k)}.png", "image/png")
+                          for k in rng.integers(0, 4, n_rows)]
+        else:
+            cols[name] = [f"w{int(k)} body" for k in rng.integers(0, 7,
+                                                                  n_rows)]
+    return cols, types
+
+
+def _pair(seed: int, n_rows: int, chunk_rows: int, col_types,
+          budget=None):
+    rng = np.random.default_rng(seed)
+    cols, types = _make_columns(rng, n_rows, col_types)
+    mono = Table(cols, types, name="t")
+    spill = SpillManager(budget_bytes=budget)
+    chunked = ChunkedTable(cols, types, name="t",
+                           chunk_rows=chunk_rows, spill=spill)
+    return mono, chunked, rng
+
+
+def _rows_of(table: Table):
+    cols = sorted(table.column_names)
+    return [tuple(str(table.column(c)[i]) for c in cols)
+            for i in range(table.num_rows)]
+
+
+TYPE_ST = st.sampled_from(["int", "float", "str", "bool", "file"])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_rows=st.integers(1, 120),
+       chunk_rows=st.integers(1, 50),
+       col_types=st.lists(TYPE_ST, min_size=1, max_size=4))
+def test_gather_take_slice_equivalence(seed, n_rows, chunk_rows,
+                                       col_types):
+    mono, chunked, rng = _pair(seed, n_rows, chunk_rows, col_types)
+    assert chunked.num_rows == mono.num_rows
+    assert chunked.column_names == mono.column_names
+    assert chunked.types == mono.types
+    # full column assembly
+    for c in mono.column_names:
+        assert np.array_equal(chunked.column(c), mono.column(c))
+    # random gather: unsorted, with duplicates
+    idx = rng.integers(0, n_rows, size=int(rng.integers(0, 2 * n_rows)))
+    for c in mono.column_names:
+        assert np.array_equal(chunked.gather(c, idx), mono.gather(c, idx))
+    # take / head / row
+    assert _rows_of(chunked.take(idx)) == _rows_of(mono.take(idx))
+    k = int(rng.integers(0, n_rows + 2))
+    assert _rows_of(chunked.head(k)) == _rows_of(mono.head(k))
+    i = int(rng.integers(0, n_rows))
+    assert {k_: str(v) for k_, v in chunked.row(i).items()} == \
+        {k_: str(v) for k_, v in mono.row(i).items()}
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n_rows=st.integers(1, 100),
+       chunk_rows=st.integers(1, 40))
+def test_filter_join_groupby_equivalence(seed, n_rows, chunk_rows):
+    mono, chunked, rng = _pair(seed, n_rows, chunk_rows,
+                               ["int", "float", "str"])
+    key = chunked.column_names[0]          # the int column
+    # filter
+    mask = rng.random(n_rows) < 0.4
+    assert _rows_of(chunked.filter_mask(mask)) == \
+        _rows_of(mono.filter_mask(mask))
+    # group-by
+    g_c = {k: v.tolist() for k, v in chunked.group_indices(key).items()}
+    g_m = {k: v.tolist() for k, v in mono.group_indices(key).items()}
+    assert g_c == g_m
+    # hash join against a small dimension table
+    dim = Table({"k": np.arange(-5, 6), "lab": [f"L{i}" for i in range(11)]},
+                name="dim")
+    assert _rows_of(chunked.hash_join(dim, key, "k")) == \
+        _rows_of(mono.hash_join(dim, key, "k"))
+    # rename / prefixed / select stay equivalent (and are O(1) views:
+    # constructing one materializes nothing)
+    pc, pm = chunked.prefixed("t"), mono.prefixed("t")
+    assert pc.column_names == pm.column_names
+    assert pc.materializations == 0
+    assert _rows_of(pc) == _rows_of(pm)
+    sel = chunked.column_names[:2]
+    assert _rows_of(chunked.select(sel)) == _rows_of(mono.select(sel))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_rows=st.integers(1, 90),
+       chunk_rows=st.integers(1, 40),
+       col_types=st.lists(TYPE_ST, min_size=1, max_size=3))
+def test_morsels_are_zero_copy_views(seed, n_rows, chunk_rows, col_types):
+    _, chunked, _ = _pair(seed, n_rows, chunk_rows, col_types)
+    bounds = chunked.segment_bounds()
+    assert bounds[0][0] == 0 and bounds[-1][1] == n_rows
+    assert all(hi - lo <= chunk_rows for lo, hi in bounds)
+    for si, (lo, hi) in enumerate(bounds):
+        m = chunked.morsel(si)
+        assert m.num_rows == hi - lo
+        seg = chunked._segments[si].arrays()
+        for pub, internal in chunked._colmap.items():
+            assert np.shares_memory(m.column(pub), seg[internal]), \
+                f"morsel {si} copied column {pub}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_rows=st.integers(20, 100),
+       chunk_rows=st.integers(1, 16))
+def test_spilled_table_stays_equivalent(seed, n_rows, chunk_rows):
+    """A byte budget small enough to force eviction changes nothing
+    observable: gathers and filters reload segments transparently."""
+    mono, chunked, rng = _pair(seed, n_rows, chunk_rows,
+                               ["int", "str", "float"],
+                               budget=600)
+    sp = chunked.spill
+    assert sp.spill_events > 0, "budget too large to exercise spill"
+    idx = rng.integers(0, n_rows, size=n_rows)
+    for c in mono.column_names:
+        assert np.array_equal(chunked.gather(c, idx), mono.gather(c, idx))
+    assert sp.reload_events > 0
+    mask = rng.random(n_rows) < 0.5
+    assert _rows_of(chunked.filter_mask(mask)) == \
+        _rows_of(mono.filter_mask(mask))
+
+
+# ---------------------------------------------------------------------------
+# example-based: spill manager mechanics
+# ---------------------------------------------------------------------------
+
+def test_spill_manager_budget_and_counters(tmp_path):
+    sp = SpillManager(budget_bytes=3000, spill_dir=str(tmp_path))
+    cols = {"x": np.arange(1000), "s": [f"string number {i}" for i
+                                        in range(1000)]}
+    ct = ChunkedTable(cols, name="big", chunk_rows=100, spill=sp)
+    stats = sp.stats()
+    assert stats["spill_events"] > 0
+    assert stats["tracked_bytes"] <= 3000 + max(
+        s.nbytes for s in ct._segments)
+    assert stats["peak_bytes"] >= stats["tracked_bytes"]
+    # every row still reachable; reloads counted
+    assert np.array_equal(ct.column("x"), np.arange(1000))
+    assert sp.reload_events > 0
+    # spill files live under the requested directory
+    spilled = list(tmp_path.glob("seg*.npz"))
+    assert spilled, "no segment files written"
+
+
+def test_spill_untracked_by_default():
+    """Without a budget the manager only accounts — nothing is evicted
+    and nothing touches disk."""
+    ct = ChunkedTable({"x": np.arange(500)}, chunk_rows=64)
+    assert ct.spill.spill_events == 0
+    assert ct.spill.tracked_bytes > 0
+    assert ct.spill.peak_bytes >= ct.spill.tracked_bytes
+    assert all(s.resident for s in ct._segments)
+
+
+def test_wide_take_registers_with_same_manager():
+    sp = SpillManager()
+    ct = ChunkedTable({"x": np.arange(400)}, chunk_rows=50, spill=sp)
+    wide = ct.take(np.arange(399, -1, -1))
+    assert isinstance(wide, ChunkedTable)
+    assert wide.spill is sp
+    assert np.array_equal(wide.column("x"), np.arange(399, -1, -1))
+    narrow = ct.take(np.arange(10))
+    assert type(narrow) is Table
+
+
+def test_array_bytes_counts_object_payload():
+    fixed = np.arange(10, dtype=np.int64)
+    assert array_bytes(fixed) == fixed.nbytes
+    objs = np.empty(2, dtype=object)
+    objs[0], objs[1] = "abc", "defgh"
+    assert array_bytes(objs) == objs.nbytes + 8
+
+
+# ---------------------------------------------------------------------------
+# example-based: constructor validation (regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("factory", [Table, ChunkedTable])
+def test_unknown_column_type_raises_value_error(factory):
+    """`assert t in _COLUMN_TYPES` vanished under ``python -O``; it is
+    now a ValueError naming the offending column and type."""
+    with pytest.raises(ValueError) as exc:
+        factory({"good": [1], "payload": ["x"]},
+                types={"payload": "blob"})
+    msg = str(exc.value)
+    assert "'payload'" in msg and "'blob'" in msg
+
+
+def test_unknown_type_survives_optimized_mode():
+    import subprocess, sys, os
+    code = ("from repro.tables.table import Table\n"
+            "try:\n"
+            "    Table({'c': [1]}, types={'c': 'nope'})\n"
+            "except ValueError:\n"
+            "    print('OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-O", "-c", code],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.stdout.strip() == "OK", out.stderr

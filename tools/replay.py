@@ -1,0 +1,418 @@
+"""Deterministic workload-replay harness for the serving engine.
+
+Production-shaped load, reproducible to the byte: a seeded trace
+generator emits thousands of tenant *sessions* (each a short run of
+queries) with the skew the paper's deployment data describes —
+
+  * **Zipf-hot queries**: each tenant draws from a small hot template
+    pool with a Zipf(``zipf_a``) rank distribution, so a handful of
+    dashboards dominate;
+  * **shared subexpressions**: a global template pool is sampled by
+    every tenant (identical SQL text across tenants), feeding the
+    pipeline's cross-query/cross-tenant cache;
+  * **LIMIT-heavy dashboards**: a configurable fraction of sessions are
+    dashboard-shaped (ORDER BY … LIMIT k), exercising partitioned
+    early termination;
+  * **fault bursts**: replayed against a backend whose transient-fault
+    process clusters in attempt-time windows
+    (``SimulatedBackend.fault_burst_every/len``).
+
+`replay` drives a `ServingEngine` over the trace and distils sustained
+QPS, p50/p95 latency, dedup / cross-query cache-hit rates, per-tenant
+row digests + billing, retry counters and storage (spill) telemetry.
+
+Determinism contract (what `tests/test_replay.py` pins):
+
+  * result rows and per-tenant row digests are bit-identical for a
+    given trace seed — across repeat runs, worker counts, chunk sizes
+    and spill budgets (simulator results are content-keyed; retries
+    re-serve identical answers);
+  * *total* credits are identical across worker counts whenever the
+    cache never evicts (every unique request is dispatched — and billed
+    — exactly once, whatever the schedule);
+  * *per-tenant* billing is additionally identical across worker
+    counts when ``tenant_salt=True`` **and** ``billing_pure=True``:
+    salted prompts make dedup groups tenant-pure, and dropping the
+    AI_SIMILARITY shape removes column-text embed requests — shared
+    infrastructure whose cost lands on whichever tenant's query happens
+    to dispatch first (totals conserve; attribution is
+    schedule-dependent, as in any real shared-cache deployment).  The
+    replay executor disables pilot sampling, adaptive reordering and
+    partition lookahead, and the pipeline cache has no TTL, so no other
+    billing path is schedule-dependent;
+  * retry *counters* are only deterministic at ``workers=1`` — batch
+    composition under concurrency is schedule-dependent, so the fault
+    die meets different batches (results still agree).
+
+Trace-format details are documented in docs/storage.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import Catalog, ExecConfig
+from repro.core.serving import ServingConfig, ServingEngine
+from repro.inference.pipeline import PipelineConfig
+from repro.tables.chunked import ChunkedTable
+from repro.tables.spill import SpillManager
+from repro.tables.table import Table
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    """Knobs of the seeded trace generator (all derived state is a pure
+    function of ``seed``)."""
+    seed: int = 0
+    tenants: int = 8
+    sessions: int = 1000                 # tenant sessions in the trace
+    queries_per_session: Tuple[int, int] = (1, 3)   # inclusive range
+    zipf_a: float = 1.4                  # hot-template skew exponent
+    hot_pool: int = 10                   # per-tenant hot templates
+    shared_pool: int = 8                 # cross-tenant shared templates
+    shared_frac: float = 0.45            # P(draw from the shared pool)
+    dashboard_frac: float = 0.4          # LIMIT-heavy dashboard sessions
+    tenant_salt: bool = False            # salt prompts with the tenant
+    billing_pure: bool = False           # drop shared-embed (similarity) shapes
+    # catalog shape (build_catalog reads these)
+    rows: int = 2048                     # events table rows
+    chunk_rows: int = 256
+    users: int = 32                      # dimension-table rows
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    session: int
+    tenant: str
+    kind: str                            # "dashboard" | "adhoc"
+    sql: str
+
+
+_TOPICS = ("databases", "weather", "finance", "sports", "security",
+           "travel", "cooking", "music", "science", "politics",
+           "health", "gaming")
+
+
+def build_catalog(cfg: TraceConfig, *,
+                  budget_bytes: Optional[int] = None,
+                  chunked: bool = True) -> Catalog:
+    """The replay catalog: a chunk-backed ``events`` table (optionally
+    under a spill byte budget) plus a small ``users`` dimension."""
+    rng = np.random.default_rng(cfg.seed + 7)
+    n = cfg.rows
+    cols = {
+        "id": np.arange(n),
+        "gid": np.arange(n) % cfg.users,
+        "val": rng.random(n),
+        "cat": rng.choice(["a", "b", "c", "d"], n),
+        "text": [f"[e:{i}] event log about "
+                 f"{_TOPICS[i % len(_TOPICS)]} item {i}" for i in range(n)],
+        "_truth": rng.random(n) < 0.3,
+        "_difficulty": np.full(n, 0.05),
+    }
+    if chunked:
+        spill = SpillManager(budget_bytes=budget_bytes)
+        events: Table = ChunkedTable(cols, name="events",
+                                     chunk_rows=cfg.chunk_rows, spill=spill)
+    else:
+        events = Table(cols, name="events")
+    users = Table({"k": np.arange(cfg.users),
+                   "w": rng.random(cfg.users)}, name="users")
+    return Catalog({"events": events, "users": users})
+
+
+def _dashboard_templates(rng: np.random.Generator, topics: List[str]
+                         ) -> List[str]:
+    """LIMIT-heavy dashboard shapes; ``{salt}`` is filled per tenant.
+    Every template carries exactly one AI construct, so billing never
+    depends on a stats-informed predicate ordering (see the determinism
+    contract above)."""
+    out = []
+    for t in topics:
+        k = int(rng.choice([5, 10, 20]))
+        out.append(
+            "SELECT e.id, e.val FROM events AS e WHERE "
+            f"AI_FILTER(PROMPT('is this about {t}{{salt}}? {{{{0}}}}', "
+            f"e.text)) ORDER BY e.val DESC LIMIT {k}")
+    return out
+
+
+def _adhoc_templates(rng: np.random.Generator, topics: List[str],
+                     billing_pure: bool = False) -> List[str]:
+    out = []
+    shapes = (["filter", "agg", "join"] if billing_pure
+              else ["filter", "similarity", "agg", "join"])
+    for i, t in enumerate(topics):
+        shape = shapes[i % len(shapes)]
+        x = round(float(rng.uniform(0.3, 0.8)), 2)
+        thr = round(float(rng.uniform(0.3, 0.5)), 2)
+        if shape == "filter":
+            out.append(
+                "SELECT e.id, e.cat FROM events AS e WHERE "
+                f"e.val < {x} AND AI_FILTER(PROMPT('does this mention "
+                f"{t}{{salt}}? {{{{0}}}}', e.text))")
+        elif shape == "similarity":
+            out.append(
+                "SELECT e.id FROM events AS e WHERE "
+                f"AI_SIMILARITY(e.text, '{t} report{{salt}}') > {thr}")
+        elif shape == "agg":
+            out.append(
+                "SELECT e.cat, COUNT(*) FROM events AS e WHERE "
+                f"AI_FILTER(PROMPT('related to {t}{{salt}}? {{{{0}}}}', "
+                f"e.text)) GROUP BY e.cat")
+        else:
+            out.append(
+                "SELECT e.id, u.w FROM events AS e JOIN users AS u ON "
+                f"e.gid = u.k WHERE e.val < {x} AND "
+                f"AI_FILTER(PROMPT('about {t}{{salt}}? {{{{0}}}}', "
+                f"e.text))")
+    return out
+
+
+def _pools(cfg: TraceConfig) -> Tuple[Dict[str, Dict[str, List[str]]],
+                                      Dict[str, List[str]]]:
+    """(per-tenant pools, shared pool), each keyed dashboard/adhoc."""
+    shared_rng = np.random.default_rng([cfg.seed, 1])
+    n_topics = len(_TOPICS)
+    shared_topics = [f"{_TOPICS[i % n_topics]} (shared {i})"
+                     for i in range(cfg.shared_pool)]
+    shared = {
+        "dashboard": _dashboard_templates(shared_rng, shared_topics),
+        "adhoc": _adhoc_templates(shared_rng, shared_topics,
+                                  cfg.billing_pure),
+    }
+    tenants: Dict[str, Dict[str, List[str]]] = {}
+    for ti in range(cfg.tenants):
+        name = f"t{ti:02d}"
+        rng = np.random.default_rng([cfg.seed, 2, ti])
+        topics = [f"{_TOPICS[int(rng.integers(n_topics))]} (team {ti}.{i})"
+                  for i in range(cfg.hot_pool)]
+        tenants[name] = {
+            "dashboard": _dashboard_templates(rng, topics),
+            "adhoc": _adhoc_templates(rng, topics, cfg.billing_pure),
+        }
+    return tenants, shared
+
+
+def _zipf_rank(rng: np.random.Generator, a: float, n: int) -> int:
+    return min(int(rng.zipf(a)), n) - 1
+
+
+def generate_trace(cfg: TraceConfig) -> List[TraceEvent]:
+    """The replay trace: a pure function of ``cfg`` (seed included)."""
+    tenants, shared = _pools(cfg)
+    rng = np.random.default_rng([cfg.seed, 3])
+    lo, hi = cfg.queries_per_session
+    events: List[TraceEvent] = []
+    for s in range(cfg.sessions):
+        tenant = f"t{int(rng.integers(cfg.tenants)):02d}"
+        salt = f" [{tenant}]" if cfg.tenant_salt else ""
+        kind = ("dashboard" if rng.random() < cfg.dashboard_frac
+                else "adhoc")
+        for _ in range(int(rng.integers(lo, hi + 1))):
+            pool = (shared if rng.random() < cfg.shared_frac
+                    else tenants[tenant])[kind]
+            sql = pool[_zipf_rank(rng, cfg.zipf_a, len(pool))]
+            events.append(TraceEvent(
+                session=s, tenant=tenant, kind=kind,
+                sql=sql.format(salt=salt)))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TenantOutcome:
+    """One tenant's deterministic digest of a replay run."""
+    queries: int
+    failed: int
+    rows_sha256: str                 # digest over per-query canonical rows
+    credits: float
+    dispatched_calls: int
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    queries: int
+    sessions: int
+    tenants: int
+    wall_s: float
+    qps: float                       # completed queries / wall second
+    latency_p50_s: float
+    latency_p95_s: float
+    queue_p95_s: float
+    total_credits: float
+    backend_credits: Optional[float]
+    submitted_requests: int
+    dispatched_requests: int
+    dedup_hit_rate: float            # dedup+cache hits / submitted
+    cross_query_hit_rate: float      # cross-session hits / submitted
+    retries: int                     # pipeline batch re-dispatches
+    scheduler_retries: int
+    faults_injected: int
+    timeouts_injected: int
+    failed_queries: int
+    per_tenant: Dict[str, TenantOutcome]
+    storage: Optional[Dict[str, int]]   # aggregated spill counters
+
+    def render(self) -> str:
+        lines = [
+            f"-- replay: {self.queries} queries / {self.sessions} sessions"
+            f" / {self.tenants} tenants in {self.wall_s:.2f}s"
+            f" -> {self.qps:.1f} qps",
+            f"-- latency: p50 {self.latency_p50_s * 1e3:.1f}ms, "
+            f"p95 {self.latency_p95_s * 1e3:.1f}ms "
+            f"(queue p95 {self.queue_p95_s * 1e3:.1f}ms)",
+            f"-- cache: {self.dedup_hit_rate:.1%} dedup hits, "
+            f"{self.cross_query_hit_rate:.1%} cross-query "
+            f"({self.dispatched_requests}/{self.submitted_requests} "
+            f"dispatched)",
+            f"-- faults: {self.faults_injected} injected, "
+            f"{self.timeouts_injected} timeouts, {self.retries} pipeline "
+            f"retries, {self.scheduler_retries} scheduler retries, "
+            f"{self.failed_queries} failed queries",
+        ]
+        if self.storage is not None:
+            s = self.storage
+            lines.append(
+                f"-- storage: peak {s['peak_bytes']} tracked bytes, "
+                f"{s['spill_events']} spills, {s['reload_events']} reloads")
+        return "\n".join(lines)
+
+
+def _digest_rows(h: "hashlib._Hash", table: Table) -> None:
+    cols = sorted(table.column_names)
+    rows = sorted(tuple(str(table.column(c)[i]) for c in cols)
+                  for i in range(table.num_rows))
+    h.update(repr(rows).encode())
+    h.update(b"\x1e")
+
+
+def replay(trace: List[TraceEvent], catalog: Catalog, *,
+           workers: int = 4, seed: int = 0,
+           fault_rate: float = 0.0, timeout_rate: float = 0.0,
+           fault_burst_every: int = 0, fault_burst_len: int = 0,
+           replicas: int = 1, partition_rows: int = 256,
+           max_retries: int = 6, cache_size: int = 1 << 17,
+           semindex=None) -> ReplayReport:
+    """Drive ``trace`` through a simulated `ServingEngine` and distil a
+    `ReplayReport`.  Executor and pipeline knobs are pinned to the
+    schedule-independent configuration (see the module docstring)."""
+    cfg = ServingConfig(
+        workers=workers,
+        pipeline=PipelineConfig(cache_size=cache_size, cache_ttl_s=None,
+                                max_retries=max_retries,
+                                retry_backoff_s=0.001,
+                                retry_backoff_cap_s=0.05),
+        executor=ExecConfig(partitioned=True,
+                            partition_rows=partition_rows,
+                            partition_lookahead=1,
+                            adaptive_reorder=False, pilot_rows=0))
+    eng = ServingEngine.simulated(
+        catalog, seed=seed, fault_rate=fault_rate,
+        timeout_rate=timeout_rate, fault_burst_every=fault_burst_every,
+        fault_burst_len=fault_burst_len, replicas=replicas, cfg=cfg,
+        semindex=semindex)
+    try:
+        t0 = time.perf_counter()
+        tickets = [(ev, eng.submit(ev.tenant, ev.sql)) for ev in trace]
+        eng.drain()
+        wall = time.perf_counter() - t0
+        digests = {}
+        failed_by_tenant: Dict[str, int] = {}
+        for ev, ticket in tickets:
+            h = digests.get(ev.tenant)
+            if h is None:
+                h = digests[ev.tenant] = hashlib.sha256()
+            err = ticket.exception()
+            if err is not None:
+                failed_by_tenant[ev.tenant] = \
+                    failed_by_tenant.get(ev.tenant, 0) + 1
+                h.update(f"ERR:{type(err).__name__}".encode())
+                h.update(b"\x1e")
+            else:
+                _digest_rows(h, ticket.result())
+        rep = eng.report()
+        faults = timeouts = 0
+        seen = set()
+        for reps in eng.scheduler._replicas.values():
+            for b in reps:
+                if id(b) not in seen and hasattr(b, "faults_injected"):
+                    faults += b.faults_injected
+                    timeouts += b.timeouts_injected
+                    seen.add(id(b))
+        per_tenant = {}
+        for name in sorted(digests):
+            tr = rep.tenants[name]
+            per_tenant[name] = TenantOutcome(
+                queries=tr.queries,
+                failed=failed_by_tenant.get(name, 0),
+                rows_sha256=digests[name].hexdigest(),
+                credits=tr.credits_spent,
+                dispatched_calls=tr.dispatched_calls)
+        submitted = max(rep.submitted_requests, 1)
+        return ReplayReport(
+            queries=len(trace),
+            sessions=len({ev.session for ev in trace}),
+            tenants=len(digests),
+            wall_s=wall,
+            qps=len(trace) / wall if wall > 0 else 0.0,
+            latency_p50_s=rep.latency_p50_s,
+            latency_p95_s=rep.latency_p95_s,
+            queue_p95_s=rep.queue_wait_p95_s,
+            total_credits=rep.total_credits,
+            backend_credits=rep.backend_credits,
+            submitted_requests=rep.submitted_requests,
+            dispatched_requests=rep.dispatched_requests,
+            dedup_hit_rate=rep.dedup_hits / submitted,
+            cross_query_hit_rate=rep.cross_query_hits / submitted,
+            retries=rep.retries,
+            scheduler_retries=rep.scheduler_retries,
+            faults_injected=faults,
+            timeouts_injected=timeouts,
+            failed_queries=sum(failed_by_tenant.values()),
+            per_tenant=per_tenant,
+            storage=rep.storage)
+    finally:
+        eng.close()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sessions", type=int, default=1000)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--rows", type=int, default=2048)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--fault-rate", type=float, default=0.0)
+    ap.add_argument("--burst-every", type=int, default=0)
+    ap.add_argument("--burst-len", type=int, default=0)
+    ap.add_argument("--budget-bytes", type=int, default=None)
+    args = ap.parse_args(argv)
+    cfg = TraceConfig(seed=args.seed, sessions=args.sessions,
+                      tenants=args.tenants, rows=args.rows)
+    trace = generate_trace(cfg)
+    catalog = build_catalog(cfg, budget_bytes=args.budget_bytes)
+    rep = replay(trace, catalog, workers=args.workers, seed=args.seed,
+                 fault_rate=args.fault_rate,
+                 fault_burst_every=args.burst_every,
+                 fault_burst_len=args.burst_len)
+    print(rep.render())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
