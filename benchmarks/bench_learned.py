@@ -1,0 +1,185 @@
+"""Learned cost model v2: kNN prior transfer + plan memo gates.
+
+**Transfer workload.**  A stream of queries over
+`repro.data.datasets.skewed_articles`, each combining a *broad*
+headline predicate (true selectivity ~0.95) with a *narrow* summary
+predicate (~0.05) — but every query phrases both predicates with a
+**fresh paraphrase**, so their fingerprints are unseen on every single
+query.  The table is deliberately smaller than
+`ExecConfig.min_rows_for_pilot`: this is the regime where pilot
+sampling cannot pay for itself, so a cold-start engine has *nothing*
+to plan with and evaluates the (statically cheaper-looking) broad
+predicate first on every query.  The transfer engine shares the store
+and semantic index of a trained engine: each unseen paraphrase embeds
+next to an observed donor, borrows its selectivity/cost prior
+(`est_source == "transferred"`), and the optimizer orders narrow-first
+at compile time.
+
+Gates (identical result rows required):
+
+  * LLM calls:  cold / transfer >= 1.3
+  * credits:    cold / transfer >= 1.3
+
+**Plan memo.**  One query repeated three times on a fresh engine: run 1
+optimizes for real (cost races > 0), run 2 re-optimizes (the stats
+moved off the cold defaults: drift), run 3 must be a memo hit with
+**zero** optimizer cost races.
+
+Artifacts -> results/bench_learned.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import fmt_table, model_clock, save_result
+from repro.core import (AisqlEngine, Catalog, CostDefaults, ExecConfig,
+                        OptimizerConfig, StatsStore)
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+from repro.semindex import SemanticIndexManager, SemIndexConfig
+
+# Paraphrase families.  Ground truth in skewed_articles is column-scoped
+# (`_truth__headline` ~0.95, `_truth__summary` ~0.05), so paraphrases
+# over the same column are the *same* predicate with a different prompt:
+# identical result rows, distinct fingerprints.  Within a family the
+# templates share content words (word-bag embeddings land close); across
+# families the vocabularies are disjoint.
+BROAD_TRAIN = [
+    "is this headline about newsworthy current events? {0}",
+    "does this headline cover newsworthy current events? {0}",
+]
+NARROW_TRAIN = [
+    "does this summary cover database systems research in depth? {0}",
+    "is this summary about in-depth database systems research? {0}",
+]
+BROAD_PARAPHRASES = [
+    "would an editor call this headline newsworthy current events? {0}",
+    "is the headline here reporting newsworthy current events? {0}",
+    "do current events make this headline newsworthy? {0}",
+    "is this a newsworthy current events headline? {0}",
+    "does the headline concern newsworthy current events? {0}",
+    "newsworthy current events in this headline? {0}",
+]
+NARROW_PARAPHRASES = [
+    "is this summary in-depth database systems research? {0}",
+    "does the summary treat database systems research in depth? {0}",
+    "in-depth research on database systems in this summary? {0}",
+    "is the summary an in-depth database systems research piece? {0}",
+    "does this summary go in depth on database systems research? {0}",
+    "summary covering database systems research in depth? {0}",
+]
+
+MEMO_SQL = ("SELECT * FROM articles AS a WHERE "
+            "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+            "AI_FILTER(PROMPT('does this text concern database "
+            "research? {0}', a.summary))")
+
+
+def _sql(broad: str, narrow: str) -> str:
+    return ("SELECT * FROM articles AS a WHERE "
+            f"AI_FILTER(PROMPT('{broad}', a.headline)) AND "
+            f"AI_FILTER(PROMPT('{narrow}', a.summary))")
+
+
+def _engine(n, client, *, store, semindex=None, seed=0):
+    defaults = dataclasses.replace(CostDefaults(), transfer_min_sim=0.25)
+    return AisqlEngine(
+        Catalog({"articles": D.skewed_articles(n, seed=seed)}),
+        client,
+        optimizer=OptimizerConfig(cost_defaults=defaults),
+        stats=store, semindex=semindex)
+
+
+def run_transfer(n: int = 160, queries: int = 6, seed: int = 0):
+    """Cold-start vs kNN-transfer engine on paraphrased-unseen queries."""
+    workload = [_sql(BROAD_PARAPHRASES[i], NARROW_PARAPHRASES[i])
+                for i in range(queries)]
+
+    # -- train: observe the donor predicates once -----------------------
+    store = StatsStore()
+    semindex = SemanticIndexManager(SemIndexConfig(impl="reference"))
+    trainer = _engine(n, make_simulated_client(pipelined=True),
+                      store=store, semindex=semindex, seed=seed)
+    for b, nr in zip(BROAD_TRAIN, NARROW_TRAIN):
+        trainer.sql(_sql(b, nr))
+
+    def replay(name, store, semindex):
+        client = make_simulated_client(pipelined=True)
+        eng = _engine(n, client, store=store, semindex=semindex, seed=seed)
+        ids, transferred, calls, credits = [], 0, 0, 0.0
+        for sql in workload:
+            ids.append(sorted(eng.sql(sql).column("a.id").tolist()))
+            rep = eng.last_report
+            calls += rep.ai_calls
+            credits += rep.ai_credits
+            transferred += sum(op.est_source == "transferred"
+                               for op in rep.operators)
+        return {"config": name, "rows_out": sum(len(i) for i in ids),
+                "llm_calls": calls, "credits": round(credits, 5),
+                "model_clock_s": round(model_clock(client), 3),
+                "transferred_ops": transferred}, ids
+
+    cold, cold_ids = replay("cold-start", StatsStore(), None)
+    warm, warm_ids = replay("knn-transfer", store, semindex)
+
+    identical = cold_ids == warm_ids
+    calls_x = cold["llm_calls"] / max(warm["llm_calls"], 1)
+    credits_x = cold["credits"] / max(warm["credits"], 1e-12)
+    for r, x_calls, x_cred in ((cold, 1.0, 1.0),
+                               (warm, calls_x, credits_x)):
+        r["speedup_calls"] = round(x_calls, 2)
+        r["speedup_credits"] = round(x_cred, 2)
+    return [cold, warm], identical, calls_x, credits_x
+
+
+def run_memo(n: int = 300, repeats: int = 3, seed: int = 0):
+    """Same query repeated: the final run must be a zero-race memo hit."""
+    eng = AisqlEngine(
+        Catalog({"articles": D.skewed_articles(n, seed=seed)}),
+        make_simulated_client(pipelined=True),
+        executor=ExecConfig(pilot_rows=0))
+    rows = []
+    for i in range(repeats):
+        eng.sql(MEMO_SQL)
+        memo = dict(eng.last_report.memo)
+        rows.append({"run": i + 1, **memo})
+    return rows
+
+
+def main():
+    rows, identical, calls_x, credits_x = run_transfer()
+    print("== kNN prior transfer vs cold start "
+          "(paraphrased-but-unseen predicates, pilot-free regime) ==")
+    print(fmt_table(rows, ["config", "rows_out", "llm_calls", "credits",
+                           "model_clock_s", "transferred_ops",
+                           "speedup_calls", "speedup_credits"]))
+    print(f"identical result rows across engines: {identical}")
+    assert identical, "transferred priors must not change the result set"
+    assert rows[1]["transferred_ops"] > 0, \
+        "transfer engine never used a transferred prior"
+    assert calls_x >= 1.3, \
+        f"transfer must save >=1.3x LLM calls (got {calls_x:.2f}x)"
+    assert credits_x >= 1.3, \
+        f"transfer must save >=1.3x credits (got {credits_x:.2f}x)"
+
+    memo_rows = run_memo()
+    print("\n== plan memo (one query repeated) ==")
+    print(fmt_table(memo_rows, ["run", "hit", "cost_races", "entries"]))
+    final = memo_rows[-1]
+    assert final["hit"], "final repeat must hit the plan memo"
+    assert final["cost_races"] == 0, \
+        f"memo hit ran {final['cost_races']} cost races (expected 0)"
+    assert memo_rows[0]["cost_races"] > 0, \
+        "first run should have optimized for real"
+
+    save_result("bench_learned", {
+        "transfer": {"rows": rows, "identical_rows": identical,
+                     "speedup_calls": round(calls_x, 3),
+                     "speedup_credits": round(credits_x, 3)},
+        "memo": memo_rows,
+    })
+    return rows, memo_rows
+
+
+if __name__ == "__main__":
+    main()

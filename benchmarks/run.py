@@ -23,10 +23,13 @@ def main(argv=None) -> int:
                             bench_cascade, bench_concurrent,
                             bench_hybrid_join, bench_index,
                             bench_join_placement, bench_join_rewrite,
-                            bench_predicate_reorder, bench_streaming)
+                            bench_learned, bench_predicate_reorder,
+                            bench_streaming)
     benches = [
         ("Fig 9 predicate reordering", bench_predicate_reorder.main),
         ("adaptive re-optimization (learned stats)", bench_adaptive.main),
+        ("learned cost model v2 (kNN transfer + plan memo)",
+         bench_learned.main),
         ("streaming partition-parallel LIMIT + top-k", bench_streaming.main),
         ("semantic index: join blocking + kernel gate", bench_index.main),
         ("concurrent multi-tenant serving", bench_concurrent.main),

@@ -2,17 +2,20 @@
 from repro.core.engine import (AisqlEngine, OperatorReport,      # noqa: F401
                                QueryReport)
 from repro.core.stats import (PredObservation, StatsStore,       # noqa: F401
-                              predicate_fingerprint)
-from repro.core.cost import CostDefaults                         # noqa: F401
+                              predicate_fingerprint,
+                              predicate_prompt_text)
+from repro.core.cost import CostDefaults, TransferredPrior       # noqa: F401
 from repro.core.cascade import (CascadeConfig, SupgItCascade,    # noqa: F401
                                 CalibratedCascade)
-from repro.core.optimizer import Optimizer, OptimizerConfig      # noqa: F401
+from repro.core.optimizer import (Optimizer, OptimizerConfig,    # noqa: F401
+                                  PlanMemo, plan_fingerprint)
 from repro.core.executor import ExecConfig, Executor             # noqa: F401
 from repro.core.aggregate import AggConfig, HierarchicalAggregator  # noqa: F401
 from repro.core.cost import Catalog, CostModel                   # noqa: F401
 from repro.core.serving import (AdmissionError, QuerySession,    # noqa: F401
                                 QueryTicket, ServingConfig,
                                 ServingEngine, ServingReport,
-                                TenantPolicy, TenantReport)
+                                TenantPolicy, TenantReport,
+                                TenantStatsStore)
 from repro.semindex import (EmbeddingStore, IvfFlatIndex,        # noqa: F401
                             SemanticIndexManager, SemIndexConfig)

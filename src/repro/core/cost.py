@@ -30,10 +30,15 @@ import dataclasses
 import math
 from typing import Dict, Optional
 
+from typing import List, Tuple
+
+import numpy as np
+
 from repro.core import expr as E
 from repro.core import plan as P
 from repro.core.stats import (StatsStore, index_join_fingerprint,
-                              predicate_fingerprint)
+                              predicate_fingerprint, predicate_prompt_text,
+                              wilson_interval)
 from repro.inference.backend import CREDITS_PER_MTOK, EMBED, credits_for
 from repro.tables.table import Table
 
@@ -74,6 +79,38 @@ class CostDefaults:
     # -- learned-stats trust policy -----------------------------------
     stats_min_rows: int = 24           # below this, observations are ignored
     stats_prior_strength: float = 16.0  # pseudo-rows backing the static prior
+    # -- kNN prior transfer across predicates (cost model v2) ----------
+    # a cold fingerprint borrows selectivity / cost-per-row / delegation
+    # priors from the nearest *observed* predicates by prompt-embedding
+    # similarity; needs a semindex + embed-capable client attached
+    enable_stat_transfer: bool = True
+    transfer_k: int = 3                # donor neighbours consulted
+    transfer_min_sim: float = 0.35     # cosine floor for a donor to count
+    # pseudo-row mass a perfect-similarity neighbour contributes; always
+    # capped strictly below stats_min_rows, so a transferred prior can
+    # never outrank a direct observation of the same size
+    transfer_strength: float = 12.0
+
+
+@dataclasses.dataclass
+class TransferredPrior:
+    """A cold predicate's estimates borrowed from its nearest observed
+    neighbours by prompt-embedding similarity (cost model v2).
+
+    ``n_eff`` is the pseudo-row mass backing the prior — similarity-
+    scaled and hard-capped strictly below ``stats_min_rows``, so the
+    `CostModel` always blends it toward the static prior and a direct
+    observation of equal size always wins.  ``ci`` is a Wilson interval
+    at a further similarity-discounted sample size: visibly wider than
+    a same-``n`` direct observation's interval.
+    """
+    selectivity: float
+    cost_per_row: float
+    delegation_rate: float
+    cascade_rows: int                  # donors' total cascaded rows
+    n_eff: float                       # pseudo-rows (< stats_min_rows)
+    donors: List[Tuple[str, float]]    # (fingerprint, cosine similarity)
+    ci: Tuple[float, float]
 
 
 @dataclasses.dataclass
@@ -150,6 +187,10 @@ class CostModel:
         # configured (None otherwise): unlocks the index-assisted join
         # race and lets TopK estimates read real store coverage
         self.semindex = None
+        # the engine's client (set by `AisqlEngine`): lets the model
+        # embed predicate prompts for kNN prior transfer; without it —
+        # or without a semindex — transfer is disabled cleanly
+        self.embed_client = None
         self.defaults = defaults or CostDefaults()
         if ai_selectivity_default is not None:
             self.defaults = dataclasses.replace(
@@ -161,6 +202,9 @@ class CostModel:
         # (model, qualified column) -> content keys, for store-coverage
         # estimates (catalog tables are immutable, so keys never change)
         self._coverage_keys: Dict[tuple, list] = {}
+        # fingerprint -> (stats version, TransferredPrior|None): one
+        # kNN computation per cold predicate per store state
+        self._transfer_cache: Dict[str, tuple] = {}
 
     # ------------------------------------------------------------------
     def bind_alias(self, alias: str, table_name: str) -> None:
@@ -211,16 +255,101 @@ class CostModel:
         n0 = self.defaults.stats_prior_strength
         return (observed * n_obs + prior * n0) / (n_obs + n0)
 
+    # ------------------------------------------------------------------
+    # kNN prior transfer (cost model v2)
+    # ------------------------------------------------------------------
+
+    def transferred_prior(self, pred: E.Expr
+                          ) -> Optional[TransferredPrior]:
+        """Borrowed estimates for a *cold* predicate from the k nearest
+        observed predicates by prompt-embedding similarity.
+
+        Requires the full transfer stack — a `StatsStore` with observed
+        donors that registered prompt texts, a `SemanticIndexManager`
+        (embedding store + top-k kernel) and an embed-capable client;
+        with any piece missing (or ``enable_stat_transfer`` off) returns
+        None and every estimate falls back to the static defaults, so
+        transfer is an overlay, never a dependency.  Results are cached
+        per (fingerprint, store version): re-planning is a dict lookup
+        until new evidence lands.
+        """
+        d = self.defaults
+        if not (d.enable_stat_transfer and self.stats is not None
+                and self.semindex is not None
+                and self.embed_client is not None):
+            return None
+        if not isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify)):
+            return None
+        text = predicate_prompt_text(pred)
+        if not text:
+            return None
+        fp = predicate_fingerprint(pred)
+        version = getattr(self.stats, "version", 0)
+        cached = self._transfer_cache.get(fp)
+        if cached is not None and cached[0] == version:
+            return cached[1]
+        prior = self._compute_transfer(fp, text)
+        self._transfer_cache[fp] = (version, prior)
+        return prior
+
+    def _compute_transfer(self, fp: str, text: str
+                          ) -> Optional[TransferredPrior]:
+        d = self.defaults
+        donors = []
+        for key, obs in self.stats.items():
+            if key == fp or obs.evaluated < d.stats_min_rows:
+                continue
+            donor_text = self.stats.prompt_text(key)
+            if donor_text:
+                donors.append((key, donor_text, obs))
+        if not donors:
+            return None
+        vecs = self.semindex.embed_texts(
+            self.embed_client, [text] + [t for _, t, _ in donors])
+        k = min(d.transfer_k, len(donors))
+        sims, idx = self.semindex.topk_candidates(vecs[:1], vecs[1:], k)
+        pairs = [(float(s), int(i))
+                 for s, i in zip(np.ravel(sims)[:k], np.ravel(idx)[:k])
+                 if int(i) >= 0 and float(s) >= d.transfer_min_sim]
+        if not pairs:
+            return None
+        wsum = sum(s for s, _ in pairs)
+        sel = sum(s * donors[i][2].selectivity for s, i in pairs) / wsum
+        cpr = sum(s * donors[i][2].cost_per_row for s, i in pairs) / wsum
+        dele = sum(s * donors[i][2].delegation_rate
+                   for s, i in pairs) / wsum
+        top_sim = max(s for s, _ in pairs)
+        # pseudo-rows: similarity-scaled, hard-capped strictly below the
+        # direct-observation trust threshold
+        n_eff = max(1.0, min(d.stats_min_rows - 1.0,
+                             d.transfer_strength * top_sim))
+        # the CI discounts the sample a second time by similarity —
+        # transferred evidence at n rows must read wider than a direct
+        # observation at n rows
+        n_ci = max(1, int(n_eff * top_sim))
+        ci = wilson_interval(int(round(sel * n_ci)), n_ci)
+        return TransferredPrior(
+            selectivity=sel, cost_per_row=cpr, delegation_rate=dele,
+            cascade_rows=sum(donors[i][2].cascade_rows for _, i in pairs),
+            n_eff=n_eff, donors=[(donors[i][0], s) for s, i in pairs],
+            ci=(round(ci[0], 4), round(ci[1], 4)))
+
     def estimate_source(self, pred: E.Expr) -> str:
         """Provenance of this predicate's estimates: ``"observed"``
         (store is confident), ``"blended"`` (some evidence, shrunk toward
-        the prior) or ``"default"`` (static fallback only)."""
+        the prior), ``"transferred"`` (no direct evidence — priors
+        borrowed from the nearest observed predicates, or a cross-tenant
+        shared-pool view) or ``"default"`` (static fallback only)."""
         if not isinstance(pred, (E.AIFilter, E.AIScore, E.AIClassify,
                                  E.AISimilarity, E.AIEmbed)):
             return "default"
         obs = self.observed(pred)
         if obs is None or not obs.evaluated:
+            if self.transferred_prior(pred) is not None:
+                return "transferred"
             return "default"
+        if getattr(obs, "shared_prior", False):
+            return "transferred"
         if obs.evaluated >= self.defaults.stats_min_rows:
             return "observed"
         return "blended"
@@ -242,9 +371,15 @@ class CostModel:
             static = self._static_ai_cost_per_row(pred)
             obs = self.observed(pred)
             if obs is not None and obs.evaluated:
-                if obs.evaluated >= self.defaults.stats_min_rows:
+                if (obs.evaluated >= self.defaults.stats_min_rows
+                        and not getattr(obs, "shared_prior", False)):
                     return obs.cost_per_row
+                # shared-pool views and small samples stay prior-blended:
+                # borrowed evidence must read less confident than own
                 return self._blend(obs.cost_per_row, obs.evaluated, static)
+            tp = self.transferred_prior(pred)
+            if tp is not None:
+                return self._blend(tp.cost_per_row, tp.n_eff, static)
             return static
         # comparisons over AI_SIMILARITY (e.g. ``AI_SIMILARITY(a,b) >
         # 0.8``) cost their embedded sides per row, not a numpy compare
@@ -365,9 +500,14 @@ class CostModel:
         if isinstance(pred, (E.AIFilter, E.AIClassify)):
             obs = self.observed(pred)
             if obs is not None and obs.evaluated:
-                if obs.evaluated >= d.stats_min_rows:
+                if (obs.evaluated >= d.stats_min_rows
+                        and not getattr(obs, "shared_prior", False)):
                     return obs.selectivity
                 return self._blend(obs.selectivity, obs.evaluated,
+                                   d.ai_selectivity)
+            tp = self.transferred_prior(pred)
+            if tp is not None:
+                return self._blend(tp.selectivity, tp.n_eff,
                                    d.ai_selectivity)
             return d.ai_selectivity
         if isinstance(pred, E.InList):
@@ -413,11 +553,17 @@ class CostModel:
 
     def selectivity_interval(self, pred: E.Expr):
         """``(lo, hi)`` Wilson confidence interval on an AI predicate's
-        selectivity from observed evidence; ``(0.0, 1.0)`` when the store
-        has nothing (maximum uncertainty — the cold-start case)."""
-        obs = self.observed(pred) if isinstance(
-            pred, (E.AIFilter, E.AIClassify)) else None
+        selectivity: from observed evidence when the store has any, from
+        the (similarity-widened) transferred prior for a cold predicate
+        with usable neighbours, and ``(0.0, 1.0)`` — maximum uncertainty
+        — for a true cold start."""
+        if not isinstance(pred, (E.AIFilter, E.AIClassify)):
+            return 0.0, 1.0
+        obs = self.observed(pred)
         if obs is None or not obs.evaluated:
+            tp = self.transferred_prior(pred)
+            if tp is not None:
+                return tp.ci
             return 0.0, 1.0
         return obs.selectivity_ci()
 

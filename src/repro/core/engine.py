@@ -47,7 +47,8 @@ class OperatorReport:
     # uncertainty — when the store has no evidence (cold start)
     est_selectivity_ci: tuple = (0.0, 1.0)
     est_cost_per_row: float = 0.0
-    est_source: str = "default"         # "observed" | "blended" | "default"
+    # "observed" | "blended" | "transferred" | "default"
+    est_source: str = "default"
     actual_rows_in: Optional[int] = None
     actual_selectivity: Optional[float] = None
     actual_cost_per_row: Optional[float] = None
@@ -87,6 +88,9 @@ class QueryReport:
     # EMBED requests actually dispatched for them (store hits cost
     # none); None when no query operator touched the index subsystem
     semindex: Optional[Dict[str, Any]] = None
+    # plan-memo telemetry: hit flag, optimizer cost races actually run
+    # (zero on a hit), memo entry count; None when the memo is disabled
+    memo: Optional[Dict[str, Any]] = None
 
     def explain_analyze(self) -> str:
         """EXPLAIN ANALYZE-style rendering: the optimized plan followed
@@ -141,6 +145,12 @@ class QueryReport:
                 f"{s['verify_calls']} verification call(s), "
                 f"{s['embed_texts']} texts embedded "
                 f"({s['embed_llm_calls']} EMBED requests)")
+        if self.memo:
+            m = self.memo
+            lines.append(
+                f"-- plan-memo: {'hit' if m['hit'] else 'miss'}, "
+                f"{m['cost_races']} cost race(s) run, "
+                f"{m['entries']} plan(s) memoized")
         return "\n".join(lines)
 
 
@@ -203,6 +213,9 @@ class AisqlEngine:
                               defaults=opt_cfg.cost_defaults,
                               stats=self.stats)
         self.cost.semindex = self.semindex
+        # unlocks kNN prior transfer: with a semindex attached the cost
+        # model can embed predicate prompts through this client
+        self.cost.embed_client = client
         self.opt = Optimizer(catalog, cfg=opt_cfg, cost=self.cost,
                              llm_judge=llm_judge)
         self.exec = Executor(catalog, client, cfg=executor, cost=self.cost,
@@ -350,6 +363,11 @@ class AisqlEngine:
         if pipe and pipe.get("submitted"):
             self.stats.observe_pipeline(submitted=pipe["submitted"],
                                         dedup_hits=pipe["dedup_hits"])
+        memo_info = None
+        if self.opt.cfg.enable_plan_memo and self.opt.cfg.mode != "none":
+            memo_info = {"hit": self.opt.memo_hit,
+                         "cost_races": self.opt.cost_races,
+                         "entries": len(self.opt.memo)}
         self.last_report = QueryReport(
             sql=sql, plan=node.pretty(), optimizer_trace=list(self.opt.trace),
             est_llm_cost=est_cost, wall_seconds=dt,
@@ -359,7 +377,8 @@ class AisqlEngine:
             reoptimizations=list(self.exec.reoptimizations),
             pilot=self.exec.pilot_telemetry,
             partitions=self.exec.partition_telemetry,
-            semindex=self.exec.index_telemetry)
+            semindex=self.exec.index_telemetry,
+            memo=memo_info)
         if self.stats_path is not None:
             self.stats.save(self.stats_path)
         if self.semindex_path is not None and self.semindex is not None:

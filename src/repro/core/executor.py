@@ -78,7 +78,7 @@ from repro.core.aggregate import AggConfig, HierarchicalAggregator
 from repro.core.cascade import CascadeConfig, SupgItCascade
 from repro.core.cost import Catalog, CostModel
 from repro.core.stats import (StatsStore, index_join_fingerprint,
-                              predicate_fingerprint)
+                              predicate_fingerprint, predicate_prompt_text)
 from repro.inference.api import CortexClient
 from repro.inference.backend import CLASSIFY, COMPLETE, SCORE, Request
 from repro.inference.pipeline import ResultFuture
@@ -270,6 +270,10 @@ class ExecConfig:
     # nearly everything only adds its own calls on top of the oracle's
     cascade_bypass_delegation: float = 0.9
     cascade_bypass_min_rows: int = 64
+    # treat a cold predicate with a kNN-transferred prior (cost model v2)
+    # as warm for pilot purposes: skip its pilot sample and rank it with
+    # the transferred selectivity / cost instead of paying sample calls
+    pilot_trust_transfer: bool = True
     agg: AggConfig = dataclasses.field(default_factory=AggConfig)
     proxy_model: Optional[str] = None    # default: client.proxy_model
     classify_multi_label: bool = True    # semantic-join rewrite labels
@@ -489,7 +493,13 @@ class Executor:
     def _stats_for(self, pred: E.Expr) -> PredicateStats:
         key = self._pred_key(pred)
         if key not in self._fp_by_key:
-            self._fp_by_key[key] = predicate_fingerprint(pred)
+            fp = predicate_fingerprint(pred)
+            self._fp_by_key[key] = fp
+            text = predicate_prompt_text(pred)
+            if text:
+                # prompt registry feeds the kNN prior transfer: future
+                # cold predicates find this one as an embedding neighbour
+                self.stats.register_prompt(fp, text)
         return self.pred_stats.setdefault(key, PredicateStats())
 
     def _filter_model(self, pred: E.AIFilter) -> str:
@@ -547,6 +557,16 @@ class Executor:
         cold = [p for p in ai_preds
                 if not self.stats.confident(
                     predicate_fingerprint(p), min_rows=min_rows)]
+        transferred: List[E.Expr] = []
+        if cfg.pilot_trust_transfer and cold:
+            # cost model v2: a cold predicate whose kNN-transferred prior
+            # is live already has a usable selectivity/cost estimate —
+            # rank with that instead of buying pilot sample calls
+            transferred = [p for p in cold
+                           if self.cost.estimate_source(p) == "transferred"]
+            if transferred:
+                skip = {id(p) for p in transferred}
+                cold = [p for p in cold if id(p) not in skip]
         t0 = time.perf_counter()
         sampled: Dict[str, Dict[str, float]] = {}
         known: Dict[str, Dict[int, bool]] = {}
@@ -605,7 +625,8 @@ class Executor:
         entry = {
             "sampled_rows": n_sampled,
             "cold_predicates": len(cold),
-            "warm_predicates": len(ai_preds) - len(cold),
+            "warm_predicates": len(ai_preds) - len(cold) - len(transferred),
+            "transferred_predicates": len(transferred),
             "reordered": reordered,
             "seconds": time.perf_counter() - t0,
             "predicates": sampled,
@@ -615,7 +636,7 @@ class Executor:
         else:                      # several Filter nodes piloted: merge
             agg = self.pilot_telemetry
             for k in ("sampled_rows", "cold_predicates", "warm_predicates",
-                      "seconds"):
+                      "transferred_predicates", "seconds"):
                 agg[k] += entry[k]
             agg["reordered"] = agg["reordered"] or reordered
             agg["predicates"].update(sampled)
@@ -1369,15 +1390,34 @@ class Executor:
         return np.asarray(E.eval_expr(pred, table, rows), dtype=bool)
 
     # -- AI_FILTER with optional cascade --
-    def _cascade_bypass(self, pred: E.AIFilter) -> bool:
+    def _cascade_bypass(self, pred: E.AIFilter) -> Optional[str]:
         """Learned re-decision: skip the cascade for a predicate whose
         observed delegation rate shows the proxy escalates (nearly)
         everything — running it would only add proxy calls on top of the
-        oracle calls.  Requires enough evidence in the store."""
+        oracle calls.  Requires enough evidence in the store; when the
+        store is cold for this fingerprint, a kNN-transferred delegation
+        prior (cost model v2) can make the same call from the evidence
+        of similar predicates.  Returns the reoptimization event string
+        when the bypass applies, else None."""
+        cfg = self.cfg
         obs = self.stats.get(predicate_fingerprint(pred))
-        if obs is None or obs.cascade_rows < self.cfg.cascade_bypass_min_rows:
-            return False
-        return obs.delegation_rate >= self.cfg.cascade_bypass_delegation
+        if (obs is not None
+                and obs.cascade_rows >= cfg.cascade_bypass_min_rows):
+            if obs.delegation_rate >= cfg.cascade_bypass_delegation:
+                return (f"cascade-bypass: {self._pred_key(pred)} observed "
+                        f"delegation {obs.delegation_rate:.2f} >= "
+                        f"{cfg.cascade_bypass_delegation:.2f}, "
+                        "routing straight to the oracle")
+            return None
+        tp = self.cost.transferred_prior(pred)
+        if (tp is not None
+                and tp.cascade_rows >= cfg.cascade_bypass_min_rows
+                and tp.delegation_rate >= cfg.cascade_bypass_delegation):
+            return (f"cascade-bypass: {self._pred_key(pred)} transferred "
+                    f"delegation {tp.delegation_rate:.2f} >= "
+                    f"{cfg.cascade_bypass_delegation:.2f} (kNN prior), "
+                    "routing straight to the oracle")
+        return None
 
     def _eval_ai_filter(self, pred: E.AIFilter, table: Table,
                         rows: np.ndarray) -> np.ndarray:
@@ -1385,15 +1425,10 @@ class Executor:
         op = SemanticOp.from_filter(pred, table, rows, model)
         if not self.cfg.use_cascade:
             return op.submit(self.client).scores() >= 0.5
-        if self._cascade_bypass(pred):
-            key = self._pred_key(pred)
-            obs = self.stats.get(predicate_fingerprint(pred))
-            event = (f"cascade-bypass: {key} observed delegation "
-                     f"{obs.delegation_rate:.2f} >= "
-                     f"{self.cfg.cascade_bypass_delegation:.2f}, "
-                     "routing straight to the oracle")
-            if event not in self.reoptimizations:
-                self.reoptimizations.append(event)
+        bypass = self._cascade_bypass(pred)
+        if bypass is not None:
+            if bypass not in self.reoptimizations:
+                self.reoptimizations.append(bypass)
             return op.submit(self.client).scores() >= 0.5
         proxy = self.cfg.proxy_model or self.client.proxy_model
         cascade = self.cascades.setdefault(

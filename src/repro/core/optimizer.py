@@ -23,14 +23,16 @@ est_llm_cost``) rather than join cardinality:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import expr as E
 from repro.core import plan as P
 from repro.core.cost import Catalog, CostDefaults, CostModel
 from repro.core.plan import refs_aliases
+from repro.core.stats import predicate_fingerprint
 
 MODES = ("ai_aware", "always_pushdown", "always_pullup", "none")
 
@@ -74,6 +76,16 @@ class OptimizerConfig:
             in characters (labels are short phrases, not documents).
         min_pairs_for_rewrite: joins with fewer |L|×|R| candidate pairs
             than this are left alone (rewrite overhead won't pay off).
+        enable_plan_memo: memoize ``logical plan fingerprint -> chosen
+            physical plan`` so hot dashboard-style repeats skip every
+            optimizer cost race; a memo entry is invalidated when the
+            backing statistics drift past the thresholds below (the plan
+            was chosen with numbers that no longer hold).
+        memo_max_entries: LRU capacity of the plan memo.
+        memo_drift_sel: absolute selectivity drift that invalidates a
+            memo entry (any memoized AI predicate).
+        memo_drift_cost_rel: relative cost-per-row drift that
+            invalidates a memo entry.
         cost_defaults: every static fallback constant the `CostModel`
             uses when neither catalog statistics nor the learned
             `StatsStore` can answer (see `CostDefaults` for units).
@@ -90,6 +102,11 @@ class OptimizerConfig:
     label_ndv_max: int = 512            # label sets are small-cardinality
     label_avg_len_max: float = 120.0    # labels are short strings
     min_pairs_for_rewrite: int = 64     # tiny joins are left alone
+    # plan memo: repeated logical plans reuse the chosen physical plan
+    enable_plan_memo: bool = True
+    memo_max_entries: int = 128
+    memo_drift_sel: float = 0.15        # |Δ selectivity| that invalidates
+    memo_drift_cost_rel: float = 0.5    # relative Δ cost/row that invalidates
     # static fallback constants for the cost model (named, not inline)
     cost_defaults: CostDefaults = dataclasses.field(
         default_factory=CostDefaults)
@@ -101,6 +118,147 @@ class RewriteDecision:
     label_side: str = ""                # "left" | "right"
     label_col: str = ""
     reason: str = ""
+
+
+# ---------------------------------------------------------------------------
+# the plan memo: fingerprinted logical plan -> chosen physical plan
+# ---------------------------------------------------------------------------
+
+
+def plan_fingerprint(node: P.PlanNode) -> str:
+    """Deterministic identity of a *logical* plan: node kinds plus every
+    semantically-relevant attribute, with predicates keyed by their
+    `predicate_fingerprint` (alias-free, symmetric) — so the same query
+    resubmitted (dashboard repeats) maps to the same memo slot."""
+    parts: List[str] = []
+
+    def visit(n: P.PlanNode) -> None:
+        if isinstance(n, P.Scan):
+            parts.append(f"scan:{n.table}:{n.alias}")
+        elif isinstance(n, P.Filter):
+            preds = ";".join(sorted(predicate_fingerprint(p)
+                                    for p in n.predicates))
+            parts.append(f"filter:{preds}")
+        elif isinstance(n, P.Join):
+            res = ";".join(sorted(predicate_fingerprint(p)
+                                  for p in n.residual))
+            parts.append(f"join:{sorted(n.equi)}:{res}")
+        elif isinstance(n, (P.SemanticJoinClassify, P.SemanticJoinIndex)):
+            parts.append(f"{type(n).__name__}:{n.prompt.template}:"
+                         f"{n.model or ''}:{n.label_col}")
+        elif isinstance(n, (P.Sort, P.TopK)):
+            keys = ";".join(
+                f"{predicate_fingerprint(k.expr)}:{int(k.desc)}"
+                for k in n.keys)
+            limit = f":{n.n}" if isinstance(n, P.TopK) else ""
+            parts.append(f"{type(n).__name__}:{keys}{limit}")
+        elif isinstance(n, P.Limit):
+            parts.append(f"limit:{n.n}")
+        elif isinstance(n, P.Project):
+            items = ";".join(f"{predicate_fingerprint(it.expr)}:"
+                             f"{it.alias or ''}" for it in n.items)
+            parts.append(f"project:{items}")
+        elif isinstance(n, P.Aggregate):
+            items = ";".join(f"{predicate_fingerprint(it.expr)}:"
+                             f"{it.alias or ''}" for it in n.items)
+            parts.append(f"agg:{sorted(n.group_by)}:{items}")
+        else:
+            parts.append(type(n).__name__)
+        for c in n.children():
+            visit(c)
+        parts.append(")")
+
+    visit(node)
+    return "|".join(parts)
+
+
+@dataclasses.dataclass
+class MemoEntry:
+    """One memoized optimization: the chosen physical plan, the trace
+    that led to it, and a snapshot of the estimates it was chosen with
+    (the drift-invalidation baseline)."""
+    plan: P.PlanNode
+    trace: List[str]
+    # (predicate, selectivity, cost_per_row) at memoization time
+    snapshot: List[Tuple[E.Expr, float, float]]
+    hits: int = 0
+
+
+class PlanMemo:
+    """LRU map ``plan_fingerprint -> MemoEntry``.
+
+    A hit returns the previously-chosen physical plan without re-running
+    any optimizer cost race; entries self-invalidate when the backing
+    statistics have drifted past the configured thresholds since the
+    plan was chosen (the cached decision may no longer be the winner).
+    """
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max(int(max_entries), 1)
+        self._entries: "collections.OrderedDict[str, MemoEntry]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, key: str, cost: CostModel, *, drift_sel: float,
+               drift_cost_rel: float) -> Optional[MemoEntry]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if self._drifted(entry, cost, drift_sel, drift_cost_rel):
+            del self._entries[key]
+            self.invalidations += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        entry.hits += 1
+        self.hits += 1
+        return entry
+
+    @staticmethod
+    def _drifted(entry: MemoEntry, cost: CostModel, drift_sel: float,
+                 drift_cost_rel: float) -> bool:
+        for pred, sel, cpr in entry.snapshot:
+            if abs(cost.predicate_selectivity(pred) - sel) > drift_sel:
+                return True
+            now = cost.predicate_cost_per_row(pred)
+            if abs(now - cpr) > drift_cost_rel * max(cpr, 1e-12):
+                return True
+        return False
+
+    def store(self, key: str, entry: MemoEntry) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+def _ai_predicates_of(node: P.PlanNode) -> List[E.Expr]:
+    """Every AI predicate whose estimates the optimizer's decisions for
+    this plan depend on (the drift-snapshot population)."""
+    out: List[E.Expr] = []
+
+    def visit(n: P.PlanNode) -> None:
+        if isinstance(n, P.Filter):
+            out.extend(p for p in n.predicates if p.is_ai())
+        elif isinstance(n, P.Join):
+            out.extend(p for p in n.residual if p.is_ai())
+        elif isinstance(n, (P.Sort, P.TopK)):
+            out.extend(k.expr for k in n.keys
+                       if isinstance(k.expr, (E.AIScore, E.AISimilarity)))
+        for c in n.children():
+            visit(c)
+
+    visit(node)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -264,6 +422,12 @@ class Optimizer:
                                       defaults=self.cfg.cost_defaults)
         self.oracle = RewriteOracle(self.cost, self.cfg, llm_judge)
         self.trace: List[str] = []
+        self.memo = PlanMemo(self.cfg.memo_max_entries)
+        # per-optimize telemetry: whether the memo answered, and how
+        # many cost races (placement enumerations, rewrite races, top-k
+        # gates) the call actually ran — zero on a memo hit
+        self.memo_hit = False
+        self.cost_races = 0
 
     # ------------------------------------------------------------------
     def optimize(self, root: P.PlanNode) -> P.PlanNode:
@@ -275,9 +439,24 @@ class Optimizer:
         ``self.trace`` is reset and filled as a side effect.
         """
         self.trace = []
+        self.memo_hit = False
+        self.cost_races = 0
         self.cost.est_rows(root)        # bind aliases for stats lookups
         if self.cfg.mode == "none":
             return root
+        memo_key = None
+        if self.cfg.enable_plan_memo:
+            memo_key = plan_fingerprint(root)
+            entry = self.memo.lookup(
+                memo_key, self.cost, drift_sel=self.cfg.memo_drift_sel,
+                drift_cost_rel=self.cfg.memo_drift_cost_rel)
+            if entry is not None:
+                self.memo_hit = True
+                self.trace = list(entry.trace)
+                self.trace.append(
+                    f"plan-memo: hit ({entry.hits} reuse(s), "
+                    "0 cost races)")
+                return entry.plan
         node = root
         if self.cfg.enable_semantic_join_rewrite:
             node = self._rewrite_semantic_joins(node)
@@ -295,6 +474,12 @@ class Optimizer:
             node = self._reorder_filters(node)
         if self.cfg.enable_topk_fusion:
             node = self._fuse_topk(node)
+        if memo_key is not None:
+            snapshot = [(p, self.cost.predicate_selectivity(p),
+                         self.cost.predicate_cost_per_row(p))
+                        for p in _ai_predicates_of(root)]
+            self.memo.store(memo_key, MemoEntry(
+                plan=node, trace=list(self.trace), snapshot=snapshot))
         return node
 
     # ------------------------------------------------------------------
@@ -349,6 +534,8 @@ class Optimizer:
     def _reorder_filters(self, node: P.PlanNode) -> P.PlanNode:
         node = _map_children(node, self._reorder_filters)
         if isinstance(node, P.Filter):
+            if len(node.predicates) > 1:
+                self.cost_races += 1        # rank race over the conjuncts
             ordered = tuple(sorted(node.predicates, key=self.rank))
             if ordered != node.predicates:
                 self.trace.append(
@@ -397,6 +584,7 @@ class Optimizer:
 
     def _best_placement(self, join: P.Join, left, right, movable
                         ) -> List[bool]:
+        self.cost_races += 1
         best_cost = float("inf")
         best: List[bool] = [False] * len(movable)
         for choice in itertools.product([False, True], repeat=len(movable)):
@@ -441,6 +629,7 @@ class Optimizer:
         fused: P.PlanNode = P.TopK(sort.child, sort.keys, node.n)
         if project is not None:
             fused = P.Project(fused, project.items)
+        self.cost_races += 1
         c_orig = self.cost.est_llm_cost(node)
         c_new = self.cost.est_llm_cost(fused)
         self.trace.append(
@@ -495,6 +684,7 @@ class Optimizer:
             contenders = [("cross-join", node), ("classify", rewritten)]
             if indexed is not None:
                 contenders.append(("index", indexed))
+            self.cost_races += 1
             priced = [(self.cost.est_llm_cost(n), name, n)
                       for name, n in contenders]
             self.trace.append(

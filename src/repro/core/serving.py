@@ -48,7 +48,8 @@ from repro.core.cost import Catalog
 from repro.core.engine import AisqlEngine, QueryReport
 from repro.core.executor import ExecConfig
 from repro.core.optimizer import OptimizerConfig
-from repro.core.stats import StatsStore
+from repro.core.stats import PredObservation, StatsStore, \
+    predicate_fingerprint
 from repro.inference.api import CortexClient
 from repro.inference.pipeline import PipelineConfig, RequestPipeline
 from repro.inference.scheduler import Scheduler
@@ -161,6 +162,124 @@ class TenantMeter:
     def over_budget(self) -> bool:
         b = self.policy.credit_budget
         return b is not None and self.credits >= b
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant statistics sharing
+# ---------------------------------------------------------------------------
+
+
+class TenantStatsStore(StatsStore):
+    """Per-tenant statistics with cross-tenant *prior* sharing.
+
+    The ``"priors"`` stat-sharing mode gives each tenant its own store
+    (its ground truth: every observation its queries produce) while all
+    writes are additionally folded into one shared pool.  Reads prefer
+    the tenant's own evidence; when the tenant is cold for a fingerprint
+    the pool answers instead — as a **capped copy** (at most
+    ``prior_rows`` evidence rows, every counter scaled down
+    proportionally) flagged ``shared_prior``, which the cost model
+    surfaces as the ``"transferred"`` estimate tier and keeps blended
+    rather than trusted raw.  Isolation properties:
+
+      * another tenant's history can never outweigh this tenant's own
+        fresh observations (the cap bounds borrowed confidence);
+      * billing and per-tenant telemetry are untouched — sharing moves
+        selectivity/cost *priors*, never credits or results.
+    """
+
+    def __init__(self, shared: StatsStore, *, prior_rows: int = 48):
+        # set before super().__init__: the version property reads it
+        self.shared = shared
+        self._version = 0
+        super().__init__()
+        self.prior_rows = max(int(prior_rows), 1)
+
+    # -- version: own writes and *other tenants'* pool writes must both
+    # invalidate this tenant's transferred-prior cache
+    @property
+    def version(self) -> int:                       # type: ignore[override]
+        return self._version + self.shared.version
+
+    @version.setter
+    def version(self, value: int) -> None:
+        self._version = value - self.shared.version
+
+    # -- writes: own ground truth AND the shared pool -------------------
+    def observe_predicate(self, key, **kw):
+        self.shared.observe_predicate(key, **kw)
+        return super().observe_predicate(key, **kw)
+
+    def note_query(self, keys) -> None:
+        self.shared.note_query(keys)
+        super().note_query(keys)
+
+    def observe_cascade(self, key, **kw):
+        self.shared.observe_cascade(key, **kw)
+        return super().observe_cascade(key, **kw)
+
+    def observe_index(self, key, **kw):
+        self.shared.observe_index(key, **kw)
+        return super().observe_index(key, **kw)
+
+    def observe_pipeline(self, **kw):
+        self.shared.observe_pipeline(**kw)
+        return super().observe_pipeline(**kw)
+
+    def register_prompt(self, key: str, text: str) -> None:
+        self.shared.register_prompt(key, text)
+        super().register_prompt(key, text)
+
+    # -- reads: own evidence first, capped pool prior second ------------
+    def _shared_view(self, key: str) -> Optional[PredObservation]:
+        src = self.shared.get(key)
+        if src is None:
+            return None
+        view = PredObservation.from_dict(src.to_dict())
+        if view.evaluated > self.prior_rows:
+            f = self.prior_rows / view.evaluated
+            for fld in dataclasses.fields(view):
+                v = getattr(view, fld.name)
+                scaled = v * f
+                setattr(view, fld.name,
+                        int(round(scaled)) if isinstance(v, int)
+                        else scaled)
+        # dynamic attribute, NOT a dataclass field: merge()/to_dict()
+        # must never treat provenance as an additive counter
+        view.shared_prior = True
+        return view
+
+    def get(self, key: str) -> Optional[PredObservation]:
+        own = super().get(key)
+        if own is not None and own.evaluated > 0:
+            return own
+        return self._shared_view(key) or own
+
+    def for_pred(self, pred) -> Optional[PredObservation]:
+        return self.get(predicate_fingerprint(pred))
+
+    def confident(self, key: str, *, min_rows: int = 32) -> bool:
+        if super().confident(key, min_rows=min_rows):
+            return True
+        view = self._shared_view(key)
+        return view is not None and view.evaluated >= min_rows
+
+    def items(self):
+        merged: Dict[str, Optional[PredObservation]] = {
+            k: self._shared_view(k) for k, _ in self.shared.items()}
+        for k, o in super().items():
+            if o.evaluated > 0:
+                merged[k] = o
+        return iter([(k, o) for k, o in merged.items() if o is not None])
+
+    def prompt_text(self, key: str) -> Optional[str]:
+        return (super().prompt_text(key)
+                or self.shared.prompt_text(key))
+
+    def prompt_texts(self) -> Dict[str, str]:
+        out = self.shared.prompt_texts()
+        out.update(super().prompt_texts())
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +460,19 @@ class ServingConfig:
         default_factory=TenantPolicy)
     default_model: str = "oracle-70b"
     proxy_model: str = "proxy-8b"
+    # cross-tenant statistics sharing:
+    #   "full"   — one store; every session reads and writes the same
+    #              observations (the historical single-store behaviour);
+    #   "priors" — per-tenant ground-truth stores; every write also feeds
+    #              a shared pool whose evidence other tenants read back
+    #              as capped `shared_prior` copies, surfaced by the cost
+    #              model as the "transferred" estimate tier;
+    #   "none"   — fully private per-tenant stores, no sharing at all.
+    stat_sharing: str = "full"
+    # "priors" mode: max evidence rows a tenant may borrow from the pool
+    # per fingerprint — another tenant's long history can never outweigh
+    # this tenant's own fresh observations
+    shared_prior_rows: int = 48
 
 
 class ServingEngine:
@@ -356,7 +488,14 @@ class ServingEngine:
         self.catalog = catalog
         self.scheduler = scheduler
         self.cfg = cfg or ServingConfig()
+        if self.cfg.stat_sharing not in ("full", "priors", "none"):
+            raise ValueError(
+                f"ServingConfig.stat_sharing must be 'full', 'priors' or "
+                f"'none', got {self.cfg.stat_sharing!r}")
         self.stats = stats if stats is not None else StatsStore()
+        # "priors"/"none": lazily-built per-tenant stores ("full" mode
+        # hands every session self.stats directly)
+        self._tenant_stats: Dict[str, StatsStore] = {}
         if semindex is True:
             semindex = SemanticIndexManager()
         elif isinstance(semindex, SemIndexConfig):
@@ -419,8 +558,26 @@ class ServingEngine:
                 self.tenants[name] = meter
             return meter
 
+    def tenant_stats(self, tenant: str) -> StatsStore:
+        """The statistics store ``tenant``'s sessions plan with: the one
+        shared store ("full"), a `TenantStatsStore` over the shared pool
+        ("priors"), or a fully private store ("none")."""
+        if self.cfg.stat_sharing == "full":
+            return self.stats
+        with self._lock:
+            store = self._tenant_stats.get(tenant)
+            if store is None:
+                if self.cfg.stat_sharing == "priors":
+                    store = TenantStatsStore(
+                        self.stats, prior_rows=self.cfg.shared_prior_rows)
+                else:
+                    store = StatsStore()
+                self._tenant_stats[tenant] = store
+            return store
+
     def _checkout(self, tenant: str) -> QuerySession:
         meter = self.tenant(tenant)
+        stats = self.tenant_stats(tenant)
         with self._lock:
             pool = self._idle_sessions.setdefault(tenant, [])
             if pool:
@@ -428,7 +585,7 @@ class ServingEngine:
             owner = f"{tenant}#{next(self._session_ids)}"
             self.sessions_created += 1
         return QuerySession(owner, tenant, meter, self.catalog,
-                            self.scheduler, self.pipeline, self.stats,
+                            self.scheduler, self.pipeline, stats,
                             self.cfg, semindex=self.semindex)
 
     def _checkin(self, tenant: str, session: QuerySession) -> None:

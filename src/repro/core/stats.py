@@ -34,7 +34,8 @@ import json
 import math
 import os
 import threading
-from typing import Any, Dict, Optional, Tuple
+import warnings
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 from repro.core import expr as E
 
@@ -70,8 +71,10 @@ def _canon(e: E.Expr) -> str:
     if isinstance(e, E.FuncCall):
         return f"{e.name.upper()}({','.join(_canon(a) for a in e.args)})"
     if isinstance(e, E.AISimilarity):
-        return (f"ai_similarity({_canon(e.left)},{_canon(e.right)},"
-                f"{e.model or ''})")
+        # cosine similarity is symmetric: canonicalize the side order so
+        # AI_SIMILARITY(a, b) and AI_SIMILARITY(b, a) share an identity
+        lo, hi = sorted((_canon(e.left), _canon(e.right)))
+        return f"ai_similarity({lo},{hi},{e.model or ''})"
     if isinstance(e, E.AIEmbed):
         return f"ai_embed({_canon(e.arg)},{e.model or ''})"
     if isinstance(e, E.Prompt):
@@ -101,8 +104,10 @@ def predicate_fingerprint(pred: E.Expr) -> str:
                 f"{','.join(sorted(pred.labels))}|"
                 f"{','.join(_canon(a) for a in pred.text.args)}")
     if isinstance(pred, E.AISimilarity):
-        return (f"AI_SIMILARITY|{pred.model or ''}|"
-                f"{_canon(pred.left)}|{_canon(pred.right)}")
+        # symmetric operator, symmetric key: sort the canonical sides so
+        # learned stats never split across the two argument orders
+        lo, hi = sorted((_canon(pred.left), _canon(pred.right)))
+        return f"AI_SIMILARITY|{pred.model or ''}|{lo}|{hi}"
     if isinstance(pred, E.AIEmbed):
         return f"AI_EMBED|{pred.model or ''}|{_canon(pred.arg)}"
     return f"REL|{_canon(pred)}"
@@ -115,6 +120,23 @@ def index_join_fingerprint(template: str, model, left_arg: str,
     cost model a learned candidate rate for the next race."""
     return (f"INDEX_JOIN|{template}|{model or ''}|"
             f"{_leaf(left_arg)}|{_leaf(label_col)}")
+
+
+def predicate_prompt_text(pred: E.Expr) -> Optional[str]:
+    """Natural-language text embedding a predicate's *meaning* — the
+    kNN-transfer key (cost model v2).  The prompt template carries the
+    semantic content; the unaliased argument columns disambiguate
+    same-template predicates over different data.  None for operators
+    whose statistics are not transferable by meaning (similarity /
+    embed produce values, relational predicates are priced statically).
+    """
+    if isinstance(pred, (E.AIFilter, E.AIScore)):
+        args = " ".join(_canon(a) for a in pred.prompt.args)
+        return f"{pred.prompt.template} {args}".strip()
+    if isinstance(pred, E.AIClassify):
+        args = " ".join(_canon(a) for a in pred.text.args)
+        return f"{pred.text.template} {args}".strip()
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +261,12 @@ class StatsStore:
         self.path = path
         self._lock = threading.RLock()
         self._obs: Dict[str, PredObservation] = {}
+        # fingerprint -> natural-language prompt text (kNN-transfer key);
+        # only fingerprints with a registered text can donate priors
+        self._prompts: Dict[str, str] = {}
+        # bumped on every write — cheap cache-invalidation handle for
+        # derived state (the cost model's transferred-prior cache)
+        self.version = 0
         if path is not None and os.path.exists(path):
             self.load(path)
 
@@ -261,6 +289,29 @@ class StatsStore:
     def keys(self):
         return self._obs.keys()
 
+    def items(self) -> Iterator[Tuple[str, PredObservation]]:
+        """Snapshot of ``(fingerprint, observation)`` pairs (taken under
+        the lock, so concurrent writers never corrupt the iteration)."""
+        with self._lock:
+            return iter(list(self._obs.items()))
+
+    def prompt_text(self, key: str) -> Optional[str]:
+        return self._prompts.get(key)
+
+    def prompt_texts(self) -> Dict[str, str]:
+        with self._lock:
+            return dict(self._prompts)
+
+    def register_prompt(self, key: str, text: str) -> None:
+        """Associate a fingerprint with its natural-language prompt text
+        so it can donate (and receive) kNN-transferred priors."""
+        if not text:
+            return
+        with self._lock:
+            if self._prompts.get(key) != text:
+                self._prompts[key] = text
+                self.version += 1
+
     # -- recording -----------------------------------------------------
     def _entry(self, key: str) -> PredObservation:
         return self._obs.setdefault(key, PredObservation())
@@ -277,6 +328,7 @@ class StatsStore:
             o.seconds += float(seconds)
             if new_query:
                 o.queries += 1
+            self.version += 1
             return o
 
     def note_query(self, keys) -> None:
@@ -287,6 +339,7 @@ class StatsStore:
                 o = self._obs.get(key)
                 if o is not None:
                     o.queries += 1
+            self.version += 1
 
     def observe_cascade(self, key: str, *, rows: int, oracle_calls: int
                         ) -> PredObservation:
@@ -295,6 +348,7 @@ class StatsStore:
             o = self._entry(key)
             o.cascade_rows += int(rows)
             o.cascade_oracle += int(oracle_calls)
+            self.version += 1
             return o
 
     def observe_index(self, key: str, *, probes: int, candidates: int
@@ -306,6 +360,7 @@ class StatsStore:
             o = self._entry(key)
             o.index_probes += int(probes)
             o.index_candidates += int(candidates)
+            self.version += 1
             return o
 
     def observe_pipeline(self, *, submitted: int, dedup_hits: int
@@ -315,37 +370,100 @@ class StatsStore:
             o = self._entry(PIPELINE_KEY)
             o.dedup_submitted += int(submitted)
             o.dedup_hits += int(dedup_hits)
+            self.version += 1
             return o
 
     # -- persistence ---------------------------------------------------
     def save(self, path: Optional[str] = None) -> str:
+        """Atomically persist the store as JSON.
+
+        The payload is written to a same-directory temp file and moved
+        into place with ``os.replace`` — a crash mid-write (power loss,
+        kill -9) leaves either the previous complete file or the new
+        complete file, never a truncated one that would poison the next
+        engine's ``__init__``.
+        """
         path = path or self.path
         if path is None:
             raise ValueError("StatsStore.save: no path configured")
         with self._lock:
-            payload = {k: o.to_dict() for k, o in self._obs.items()}
+            payload = {
+                "format": 2,
+                "observations": {k: o.to_dict()
+                                 for k, o in self._obs.items()},
+                "prompts": dict(self._prompts),
+            }
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
         return path
 
+    @staticmethod
+    def _canonical_key(key: str) -> str:
+        """Map a legacy (pre-symmetry) fingerprint to its canonical form:
+        old stores may hold ``AI_SIMILARITY|model|b|a`` twins whose
+        evidence belongs under the sorted-side key."""
+        if key.startswith("AI_SIMILARITY|"):
+            parts = key.split("|")
+            if len(parts) == 4:       # templates with '|' are not ours
+                return "|".join(parts[:2] + sorted(parts[2:]))
+        return key
+
     def load(self, path: Optional[str] = None) -> None:
+        """Merge a persisted store into this one.
+
+        Corrupt or partially-written files (the pre-atomic-save failure
+        mode) warn and contribute nothing instead of raising — learned
+        statistics are an optimization, never a reason a query engine
+        fails to construct.  Legacy asymmetric ``AI_SIMILARITY`` twin
+        keys are folded into their canonical (sorted-side) key.
+        """
         path = path or self.path
-        with open(path) as f:
-            payload = json.load(f)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if not isinstance(payload, dict):
+                raise ValueError("stats payload is not an object")
+        except (json.JSONDecodeError, ValueError, OSError) as exc:
+            warnings.warn(
+                f"StatsStore: ignoring unreadable stats file {path!r} "
+                f"({exc}); starting from empty statistics", stacklevel=2)
+            return
+        if "observations" in payload:       # format 2
+            observations = payload.get("observations", {})
+            prompts = payload.get("prompts", {})
+        else:                               # legacy flat format
+            observations, prompts = payload, {}
         with self._lock:
-            for k, d in payload.items():
-                obs = PredObservation.from_dict(d)
+            for k, d in observations.items():
+                try:
+                    obs = PredObservation.from_dict(d)
+                except (TypeError, AttributeError):
+                    warnings.warn(f"StatsStore: skipping malformed entry "
+                                  f"{k!r} in {path!r}", stacklevel=2)
+                    continue
+                k = self._canonical_key(k)
                 if k in self._obs:
                     self._obs[k].merge(obs)
                 else:
                     self._obs[k] = obs
+            for k, text in prompts.items():
+                self._prompts.setdefault(self._canonical_key(k), str(text))
+            self.version += 1
 
     def clear(self) -> None:
         with self._lock:
             self._obs.clear()
+            self._prompts.clear()
+            self.version += 1
 
     def snapshot(self) -> Dict[str, Dict[str, Any]]:
         with self._lock:

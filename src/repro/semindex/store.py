@@ -23,6 +23,8 @@ import hashlib
 import json
 import os
 import threading
+import warnings
+import zipfile
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -239,18 +241,47 @@ class EmbeddingStore:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
-        with open(path + ".json", "w") as f:
-            json.dump(meta, f, indent=1, sort_keys=True)
-        np.savez_compressed(path + ".npz", vectors=mat)
+        # temp-file + os.replace, like StatsStore.save: a crash mid-write
+        # leaves the previous complete sidecar/matrix pair, never a
+        # truncated file that poisons the next load.  The npz temp name
+        # must already end in ".npz" or numpy appends the suffix itself.
+        tmp_json = f"{path}.json.tmp.{os.getpid()}"
+        tmp_npz = f"{path}.tmp.{os.getpid()}.npz"
+        try:
+            with open(tmp_json, "w") as f:
+                json.dump(meta, f, indent=1, sort_keys=True)
+            np.savez_compressed(tmp_npz, vectors=mat)
+            os.replace(tmp_npz, path + ".npz")
+            os.replace(tmp_json, path + ".json")
+        finally:
+            for tmp in (tmp_json, tmp_npz):
+                if os.path.exists(tmp):
+                    os.remove(tmp)
         return path
 
     def load(self, path: Optional[str] = None) -> None:
+        """Merge a persisted store into this one.  Corrupt or partial
+        files (the pre-atomic-save failure mode) warn and contribute
+        nothing instead of raising — cached embeddings are recomputable,
+        never a reason the store fails to construct."""
         path = path or self.path
-        with open(path + ".json") as f:
-            meta = json.load(f)
-        mat = np.load(path + ".npz")["vectors"]
+        try:
+            with open(path + ".json") as f:
+                meta = json.load(f)
+            mat = np.load(path + ".npz")["vectors"]
+            keys = meta["keys"]
+            if len(keys) != len(mat):
+                raise ValueError(
+                    f"sidecar lists {len(keys)} keys but matrix has "
+                    f"{len(mat)} rows")
+        except (json.JSONDecodeError, ValueError, KeyError, OSError,
+                zipfile.BadZipFile) as exc:
+            warnings.warn(
+                f"EmbeddingStore: ignoring unreadable store at {path!r} "
+                f"({exc}); starting from an empty cache", stacklevel=2)
+            return
         with self._lock:
-            for i, k in enumerate(meta["keys"]):
+            for i, k in enumerate(keys):
                 self._vecs.setdefault(k, mat[i].astype(np.float32))
             for col, entry in meta.get("columns", {}).items():
                 self._columns.setdefault(col, entry)

@@ -225,3 +225,34 @@ def test_documented_backend_knobs_exist_in_code():
     params = set(inspect.signature(JaxInferenceEngine.__init__).parameters)
     unknown = set(knobs) - params
     assert not unknown, f"documented but not a constructor param: {unknown}"
+
+
+def test_learned_optimizer_doc_exists_and_linked():
+    assert os.path.exists(os.path.join(DOCS, "learned-optimizer.md"))
+    assert "docs/learned-optimizer.md" in _read("README.md")
+    assert "learned-optimizer.md" in _read("docs/architecture.md")
+    assert "learned-optimizer.md" in _read("docs/query-reference.md")
+    assert "learned-optimizer.md" in _read("docs/serving.md")
+
+
+def test_documented_learned_knobs_exist_in_code():
+    """Every ``Class.field`` knob in learned-optimizer.md is a real
+    config attribute, and the core v2 switches are all documented."""
+    import dataclasses as dc
+    from repro.core import (CostDefaults, ExecConfig, OptimizerConfig,
+                            ServingConfig)
+    text = _read("docs/learned-optimizer.md")
+    knobs = re.findall(r"\|\s*`([A-Za-z_]+)\.([A-Za-z_]+)`\s*\|", text)
+    assert knobs, "knob tables not found in learned-optimizer.md"
+    classes = {"CostDefaults": CostDefaults, "ExecConfig": ExecConfig,
+               "OptimizerConfig": OptimizerConfig,
+               "ServingConfig": ServingConfig}
+    for cls_name, field in knobs:
+        names = {f.name for f in dc.fields(classes[cls_name])}
+        assert field in names, f"{cls_name}.{field} documented but missing"
+    documented = {f"{c}.{f}" for c, f in knobs}
+    for required in ("CostDefaults.enable_stat_transfer",
+                     "OptimizerConfig.enable_plan_memo",
+                     "ServingConfig.stat_sharing",
+                     "ExecConfig.pilot_trust_transfer"):
+        assert required in documented, f"{required} not documented"

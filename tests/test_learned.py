@@ -1,0 +1,452 @@
+"""Learned cost model v2: kNN prior transfer, plan memo, cross-tenant
+stat sharing, and the stats-layer crash-safety / fingerprint bugfixes."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AisqlEngine, Catalog, CostDefaults, CostModel,
+                        ExecConfig, OptimizerConfig, PlanMemo,
+                        PredObservation, ServingConfig, ServingEngine,
+                        StatsStore, TenantStatsStore, plan_fingerprint,
+                        predicate_fingerprint, predicate_prompt_text)
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core import sqlparse
+from repro.core.stats import wilson_interval
+from repro.data import datasets as D
+from repro.inference.api import make_simulated_client
+from repro.semindex import SemanticIndexManager, SemIndexConfig
+
+
+def _ai(template="p {0}", col="a.summary", model=None):
+    return E.AIFilter(E.Prompt(template, (E.Column(col),)), model=model)
+
+
+def _catalog(n=400, seed=0):
+    return Catalog({"articles": D.skewed_articles(n, seed=seed)})
+
+
+# ---------------------------------------------------------------------------
+# bugfix: crash-safe StatsStore persistence
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_stats_file_warns_and_starts_empty(tmp_path):
+    """A kill-9-truncated stats file must never poison engine startup."""
+    path = str(tmp_path / "stats.json")
+    store = StatsStore(path)
+    key = predicate_fingerprint(_ai())
+    store.observe_predicate(key, evaluated=80, passed=20)
+    store.save()
+    blob = open(path).read()
+    with open(path, "w") as f:
+        f.write(blob[:len(blob) // 2])        # mid-write truncation
+    with pytest.warns(UserWarning, match="unreadable"):
+        loaded = StatsStore(path)
+    assert len(loaded) == 0
+    # the engine constructs (and can re-save) over the same path
+    with pytest.warns(UserWarning, match="unreadable"):
+        eng = AisqlEngine(_catalog(50), make_simulated_client(),
+                          stats_path=path)
+    assert len(eng.stats) == 0
+
+
+def test_interrupted_save_preserves_previous_file(tmp_path, monkeypatch):
+    """A crash mid-save leaves the previous complete file, not a
+    truncated one: the write lands in a temp file, os.replace is the
+    only mutation of the real path."""
+    path = str(tmp_path / "stats.json")
+    key = predicate_fingerprint(_ai())
+    store = StatsStore(path)
+    store.observe_predicate(key, evaluated=80, passed=20)
+    store.save()
+    store.observe_predicate(key, evaluated=800, passed=200)
+
+    def boom(*a, **kw):
+        raise OSError("disk full mid-write")
+
+    monkeypatch.setattr("repro.core.stats.json.dump", boom)
+    with pytest.raises(OSError):
+        store.save()
+    monkeypatch.undo()
+    loaded = StatsStore(path)                 # previous file still whole
+    assert loaded.get(key).evaluated == 80
+    assert os.listdir(tmp_path) == ["stats.json"]   # no temp litter
+
+
+def test_malformed_entry_is_skipped_not_fatal(tmp_path):
+    path = str(tmp_path / "stats.json")
+    good = PredObservation(evaluated=10, passed=5).to_dict()
+    payload = {"format": 2,
+               "observations": {"GOOD": good, "BAD": "not-a-dict"},
+               "prompts": {}}
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    with pytest.warns(UserWarning, match="malformed"):
+        store = StatsStore(path)
+    assert store.get("GOOD").evaluated == 10
+    assert store.get("BAD") is None
+
+
+def test_embedding_store_sidecar_is_crash_safe(tmp_path, monkeypatch):
+    from repro.semindex.store import EmbeddingStore
+    path = str(tmp_path / "emb")
+    store = EmbeddingStore(path)
+    store.put("m", ["hello"], [np.ones(8, np.float32)])
+    store.save()
+    # corrupt sidecar: load warns and starts empty instead of raising
+    with open(path + ".json", "w") as f:
+        f.write('{"keys": [')
+    with pytest.warns(UserWarning, match="unreadable"):
+        reloaded = EmbeddingStore(path)
+    assert len(reloaded) == 0
+    # interrupted save never destroys the (restored) previous pair
+    store.save()
+    store.put("m", ["world"], [np.ones(8, np.float32)])
+
+    def boom(*a, **kw):
+        raise OSError("disk full mid-write")
+
+    monkeypatch.setattr("repro.semindex.store.json.dump", boom)
+    with pytest.raises(OSError):
+        store.save()
+    monkeypatch.undo()
+    survivor = EmbeddingStore(path)
+    assert len(survivor) == 1
+    assert sorted(os.listdir(tmp_path)) == ["emb.json", "emb.npz"]
+
+
+# ---------------------------------------------------------------------------
+# bugfix: symmetric AI_SIMILARITY fingerprints + legacy twin-key merge
+# ---------------------------------------------------------------------------
+
+
+def test_similarity_fingerprint_is_symmetric():
+    ab = E.AISimilarity(E.Column("t.x"), E.Column("t.y"))
+    ba = E.AISimilarity(E.Column("t.y"), E.Column("t.x"))
+    assert predicate_fingerprint(ab) == predicate_fingerprint(ba)
+    # wrapped in a comparison (the REL fingerprint path) too
+    cmp_ab = E.BinOp(">", ab, E.Literal(0.8))
+    cmp_ba = E.BinOp(">", ba, E.Literal(0.8))
+    assert predicate_fingerprint(cmp_ab) == predicate_fingerprint(cmp_ba)
+    # different models stay distinct
+    other = E.AISimilarity(E.Column("t.x"), E.Column("t.y"), model="e5")
+    assert predicate_fingerprint(ab) != predicate_fingerprint(other)
+
+
+def test_legacy_twin_similarity_keys_merge_on_load(tmp_path):
+    """Stores written before the symmetry fix hold split evidence under
+    both argument orders; load folds both into the canonical key."""
+    path = str(tmp_path / "stats.json")
+    legacy = {           # pre-format-2 flat payload with asymmetric twins
+        "AI_SIMILARITY|m|x|y": PredObservation(
+            evaluated=10, passed=4).to_dict(),
+        "AI_SIMILARITY|m|y|x": PredObservation(
+            evaluated=30, passed=12).to_dict(),
+    }
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+    store = StatsStore(path)
+    merged = store.get("AI_SIMILARITY|m|x|y")
+    assert merged is not None and merged.evaluated == 40
+    assert merged.passed == 16
+    assert store.get("AI_SIMILARITY|m|y|x") is None
+    assert len(store) == 1
+
+
+# ---------------------------------------------------------------------------
+# kNN prior transfer (cost model v2)
+# ---------------------------------------------------------------------------
+
+DONOR = _ai("does this text concern database systems research? {0}")
+COLD = _ai("is this article about research on database systems? {0}")
+
+
+def _transfer_cost(store=None, **default_overrides):
+    cat = _catalog()
+    defaults = dataclasses.replace(CostDefaults(), **default_overrides)
+    cost = CostModel(cat, stats=store if store is not None else StatsStore(),
+                     defaults=defaults)
+    cost.semindex = SemanticIndexManager(SemIndexConfig(impl="reference"))
+    cost.embed_client = make_simulated_client()
+    return cost
+
+
+def _observe_donor(store, pred=DONOR, *, evaluated=200, passed=10,
+                   credits=0.02):
+    fp = predicate_fingerprint(pred)
+    store.observe_predicate(fp, evaluated=evaluated, passed=passed,
+                            credits=credits)
+    store.register_prompt(fp, predicate_prompt_text(pred))
+
+
+def test_transferred_prior_from_nearest_donor():
+    store = StatsStore()
+    _observe_donor(store)
+    cost = _transfer_cost(store, transfer_min_sim=0.0)
+    tp = cost.transferred_prior(COLD)
+    assert tp is not None
+    assert predicate_fingerprint(DONOR) in [d for d, _ in tp.donors]
+    # estimates pulled toward the donor's observed numbers
+    assert tp.selectivity == pytest.approx(0.05, abs=1e-6)
+    assert tp.cost_per_row == pytest.approx(0.02 / 200, rel=1e-6)
+    assert cost.estimate_source(COLD) == "transferred"
+    # blended selectivity sits strictly between donor and static prior
+    sel = cost.predicate_selectivity(COLD)
+    assert tp.selectivity < sel < cost.defaults.ai_selectivity
+
+
+def test_transferred_never_outranks_direct_observation():
+    """Property: at equal n, a transferred prior is always visibly less
+    confident than a direct observation — smaller pseudo-row mass than
+    the trust threshold, a wider CI, and never the 'observed' tier."""
+    store = StatsStore()
+    _observe_donor(store)
+    cost = _transfer_cost(store, transfer_min_sim=0.0)
+    tp = cost.transferred_prior(COLD)
+    min_rows = cost.defaults.stats_min_rows
+    assert tp.n_eff < min_rows
+    assert not store.confident(predicate_fingerprint(COLD),
+                               min_rows=min_rows)
+    # CI is wider than a direct observation of the same pseudo-size
+    n = max(1, int(round(tp.n_eff)))
+    direct = wilson_interval(int(round(tp.selectivity * n)), n)
+    assert (tp.ci[1] - tp.ci[0]) >= (direct[1] - direct[0])
+    # once the predicate is observed directly, the observation wins raw
+    store.observe_predicate(predicate_fingerprint(COLD),
+                            evaluated=min_rows, passed=min_rows // 2,
+                            credits=0.01)
+    assert cost.estimate_source(COLD) == "observed"
+    assert cost.predicate_selectivity(COLD) == pytest.approx(0.5)
+
+
+def test_transfer_disabled_cleanly_without_stack():
+    store = StatsStore()
+    _observe_donor(store)
+    # no semindex / no embed client -> no transfer, default tier
+    bare = CostModel(_catalog(), stats=store)
+    assert bare.transferred_prior(COLD) is None
+    assert bare.estimate_source(COLD) == "default"
+    # stack present but no donors registered any prompt text
+    empty = StatsStore()
+    empty.observe_predicate(predicate_fingerprint(DONOR),
+                            evaluated=200, passed=10)
+    cost = _transfer_cost(empty, transfer_min_sim=0.0)
+    assert cost.transferred_prior(COLD) is None
+    assert cost.estimate_source(COLD) == "default"
+    # explicit kill switch
+    off = _transfer_cost(store, enable_stat_transfer=False)
+    assert off.transferred_prior(COLD) is None
+    # dissimilar-only donors fall below the cosine floor
+    far = StatsStore()
+    _observe_donor(far, _ai("zq xv qq ww ee rr {0}"))
+    high = _transfer_cost(far, transfer_min_sim=0.999)
+    assert high.transferred_prior(COLD) is None
+
+
+def test_transfer_cache_invalidated_by_store_writes():
+    store = StatsStore()
+    _observe_donor(store)
+    cost = _transfer_cost(store, transfer_min_sim=0.0)
+    tp1 = cost.transferred_prior(COLD)
+    assert cost.transferred_prior(COLD) is tp1          # cached
+    store.observe_predicate(predicate_fingerprint(DONOR),
+                            evaluated=1000, passed=900)
+    tp2 = cost.transferred_prior(COLD)
+    assert tp2 is not tp1 and tp2.selectivity > tp1.selectivity
+
+
+def test_transfer_skips_pilot_and_saves_calls():
+    """An engine whose store knows a paraphrased neighbour skips the
+    pilot for the unseen predicate (counted as transferred) and still
+    returns the same rows."""
+    sql = ("SELECT * FROM articles AS a WHERE "
+           "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+           "AI_FILTER(PROMPT('is this article about research on "
+           "database systems? {0}', a.summary))")
+
+    def run(store, semindex, trust):
+        eng = AisqlEngine(
+            _catalog(), make_simulated_client(pipelined=True),
+            executor=ExecConfig(min_rows_for_pilot=64,
+                                pilot_trust_transfer=trust),
+            optimizer=OptimizerConfig(cost_defaults=dataclasses.replace(
+                CostDefaults(), transfer_min_sim=0.0)),
+            stats=store, semindex=semindex)
+        out = eng.sql(sql)
+        return eng.last_report, sorted(out.column("a.id").tolist())
+
+    # train a different-but-related workload, then run the paraphrase
+    def trained():
+        store = StatsStore()
+        semindex = SemanticIndexManager(SemIndexConfig(impl="reference"))
+        eng = AisqlEngine(_catalog(), make_simulated_client(pipelined=True),
+                          executor=ExecConfig(min_rows_for_pilot=64),
+                          stats=store, semindex=semindex)
+        eng.sql("SELECT * FROM articles AS a WHERE "
+                "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+                "AI_FILTER(PROMPT('does this text concern database "
+                "systems research? {0}', a.summary))")
+        return store, semindex
+
+    store, semindex = trained()
+    warm_rep, warm_ids = run(store, semindex, trust=True)
+    assert warm_rep.pilot is not None
+    assert warm_rep.pilot["transferred_predicates"] >= 1
+    cold_rep, cold_ids = run(StatsStore(), None, trust=False)
+    assert warm_ids == cold_ids            # identical result rows
+    assert warm_rep.ai_calls < cold_rep.ai_calls
+
+
+# ---------------------------------------------------------------------------
+# plan memo
+# ---------------------------------------------------------------------------
+
+MEMO_SQL = ("SELECT * FROM articles AS a WHERE "
+            "AI_FILTER(PROMPT('broad? {0}', a.headline)) AND "
+            "AI_FILTER(PROMPT('does this text concern database "
+            "research? {0}', a.summary))")
+
+
+def test_plan_fingerprint_stable_and_discriminating():
+    node = P.build_plan(sqlparse.parse(MEMO_SQL))
+    again = P.build_plan(sqlparse.parse(MEMO_SQL))
+    assert plan_fingerprint(node) == plan_fingerprint(again)
+    other = P.build_plan(sqlparse.parse(
+        "SELECT * FROM articles AS a WHERE a.id < 10"))
+    assert plan_fingerprint(node) != plan_fingerprint(other)
+
+
+def test_plan_memo_hit_runs_zero_cost_races():
+    eng = AisqlEngine(_catalog(n=300), make_simulated_client(),
+                      executor=ExecConfig(pilot_rows=0))
+    eng.sql(MEMO_SQL)
+    first = eng.last_report.memo
+    assert first is not None and not first["hit"]
+    assert first["cost_races"] > 0          # real optimization ran
+    # run 2 re-optimizes (stats moved from cold defaults: drift);
+    # run 3 repeats run 2's stats-informed choice from the memo
+    eng.sql(MEMO_SQL)
+    eng.sql(MEMO_SQL)
+    rep = eng.last_report
+    assert rep.memo["hit"]
+    assert rep.memo["cost_races"] == 0
+    assert rep.memo["entries"] >= 1
+    assert any("plan-memo: hit" in ln for ln in rep.optimizer_trace)
+    assert "plan-memo: hit" in rep.explain_analyze()
+
+
+def test_plan_memo_invalidates_on_stats_drift():
+    eng = AisqlEngine(_catalog(n=300), make_simulated_client(),
+                      executor=ExecConfig(pilot_rows=0))
+    eng.sql(MEMO_SQL)
+    eng.sql(MEMO_SQL)
+    eng.sql(MEMO_SQL)
+    assert eng.last_report.memo["hit"]
+    # shove the narrow predicate's selectivity far from the snapshot
+    fp = predicate_fingerprint(_ai(
+        "does this text concern database research? {0}"))
+    eng.stats.observe_predicate(fp, evaluated=100000, passed=99000,
+                                credits=5.0)
+    inv_before = eng.opt.memo.invalidations
+    eng.sql(MEMO_SQL)
+    assert not eng.last_report.memo["hit"]
+    assert eng.opt.memo.invalidations == inv_before + 1
+
+
+def test_plan_memo_disabled_and_lru_bounded():
+    eng = AisqlEngine(_catalog(n=300), make_simulated_client(),
+                      executor=ExecConfig(pilot_rows=0),
+                      optimizer=OptimizerConfig(enable_plan_memo=False))
+    eng.sql(MEMO_SQL)
+    assert eng.last_report.memo is None
+    memo = PlanMemo(max_entries=2)
+    from repro.core.optimizer import MemoEntry
+    for i in range(5):
+        memo.store(f"k{i}", MemoEntry(plan=None, trace=[], snapshot=[]))
+    assert len(memo) == 2
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant stat sharing with isolation
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_store_shares_priors_with_isolation():
+    shared = StatsStore()
+    a = TenantStatsStore(shared, prior_rows=48)
+    b = TenantStatsStore(shared, prior_rows=48)
+    fp = predicate_fingerprint(_ai())
+    a.observe_predicate(fp, evaluated=1000, passed=100, credits=1.0)
+    a.register_prompt(fp, "p summary")
+    # tenant B sees a capped shared_prior copy, never A's raw history
+    view = b.get(fp)
+    assert view is not None and getattr(view, "shared_prior", False)
+    assert view.evaluated == 48
+    assert view.selectivity == pytest.approx(0.1, abs=0.02)
+    assert b.confident(fp, min_rows=24)
+    assert b.prompt_text(fp) == "p summary"
+    # B's own evidence, once it exists, wins over the pool view
+    b.observe_predicate(fp, evaluated=10, passed=9)
+    own = b.get(fp)
+    assert not getattr(own, "shared_prior", False)
+    assert own.evaluated == 10 and own.passed == 9
+    # ...and A's raw counters were never scaled or mutated
+    assert a.get(fp).evaluated == 1000
+    assert shared.get(fp).evaluated == 1010
+
+
+def test_shared_prior_reads_as_transferred_tier():
+    shared = StatsStore()
+    donor_tenant = TenantStatsStore(shared, prior_rows=48)
+    fp = predicate_fingerprint(_ai())
+    donor_tenant.observe_predicate(fp, evaluated=500, passed=50,
+                                   credits=0.5)
+    fresh_tenant = TenantStatsStore(shared, prior_rows=48)
+    cost = CostModel(_catalog(), stats=fresh_tenant)
+    assert cost.estimate_source(_ai()) == "transferred"
+    # blended, not trusted raw: pulled toward the static prior
+    sel = cost.predicate_selectivity(_ai())
+    assert 0.1 < sel < cost.defaults.ai_selectivity
+
+
+def test_serving_stat_sharing_modes():
+    cat = _catalog(n=120)
+    sql = ("SELECT * FROM articles AS a WHERE "
+           "AI_FILTER(PROMPT('broad? {0}', a.headline))")
+    fp = predicate_fingerprint(E.AIFilter(E.Prompt(
+        "broad? {0}", (E.Column("a.headline"),))))
+    for mode in ("full", "priors", "none"):
+        with ServingEngine.simulated(
+                cat, cfg=ServingConfig(workers=2, stat_sharing=mode,
+                                       executor=ExecConfig(pilot_rows=0)),
+                ) as srv:
+            srv.run_all([("acme", sql)])
+            acme = srv.tenant_stats("acme")
+            globex = srv.tenant_stats("globex")
+            assert acme.get(fp).evaluated > 0
+            if mode == "full":
+                assert globex is acme is srv.stats
+            elif mode == "priors":
+                assert globex is not acme
+                view = globex.get(fp)
+                assert view is not None and view.shared_prior
+                # billing isolation: globex ran nothing, spent nothing
+                assert "globex" not in srv.report().tenants
+            else:
+                assert globex.get(fp) is None
+    with pytest.raises(ValueError, match="stat_sharing"):
+        ServingEngine.simulated(
+            cat, cfg=ServingConfig(stat_sharing="everything"))
+
+
+def test_tenant_store_version_tracks_shared_writes():
+    shared = StatsStore()
+    a = TenantStatsStore(shared, prior_rows=48)
+    v0 = a.version
+    # another tenant's pool write must invalidate A's transfer caches
+    shared.observe_predicate("X", evaluated=10, passed=5)
+    assert a.version > v0
