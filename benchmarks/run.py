@@ -4,13 +4,74 @@
 
 Artifacts land in results/*.json; the printed tables mirror the paper's
 Figures 9-12 and Tables 2-4 plus the §5.4 aggregation optimization and a
-§2 serving-throughput check on the real JAX engine.
+§2 serving-throughput check on the real JAX engine.  After a full run
+the per-bench headline metrics are folded into `BENCH_trajectory.json`
+at the repo root, keyed by git SHA, so the perf trajectory across PRs
+stays inspectable.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_trajectory.json")
+
+
+def _git_sha() -> str:
+    try:
+        proc = subprocess.run(["git", "rev-parse", "HEAD"],
+                              capture_output=True, text=True,
+                              cwd=REPO_ROOT, timeout=10)
+        sha = proc.stdout.strip()
+        return sha if proc.returncode == 0 and sha else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def _headline(payload) -> dict:
+    """Scalar top-level fields only — the trajectory tracks headline
+    numbers, not full artifacts (those stay in results/*.json)."""
+    return {k: v for k, v in payload.items()
+            if isinstance(v, (int, float, str, bool)) or v is None}
+
+
+def update_trajectory() -> str:
+    """Fold every results/*.json headline into BENCH_trajectory.json,
+    keyed by the current git SHA (re-running on the same SHA replaces
+    that SHA's entry instead of appending a duplicate)."""
+    from benchmarks.common import RESULTS_DIR
+    benches = {}
+    if os.path.isdir(RESULTS_DIR):
+        for fname in sorted(os.listdir(RESULTS_DIR)):
+            if not fname.endswith(".json"):
+                continue
+            try:
+                with open(os.path.join(RESULTS_DIR, fname)) as f:
+                    payload = json.load(f)
+            except (OSError, ValueError):
+                continue
+            if isinstance(payload, dict):
+                benches[fname[:-len(".json")]] = _headline(payload)
+    sha = _git_sha()
+    entries = []
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                entries = json.load(f).get("entries", [])
+        except (OSError, ValueError):
+            entries = []
+    entries = [e for e in entries if e.get("sha") != sha]
+    entries.append({"sha": sha, "recorded_at": time.strftime(
+        "%Y-%m-%dT%H:%M:%SZ", time.gmtime()), "benches": benches})
+    with open(TRAJECTORY, "w") as f:
+        json.dump({"entries": entries}, f, indent=1)
+        f.write("\n")
+    return TRAJECTORY
 
 
 def main(argv=None) -> int:
@@ -20,7 +81,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_adaptive, bench_agg_shortcircuit,
-                            bench_cascade, bench_concurrent,
+                            bench_cascade, bench_concurrent, bench_http,
                             bench_hybrid_join, bench_index,
                             bench_join_placement, bench_join_rewrite,
                             bench_learned, bench_predicate_reorder,
@@ -38,6 +99,8 @@ def main(argv=None) -> int:
         ("Tables 3-4 / Fig 12 join rewrite", bench_join_rewrite.main),
         ("S5.4 agg short-circuit", bench_agg_shortcircuit.main),
         ("beyond-paper: hybrid k-pass join", bench_hybrid_join.main),
+        ("HTTP serving front-end + NL2SQL",
+         lambda: bench_http.main(["--quick"])),
     ]
     if not args.skip_serving:
         from benchmarks import bench_backend, bench_serving
@@ -49,7 +112,9 @@ def main(argv=None) -> int:
     for name, fn in benches:
         print(f"\n######## {name} ########")
         fn()
-    print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s")
+    path = update_trajectory()
+    print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s "
+          f"(trajectory -> {os.path.relpath(path, REPO_ROOT)})")
     return 0
 
 

@@ -10,6 +10,7 @@ from repro.core.cascade import (CascadeConfig, SupgItCascade,    # noqa: F401
 from repro.core.optimizer import (Optimizer, OptimizerConfig,    # noqa: F401
                                   PlanMemo, plan_fingerprint)
 from repro.core.executor import ExecConfig, Executor             # noqa: F401
+from repro.core.sqlparse import ParseError, parse                # noqa: F401
 from repro.core.aggregate import AggConfig, HierarchicalAggregator  # noqa: F401
 from repro.core.cost import Catalog, CostModel                   # noqa: F401
 from repro.core.serving import (AdmissionError, QuerySession,    # noqa: F401

@@ -337,9 +337,12 @@ class AisqlEngine:
             op.actual_credits = st.credits
 
     # ------------------------------------------------------------------
-    def sql(self, sql: str) -> Table:
+    def sql(self, sql: str, on_batch=None) -> Table:
         """Execute ``sql`` end to end; telemetry lands on
-        ``self.last_report`` and feedback in the shared `StatsStore`."""
+        ``self.last_report`` and feedback in the shared `StatsStore`.
+        With ``on_batch`` (a callable taking a `Table`), incremental
+        result batches are delivered as the executor produces them —
+        the returned table and all telemetry are unchanged."""
         before = self.client.snapshot()
         t0 = time.perf_counter()
         node = self.plan(sql)
@@ -347,7 +350,10 @@ class AisqlEngine:
         est_cost = self.cost.est_llm_cost(node)
         operators = self._collect_estimates(node)
         try:
-            out = self.exec.execute(node)
+            if on_batch is not None:
+                out = self.exec.execute_stream(node, on_batch)
+            else:
+                out = self.exec.execute(node)
         except Exception:
             # a failed query must not leave queued requests behind: a
             # later barrier (possibly another session's) would dispatch

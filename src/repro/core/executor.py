@@ -68,7 +68,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -326,10 +327,18 @@ class StreamingLimit:
         self._parts: List[np.ndarray] = []
         self._count = 0
 
-    def add(self, rows: np.ndarray) -> None:
+    def add(self, rows: np.ndarray) -> np.ndarray:
+        """Accept ``rows`` up to the remaining limit; returns the
+        accepted slice (what a streaming sink may forward downstream —
+        rows past the limit are dropped here, so ``take()`` and the sum
+        of accepted slices always agree)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        if self.n is not None:
+            rows = rows[:max(self.n - self._count, 0)]
         if len(rows):
-            self._parts.append(np.asarray(rows, dtype=np.int64))
+            self._parts.append(rows)
             self._count += len(rows)
+        return rows
 
     @property
     def count(self) -> int:
@@ -402,6 +411,9 @@ class Executor:
         # execution mode (chunked/partitioned evaluation would otherwise
         # re-embed it per batch on an eager client)
         self._embed_memo: Dict[Tuple[str, str], np.ndarray] = {}
+        # incremental-result hook: when set, `_partition_pull` forwards
+        # each partition's accepted row indices here as they survive
+        self._stream_sink: Optional[Callable[[np.ndarray], None]] = None
 
     @property
     def pipelined(self) -> bool:
@@ -417,7 +429,7 @@ class Executor:
         return "pipelined" if self.pipelined else "eager"
 
     # ------------------------------------------------------------------
-    def execute(self, node: P.PlanNode) -> Table:
+    def _reset_query_state(self) -> None:
         self.pred_stats = {}
         self.cascades = {}
         self.reorder_events = []
@@ -427,10 +439,75 @@ class Executor:
         self.index_telemetry = None
         self._fp_by_key: Dict[str, str] = {}
         self._embed_memo = {}
+
+    def execute(self, node: P.PlanNode) -> Table:
+        self._reset_query_state()
         out = self._exec(node)
         self._fold_cascade_stats()
         self.stats.note_query(set(self._fp_by_key.values()))
         return out
+
+    def execute_stream(self, node: P.PlanNode,
+                       emit: Callable[[Table], None]) -> Table:
+        """Execute ``node``, invoking ``emit(batch)`` with incremental
+        result `Table` batches as partitions complete, and return the
+        full result (row-identical to ``execute``).  Streaming engages
+        on the same shapes the partitioned LIMIT path handles —
+        ``[Limit] [Project] Filter* -> source`` in partitioned mode;
+        any other plan falls back to one terminal ``emit`` of the
+        materialized result."""
+        self._reset_query_state()
+        out = self._exec_stream(node, emit)
+        self._fold_cascade_stats()
+        self.stats.note_query(set(self._fp_by_key.values()))
+        return out
+
+    def _exec_stream(self, node: P.PlanNode,
+                     emit: Callable[[Table], None]) -> Table:
+        limit: Optional[int] = None
+        child = node
+        if isinstance(node, P.Limit):
+            limit, child = node.n, node.child
+        spine = (self._streamable_spine(child)
+                 if self.cfg.partitioned else None)
+        if spine is None:
+            out = self._exec(node)
+            if out.num_rows:
+                emit(out)
+            return out
+        project, preds, inner = spine
+        source = self._exec(inner)
+        if preds:
+            preds, known = self._maybe_pilot(source, list(preds))
+        else:
+            known = {}
+        batches: List[Table] = []
+
+        def sink(accepted: np.ndarray) -> None:
+            batch = source.take(accepted)
+            if project is not None:
+                batch = self._exec_project(
+                    P.Project(_Materialized(batch), project.items))
+            batches.append(batch)
+            emit(batch)
+
+        self._stream_sink = sink
+        try:
+            self._partition_pull(source, preds, known, limit=limit)
+        finally:
+            self._stream_sink = None
+        if batches:
+            out = batches[0]
+            for b in batches[1:]:
+                out = out.concat_rows(b)
+        else:
+            # zero surviving rows: an empty projection of the source
+            # keeps the output schema identical to the buffered path
+            out = source.take(np.empty(0, dtype=np.int64))
+            if project is not None:
+                out = self._exec_project(
+                    P.Project(_Materialized(out), project.items))
+        return out.head(limit) if limit is not None else out
 
     def _fold_cascade_stats(self) -> None:
         """Record per-predicate cascade routing volume into the store so
@@ -837,7 +914,9 @@ class Executor:
                     tel["cancelled_requests"] += \
                         self._cancel_handles([leftover])
                 tel["partitions_executed"] += 1
-                consumer.add(alive)
+                accepted = consumer.add(alive)
+                if self._stream_sink is not None and len(accepted):
+                    self._stream_sink(accepted)
                 # adaptive reordering between partitions (§5.1 runtime)
                 if self.cfg.adaptive_reorder and order \
                         and i + 1 < len(spans):

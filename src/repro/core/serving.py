@@ -110,6 +110,22 @@ class TokenBucket:
                 return True, 0.0
             return False, (1.0 - self._tokens) / max(self.rate, 1e-9)
 
+    def peek(self) -> Tuple[bool, float]:
+        """Like ``try_acquire`` but non-consuming: would a token be
+        available right now, and if not, how long until one refills?
+        (The HTTP front door sheds load with this — a 429 with
+        Retry-After — without stealing the token an admitted query
+        will consume.)"""
+        with self._lock:
+            now = time.monotonic()
+            tokens = self._tokens
+            if self.rate != math.inf:
+                tokens = min(self.capacity,
+                             tokens + (now - self._updated) * self.rate)
+            if self.rate == math.inf or tokens >= 1.0:
+                return True, 0.0
+            return False, (1.0 - tokens) / max(self.rate, 1e-9)
+
     def acquire(self) -> float:
         t0 = time.perf_counter()
         while True:
@@ -289,11 +305,16 @@ class TenantStatsStore(StatsStore):
 
 class QueryTicket:
     """Handle for one submitted query; resolves to a `Table` (or raises
-    the query's error) on ``result()``."""
+    the query's error) on ``result()``.  Tickets submitted with
+    ``stream=True`` additionally expose ``batches()``: an iterator of
+    partition-incremental `Table` batches, available while the query is
+    still executing (the HTTP front-end turns these into NDJSON lines).
+    """
 
-    def __init__(self, tenant: str, sql: str):
+    def __init__(self, tenant: str, sql: str, *, stream: bool = False):
         self.tenant = tenant
         self.sql = sql
+        self.stream = stream
         self.submitted_at = time.perf_counter()
         self.queue_wait_s = 0.0     # submit -> execution start
         self.wall_s = 0.0           # execution only
@@ -301,6 +322,9 @@ class QueryTicket:
         self._done = threading.Event()
         self._table: Optional[Table] = None
         self._error: Optional[Exception] = None
+        # None-terminated batch stream; only populated for stream=True
+        self._batchq: Optional["queue.Queue[Optional[Table]]"] = (
+            queue.Queue() if stream else None)
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -316,6 +340,31 @@ class QueryTicket:
             raise self._error
         assert self._table is not None
         return self._table
+
+    def batches(self, timeout: Optional[float] = None):
+        """Yield result batches as the executor produces them; raises the
+        query's error (if any) after the stream ends.  Only valid for
+        tickets submitted with ``stream=True``."""
+        if self._batchq is None:
+            raise ValueError("ticket was not submitted with stream=True")
+        while True:
+            try:
+                batch = self._batchq.get(timeout=timeout)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"no batch after {timeout}s: {self.sql[:60]!r}")
+            if batch is None:
+                break
+            yield batch
+        if self._error is not None:
+            raise self._error
+
+    def _finish(self) -> None:
+        """Mark terminal (worker-side): wake ``result()`` waiters and
+        terminate the batch stream exactly once."""
+        self._done.set()
+        if self._batchq is not None:
+            self._batchq.put(None)
 
 
 class QuerySession:
@@ -347,8 +396,9 @@ class QuerySession:
             catalog, self.client, optimizer=cfg.optimizer,
             executor=cfg.executor, stats=stats, semindex=semindex)
 
-    def run(self, sql: str) -> Tuple[Table, Optional[QueryReport]]:
-        out = self.engine.sql(sql)
+    def run(self, sql: str,
+            on_batch=None) -> Tuple[Table, Optional[QueryReport]]:
+        out = self.engine.sql(sql, on_batch=on_batch)
         return out, self.engine.last_report
 
 
@@ -516,6 +566,7 @@ class ServingEngine:
         self._submitted = 0
         self._queue: "queue.Queue[Optional[QueryTicket]]" = queue.Queue()
         self._closed = False
+        self._shutdown_done = threading.Event()
         self._workers = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"aisql-serve-{i}")
@@ -593,17 +644,24 @@ class ServingEngine:
             self._idle_sessions.setdefault(tenant, []).append(session)
 
     # -- submission / draining ----------------------------------------
-    def submit(self, tenant: str, sql: str) -> QueryTicket:
-        """Enqueue one query for ``tenant``; returns immediately."""
-        if self._closed:
-            raise RuntimeError("ServingEngine is closed")
-        ticket = QueryTicket(tenant, sql)
+    def submit(self, tenant: str, sql: str, *,
+               stream: bool = False) -> QueryTicket:
+        """Enqueue one query for ``tenant``; returns immediately.  With
+        ``stream=True`` the ticket's ``batches()`` iterator yields result
+        batches while the query executes."""
+        ticket = QueryTicket(tenant, sql, stream=stream)
         meter = self.tenant(tenant)
+        # closed-check and enqueue are one atomic step: a racing close()
+        # (which flips _closed under the same lock) can therefore never
+        # drain *between* our check and our put, which would strand the
+        # ticket unserved and hang its result() forever
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ServingEngine is closed")
+            self._submitted += 1
+            self._queue.put(ticket)
         with meter.lock:
             meter.submitted += 1
-        with self._lock:
-            self._submitted += 1
-        self._queue.put(ticket)
         return ticket
 
     def run_all(self, workload: List[Tuple[str, str]]) -> List[QueryTicket]:
@@ -617,15 +675,25 @@ class ServingEngine:
         self._queue.join()
 
     def close(self) -> None:
-        """Drain, then stop the worker threads."""
-        if self._closed:
+        """Drain, then stop the worker threads.  Idempotent and safe
+        under concurrency: the first caller performs the shutdown, every
+        later (or concurrent) caller blocks until it completes; tickets
+        in flight at the moment of the call all finish normally."""
+        with self._lock:
+            first = not self._closed
+            self._closed = True
+        if not first:
+            self._shutdown_done.wait()
             return
-        self._closed = True
-        self.drain()
-        for _ in self._workers:
-            self._queue.put(None)
-        for w in self._workers:
-            w.join(timeout=30.0)
+        try:
+            self.drain()
+            for _ in self._workers:
+                self._queue.put(None)
+            for w in self._workers:
+                if w is not threading.current_thread():
+                    w.join(timeout=30.0)
+        finally:
+            self._shutdown_done.set()
 
     # -- the worker loop ----------------------------------------------
     def _worker(self) -> None:
@@ -639,7 +707,7 @@ class ServingEngine:
                 requeued = self._serve(ticket)
             finally:
                 if not requeued:
-                    ticket._done.set()
+                    ticket._finish()
                 self._queue.task_done()
 
     def _serve(self, ticket: QueryTicket) -> bool:
@@ -675,7 +743,9 @@ class ServingEngine:
             session = self._checkout(ticket.tenant)
             try:
                 t0 = time.perf_counter()
-                table, report = session.run(ticket.sql)
+                on_batch = (ticket._batchq.put
+                            if ticket._batchq is not None else None)
+                table, report = session.run(ticket.sql, on_batch=on_batch)
                 ticket.wall_s = time.perf_counter() - t0
                 ticket.report = report
                 ticket._table = table

@@ -23,6 +23,63 @@ from typing import Any, List, Optional, Tuple
 
 from repro.core import expr as E
 
+
+class ParseError(SyntaxError):
+    """Structured parse failure: message + source position + offending
+    token.
+
+    Kept a `SyntaxError` subclass for back-compat (every pre-existing
+    ``except SyntaxError`` still works), but carries machine-readable
+    fields the serving layer maps onto its HTTP 400 body:
+
+      * ``pos``    — 0-based character offset into the source SQL
+        (None when the failing construct has no single position);
+      * ``token``  — the offending token text (or a description);
+      * ``source`` — the full SQL text, for caret rendering.
+
+    The standard `SyntaxError` ``(text, lineno, offset)`` triple is
+    populated too, so interpreter tracebacks render the caret for free,
+    and ``str()`` includes the `caret()` snippet — which is how
+    ``explain`` output and error logs show *where* the query broke.
+    """
+
+    def __init__(self, message: str, *, pos: Optional[int] = None,
+                 token: Optional[str] = None,
+                 source: Optional[str] = None):
+        self.message = message
+        self.pos = pos
+        self.token = token
+        self.source = source
+        if source is not None and pos is not None:
+            prefix = source[:pos]
+            lineno = prefix.count("\n") + 1
+            col = pos - (prefix.rfind("\n") + 1)
+            line = (source.splitlines() or [""])[lineno - 1]
+            super().__init__(message, (None, lineno, col + 1, line))
+        else:
+            super().__init__(message)
+
+    def caret(self) -> str:
+        """Two-line snippet: the offending source line plus a ``^``
+        under the failure position; empty when no position is known."""
+        if self.source is None or self.pos is None:
+            return ""
+        prefix = self.source[:self.pos]
+        lineno = prefix.count("\n") + 1
+        col = self.pos - (prefix.rfind("\n") + 1)
+        line = (self.source.splitlines() or [""])[lineno - 1]
+        return f"{line}\n{' ' * col}^"
+
+    def __str__(self) -> str:
+        head = (self.message if self.pos is None
+                else f"{self.message} (at position {self.pos})")
+        snippet = self.caret()
+        if not snippet:
+            return head
+        body = "\n".join(f"    {ln}" for ln in snippet.splitlines())
+        return f"{head}\n{body}"
+
+
 _TOKEN_RE = re.compile(r"""
     (?P<ws>\s+)
   | (?P<arrow>=>)
@@ -43,6 +100,7 @@ _KEYWORDS = {
 class Tok:
     kind: str      # op | num | str | ident | kw | arrow | eof
     value: str
+    pos: int = -1  # 0-based character offset into the source SQL
 
 
 def _lex(sql: str) -> List[Tok]:
@@ -51,17 +109,19 @@ def _lex(sql: str) -> List[Tok]:
     while i < len(sql):
         m = _TOKEN_RE.match(sql, i)
         if not m:
-            raise SyntaxError(f"cannot tokenize at: {sql[i:i+30]!r}")
+            raise ParseError(f"cannot tokenize at: {sql[i:i+30]!r}",
+                             pos=i, token=sql[i:i + 1], source=sql)
+        start = m.start()
         i = m.end()
         kind = m.lastgroup
         if kind == "ws":
             continue
         v = m.group()
         if kind == "ident" and v.upper() in _KEYWORDS:
-            out.append(Tok("kw", v.upper()))
+            out.append(Tok("kw", v.upper(), start))
         else:
-            out.append(Tok(kind, v))
-    out.append(Tok("eof", ""))
+            out.append(Tok(kind, v, start))
+    out.append(Tok("eof", "", len(sql)))
     return out
 
 
@@ -97,6 +157,7 @@ class Query:
 
 class Parser:
     def __init__(self, sql: str):
+        self.sql = sql
         self.toks = _lex(sql)
         self.i = 0
 
@@ -109,6 +170,13 @@ class Parser:
         self.i += 1
         return t
 
+    def error(self, message: str, tok: Optional[Tok] = None) -> ParseError:
+        """A `ParseError` anchored at ``tok`` (default: the lookahead)."""
+        tok = tok or self.peek()
+        return ParseError(message,
+                          pos=tok.pos if tok.pos >= 0 else None,
+                          token=tok.value or tok.kind, source=self.sql)
+
     def accept(self, kind: str, value: Optional[str] = None) -> Optional[Tok]:
         t = self.peek()
         if t.kind == kind and (value is None or t.value == value):
@@ -118,8 +186,8 @@ class Parser:
     def expect(self, kind: str, value: Optional[str] = None) -> Tok:
         t = self.accept(kind, value)
         if t is None:
-            raise SyntaxError(f"expected {value or kind}, got "
-                              f"{self.peek().kind}:{self.peek().value!r}")
+            raise self.error(f"expected {value or kind}, got "
+                             f"{self.peek().kind}:{self.peek().value!r}")
         return t
 
     # ---- grammar ----
@@ -158,7 +226,8 @@ class Parser:
         if self.accept("kw", "LIMIT"):
             tok = self.expect("num")
             if "." in tok.value:
-                raise SyntaxError(f"LIMIT must be an integer, got {tok.value}")
+                raise self.error(
+                    f"LIMIT must be an integer, got {tok.value}", tok)
             limit = int(tok.value)
         self.expect("eof")
         return Query(items, table, joins, where, group_by, limit, order_by)
@@ -166,7 +235,7 @@ class Parser:
     def order_item(self) -> OrderItem:
         t = self.peek()
         if t.kind in ("eof",) or (t.kind == "op" and t.value == ","):
-            raise SyntaxError("ORDER BY requires an expression")
+            raise self.error("ORDER BY requires an expression", t)
         ex = self.expr()
         desc = False
         if self.accept("kw", "DESC"):
@@ -273,7 +342,7 @@ class Parser:
             return t.value[1:-1].replace("''", "'")
         if t.kind == "kw" and t.value in ("TRUE", "FALSE"):
             return t.value == "TRUE"
-        raise SyntaxError(f"expected literal, got {t.value!r}")
+        raise self.error(f"expected literal, got {t.value!r}", t)
 
     def atom(self) -> E.Expr:
         t = self.peek()
@@ -296,7 +365,7 @@ class Parser:
         if t.kind == "ident":
             name = self.next().value
             if self.peek().kind == "op" and self.peek().value == "(":
-                return self.call(name)
+                return self.call(name, t)
             full = name
             while self.accept("op", "."):
                 full += "." + self.expect("ident").value
@@ -304,7 +373,7 @@ class Parser:
         if t.kind == "op" and t.value == "*":
             self.next()
             return E.Star()
-        raise SyntaxError(f"unexpected token {t.value!r}")
+        raise self.error(f"unexpected token {t.value!r}", t)
 
     def array_literal(self) -> Tuple[str, ...]:
         self.expect("op", "[")
@@ -315,7 +384,7 @@ class Parser:
         return tuple(str(v) for v in vals)
 
     # ---- calls ----
-    def call(self, name: str) -> E.Expr:
+    def call(self, name: str, tok: Optional[Tok] = None) -> E.Expr:
         uname = name.upper()
         self.expect("op", "(")
         if uname == "COUNT" and self.accept("op", "*"):
@@ -335,12 +404,13 @@ class Parser:
                 if not self.accept("op", ","):
                     break
         self.expect("op", ")")
-        return self.build_call(uname, args, kwargs)
+        return self.build_call(uname, args, kwargs, tok)
 
-    def build_call(self, uname, args, kwargs) -> E.Expr:
+    def build_call(self, uname, args, kwargs,
+                   tok: Optional[Tok] = None) -> E.Expr:
         model = kwargs.get("model")
         if uname == "PROMPT":
-            tpl = _lit_str(args[0])
+            tpl = self._lit_str(args[0], "PROMPT template", tok)
             return E.Prompt(tpl, tuple(args[1:]))
         if uname == "AI_FILTER":
             p = args[0]
@@ -360,12 +430,12 @@ class Parser:
             return E.AIScore(p, model=model)
         if uname == "AI_EMBED":
             if len(args) != 1:
-                raise SyntaxError("AI_EMBED takes exactly one argument")
+                raise self.error("AI_EMBED takes exactly one argument", tok)
             return E.AIEmbed(args[0], model=model)
         if uname == "AI_SIMILARITY":
             if len(args) != 2:
-                raise SyntaxError("AI_SIMILARITY takes exactly two "
-                                  "arguments")
+                raise self.error("AI_SIMILARITY takes exactly two "
+                                 "arguments", tok)
             return E.AISimilarity(args[0], args[1], model=model)
         if uname == "AI_CLASSIFY":
             text = args[0]
@@ -394,7 +464,8 @@ class Parser:
             return E.AIComplete(p, model=model,
                                 max_tokens=int(kwargs.get("max_tokens", 48)))
         if uname == "AI_AGG":
-            instr = _lit_str(args[1]) if len(args) > 1 else None
+            instr = (self._lit_str(args[1], "AI_AGG instruction", tok)
+                     if len(args) > 1 else None)
             return E.AggCall("AI_AGG", (args[0],), instruction=instr)
         if uname == "AI_SUMMARIZE_AGG":
             return E.AggCall("AI_SUMMARIZE_AGG", (args[0],))
@@ -402,10 +473,13 @@ class Parser:
             return E.AggCall(uname, tuple(args))
         return E.FuncCall(uname, tuple(args))
 
-
-def _lit_str(e: E.Expr) -> str:
-    assert isinstance(e, E.Literal) and isinstance(e.value, str), e
-    return e.value
+    def _lit_str(self, e: E.Expr, what: str,
+                 tok: Optional[Tok] = None) -> str:
+        # A bare assert here disappears under ``python -O`` and lets a
+        # non-literal template flow into execution; raise a real error.
+        if not (isinstance(e, E.Literal) and isinstance(e.value, str)):
+            raise self.error(f"{what} must be a string literal", tok)
+        return e.value
 
 
 def parse(sql: str) -> Query:

@@ -28,6 +28,7 @@ every random draw is keyed by (seed, request fingerprint).
 from __future__ import annotations
 
 import hashlib
+import re
 import threading
 from typing import Dict, List, Optional, Sequence
 
@@ -271,10 +272,45 @@ class SimulatedBackend:
             return Result(r.request_id, r.model, CLASSIFY,
                           label=(chosen[0] if chosen else None),
                           labels=tuple(chosen), tokens_in=ntok)
+        # COMPLETE with an "nl2sql" grounding block: NL->AISQL
+        # compilation — answer with the verified query whose question
+        # matches, sometimes corrupted so the caller's validation loop
+        # is exercised (a retry re-prompts with feedback, which changes
+        # the rng key and usually repairs the draw)
+        if md.get("nl2sql"):
+            return self._serve_nl2sql(r, prof, rng, ntok)
         # COMPLETE: deterministic template text (extract/combine/summarize)
         text = md.get("canned") or _template_completion(r.prompt)
         return Result(r.request_id, r.model, COMPLETE, text=text,
                       tokens_in=ntok, tokens_out=max(len(text) // 4, 1))
+
+    def _serve_nl2sql(self, r: Request, prof, rng, ntok: int) -> Result:
+        spec = r.metadata["nl2sql"]
+        question = str(spec.get("question", "")).lower()
+        qtok = set(re.findall(r"[a-z0-9_]+", question))
+        best_sql, best_score = "SELECT 1", -1.0
+        for ex in spec.get("examples", ()):
+            etok = set(re.findall(
+                r"[a-z0-9_]+", str(ex.get("question", "")).lower()))
+            score = len(qtok & etok) / max(len(etok), 1)
+            if score > best_score:
+                best_sql, best_score = str(ex.get("sql", "")), score
+        err = min(0.9, float(spec.get("difficulty", 0.15))
+                  * prof["err_scale"])
+        sql = best_sql
+        if rng.random() < err:
+            # corruptions are always *invalid* SQL — either untokenizable
+            # (ParseError) or referencing a column no catalog has
+            # (semantic rejection) — so a query that passes validation
+            # is always the grounded-truth answer
+            if rng.random() < 0.5:
+                sql = sql + " ???"
+            else:
+                sql = re.sub(r"(?i)^\s*SELECT\s",
+                             "SELECT no_such_column_xx, ", sql, count=1)
+        return Result(r.request_id, r.model, COMPLETE,
+                      text=f"```sql\n{sql}\n```",
+                      tokens_in=ntok, tokens_out=max(len(sql) // 4, 1))
 
     # ------------------------------------------------------------------
     # EMBED: deterministic topic-correlated unit vectors

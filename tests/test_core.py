@@ -65,6 +65,63 @@ def test_parse_errors():
         sqlparse.parse("SELECT * FROM t WHERE ???")
 
 
+BAD_SQL = [
+    "SELECT FROM t",
+    "SELECT * FROM t WHERE ???",
+    "SELECT a FROM",
+    "SELECT a FROM t LIMIT x",
+    "SELECT a FROM t ORDER BY",
+    "SELECT AI_EMBED(a, b) FROM t",
+    "SELECT AI_SIMILARITY(a) FROM t",
+    "SELECT PROMPT(a) FROM t",
+    "SELECT AI_AGG(a, b) FROM t",
+    "SELECT a FROM t WHERE model => 3",
+]
+
+
+@pytest.mark.parametrize("sql", BAD_SQL)
+def test_parse_errors_are_structured(sql):
+    """Every malformed query raises ParseError (a SyntaxError subclass
+    carrying source position), never a builtin-only SyntaxError."""
+    with pytest.raises(sqlparse.ParseError) as exc:
+        sqlparse.parse(sql)
+    err = exc.value
+    assert isinstance(err, SyntaxError)
+    assert err.pos is None or 0 <= err.pos <= len(sql)
+    assert err.message
+
+
+def test_parse_error_caret_marks_position():
+    with pytest.raises(sqlparse.ParseError) as exc:
+        sqlparse.parse("SELECT a FROM t LIMIT x")
+    err = exc.value
+    caret = err.caret()
+    line, marker = caret.splitlines()
+    assert line == "SELECT a FROM t LIMIT x"
+    assert marker.index("^") == err.pos
+    assert line[err.pos] == "x"
+    assert "position" in str(err)
+
+
+def test_prompt_validation_survives_optimized_mode():
+    """The PROMPT-template check was a bare assert that vanished under
+    ``python -O``; it is now a ParseError (mirrors the Table fix)."""
+    import os
+    import subprocess
+    import sys
+    code = ("from repro.core.sqlparse import parse, ParseError\n"
+            "try:\n"
+            "    parse('SELECT PROMPT(a) FROM t')\n"
+            "except ParseError:\n"
+            "    print('OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-O", "-c", code],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.stdout.strip() == "OK", out.stderr
+
+
 # ---------------------------------------------------------------------------
 # optimizer
 # ---------------------------------------------------------------------------

@@ -256,3 +256,29 @@ def test_documented_learned_knobs_exist_in_code():
                      "ServingConfig.stat_sharing",
                      "ExecConfig.pilot_trust_transfer"):
         assert required in documented, f"{required} not documented"
+
+
+def test_http_api_doc_exists_and_linked():
+    assert os.path.exists(os.path.join(DOCS, "http-api.md"))
+    assert "docs/http-api.md" in _read("README.md")
+    assert "http-api.md" in _read("docs/architecture.md")
+    assert "http-api.md" in _read("docs/serving.md")
+
+
+def test_http_api_error_table_matches_contract():
+    """The docs' error-contract table is exactly the server's exception
+    map: same codes, same HTTP statuses, nothing extra or missing."""
+    from repro.serve.http import ERROR_CONTRACT
+    text = _read("docs/http-api.md")
+    section = text.split("## Error contract", 1)[1]
+    section = section.split("## ", 1)[0]
+    rows = re.findall(r"\|\s*`([a-z0-9_]+)`\s*\|\s*(\d{3})\s*\|", section)
+    documented = {code: int(status) for code, status in rows}
+    actual = {code: status for code, (status, _) in ERROR_CONTRACT.items()}
+    assert documented, "error-contract table not found in http-api.md"
+    assert documented == actual, (
+        f"docs/http-api.md error table out of sync with ERROR_CONTRACT: "
+        f"doc-only {set(documented) - set(actual)}, "
+        f"code-only {set(actual) - set(documented)}, "
+        f"status mismatches "
+        f"{ {c for c in documented.keys() & actual.keys() if documented[c] != actual[c]} }")

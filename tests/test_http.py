@@ -1,0 +1,508 @@
+"""HTTP front-end end-to-end tests — over a real socket.
+
+Covers the wire error contract (401/400-with-position/429/503), NDJSON
+streaming row-identical to the library call, billing conservation under
+concurrent tenants, the NL→AISQL validation loop, and the
+shutdown-under-load guarantees of `ServingEngine.close`.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from _serving_corpus import canon_rows, make_catalog
+
+from repro.core import AisqlEngine, Catalog, ExecConfig
+from repro.core.serving import (ServingConfig, ServingEngine,
+                                TenantPolicy)
+from repro.inference.api import make_simulated_client
+from repro.serve import (AisqlHttpClient, AisqlHttpServer, HttpConfig,
+                         NL2SQLOperator, SemanticModel,
+                         SemanticValidationError, VerifiedQuery,
+                         question_corpus)
+from repro.serve.http import ERROR_CONTRACT, HttpStatusError, table_rows
+from repro.tables.table import Table
+
+SEED = 7
+PART_CFG = ExecConfig(partitioned=True, partition_rows=32)
+
+
+def small_catalog(n=160):
+    rng = np.random.default_rng(SEED)
+    return Catalog({"t": Table({
+        "id": np.arange(n),
+        "score": rng.random(n),
+        "text": [f"row {i} text" for i in range(n)],
+        "_truth": rng.random(n) < 0.5,
+        "_difficulty": np.full(n, 0.05),
+    }, name="t")})
+
+
+def serving_engine(catalog, *, tenants=None, workers=4):
+    return ServingEngine.simulated(
+        catalog, seed=SEED, tenants=tenants,
+        cfg=ServingConfig(workers=workers, executor=PART_CFG))
+
+
+def default_model(catalog):
+    model = SemanticModel.from_catalog(catalog)
+    model.verified = [
+        VerifiedQuery("high", "list the ids with score above one half",
+                      "SELECT id, score FROM t WHERE score > 0.5"),
+        VerifiedQuery("count", "count all rows",
+                      "SELECT COUNT(*) FROM t"),
+        VerifiedQuery("low", "list the ids with tiny scores",
+                      "SELECT id FROM t WHERE score < 0.1"),
+    ]
+    return model
+
+
+# ---------------------------------------------------------------------------
+# wire error contract
+# ---------------------------------------------------------------------------
+
+
+def test_auth_failure_is_401():
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(
+            eng, cfg=HttpConfig(tokens={"good": "acme"})) as srv:
+        for token in (None, "bad"):
+            client = AisqlHttpClient(srv.host, srv.port, token=token)
+            with pytest.raises(HttpStatusError) as exc:
+                client.query("SELECT id FROM t")
+            assert exc.value.status == 401
+            assert exc.value.code == "unauthorized"
+        # the right token works
+        ok = AisqlHttpClient(srv.host, srv.port, token="good")
+        assert ok.query("SELECT COUNT(*) FROM t")["row_count"] == 1
+
+
+def test_malformed_sql_is_400_with_position():
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        with pytest.raises(HttpStatusError) as exc:
+            client.query("SELECT id FROM t LIMIT x")
+        err = exc.value.body["error"]
+        assert exc.value.status == 400 and exc.value.code == "invalid_sql"
+        assert err["pos"] == 23 and err["token"] == "x"
+        line, caret = err["caret"].splitlines()
+        assert caret.index("^") == err["pos"]
+        assert line[err["pos"]] == "x"
+
+
+def test_unknown_table_is_400():
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        with pytest.raises(HttpStatusError) as exc:
+            client.query("SELECT id FROM nope")
+        assert exc.value.status == 400
+        assert exc.value.code == "unknown_table"
+
+
+def test_budget_exhaustion_is_429():
+    cat = small_catalog()
+    tenants = {"tiny": TenantPolicy(credit_budget=0.0)}
+    with serving_engine(cat, tenants=tenants) as eng, \
+            AisqlHttpServer(eng, cfg=HttpConfig(
+                tokens={"tok": "tiny"})) as srv:
+        client = AisqlHttpClient(srv.host, srv.port, token="tok",
+                                 max_retries=1)
+        with pytest.raises(HttpStatusError) as exc:
+            client.query("SELECT id FROM t")
+        assert exc.value.status == 429
+        assert exc.value.code == "budget_exhausted"
+
+
+def test_rate_limit_is_429_and_client_honors_retry_after():
+    cat = small_catalog()
+    # burst of 1 at 5 qps: back-to-back queries must see a 429, and the
+    # retrying client must absorb it by honouring Retry-After
+    tenants = {"slow": TenantPolicy(queries_per_s=5.0, burst=1)}
+    with serving_engine(cat, tenants=tenants) as eng, \
+            AisqlHttpServer(eng, cfg=HttpConfig(
+                tokens={"tok": "slow"})) as srv:
+        impatient = AisqlHttpClient(srv.host, srv.port, token="tok",
+                                    max_retries=0)
+        patient = AisqlHttpClient(srv.host, srv.port, token="tok",
+                                  max_retries=8)
+        saw_429 = False
+        for _ in range(6):
+            try:
+                impatient.query("SELECT COUNT(*) FROM t")
+            except HttpStatusError as e:
+                assert e.status == 429 and e.code == "throttled"
+                saw_429 = True
+                break
+        assert saw_429, "rapid-fire queries never hit the rate limit"
+        # the patient client makes progress through the same limit by
+        # waiting out at least one Retry-After
+        out = patient.query("SELECT COUNT(*) FROM t")
+        assert out["row_count"] == 1
+        assert patient.throttled_retries >= 1, \
+            "client never needed a retry (limit not exercised)"
+
+
+def test_post_close_query_is_503():
+    cat = small_catalog()
+    eng = serving_engine(cat)
+    srv = AisqlHttpServer(eng).start()
+    client = AisqlHttpClient(srv.host, srv.port)
+    assert client.healthz() == {"status": "ok"}
+    eng.close()
+    with pytest.raises(HttpStatusError) as exc:
+        client.query("SELECT id FROM t")
+    assert exc.value.status == 503
+    assert exc.value.code == "shutting_down"
+    srv.stop()
+
+
+def test_unknown_endpoint_is_404():
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        with pytest.raises(HttpStatusError) as exc:
+            client._request("GET", "/v1/nope").read()
+        assert exc.value.status == 404
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+
+STREAM_QUERIES = [
+    "SELECT id, score FROM t WHERE score > 0.5",
+    "SELECT id FROM t WHERE score > 0.25 LIMIT 17",
+    "SELECT COUNT(*) FROM t",
+    "SELECT id FROM t WHERE score > 2.0",          # empty result
+]
+
+
+@pytest.mark.parametrize("sql", STREAM_QUERIES)
+def test_streamed_rows_identical_to_library_call(sql):
+    cat = small_catalog()
+    # library reference: a private engine over the same seeded simulator
+    ref_engine = AisqlEngine(small_catalog(),
+                             make_simulated_client(seed=SEED),
+                             executor=PART_CFG)
+    ref_table = ref_engine.sql(sql)
+    _, ref_rows = table_rows(ref_table)
+    ref_bytes = json.dumps(ref_rows).encode()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        events = list(client.query_stream(sql))
+    assert events[0]["kind"] == "schema"
+    assert events[0]["columns"] == list(ref_table.column_names)
+    assert events[-1]["kind"] == "summary"
+    rows = [e["values"] for e in events if e["kind"] == "row"]
+    assert events[-1]["row_count"] == len(rows)
+    # byte-identical once both sides render through the same JSON rule
+    assert json.dumps(rows).encode() == ref_bytes
+
+
+def test_streamed_equals_buffered_over_http():
+    cat = small_catalog()
+    sql = "SELECT id, score FROM t WHERE score > 0.5"
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        buffered = client.query(sql)
+        streamed = [e["values"] for e in client.query_stream(sql)
+                    if e["kind"] == "row"]
+    assert buffered["rows"] == streamed
+
+
+def test_stream_delivers_multiple_batches():
+    cat = small_catalog()
+    with serving_engine(cat) as eng:
+        ticket = eng.submit("default",
+                            "SELECT id FROM t WHERE score > 0.5",
+                            stream=True)
+        batches = list(ticket.batches(timeout=30.0))
+        assert len(batches) > 1          # partition_rows=32 over 160 rows
+        total = sum(b.num_rows for b in batches)
+        assert total == ticket.result().num_rows
+
+
+def test_stream_error_surfaces_as_status():
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        with pytest.raises(HttpStatusError) as exc:
+            list(client.query_stream("SELECT id FROM t LIMIT x"))
+        assert exc.value.status == 400
+
+
+# ---------------------------------------------------------------------------
+# concurrent tenants: billing conservation over the wire
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_tenant_billing_conserved():
+    cat = make_catalog()
+    sqls = [
+        "SELECT a.id FROM articles a WHERE "
+        "AI_FILTER(PROMPT('broad topic? {0}', a.headline))",
+        "SELECT r.id FROM reviews r WHERE "
+        "AI_FILTER(PROMPT('positive? {0}', r.text))",
+        "SELECT a.id, a.headline FROM articles a WHERE a.id < 40",
+    ]
+    tenants = ["alpha", "beta", "gamma"]
+    tokens = {f"tok-{t}": t for t in tenants}
+    with ServingEngine.simulated(
+            cat, seed=SEED,
+            cfg=ServingConfig(workers=6, executor=PART_CFG)) as eng, \
+            AisqlHttpServer(eng, cfg=HttpConfig(tokens=tokens)) as srv:
+        errors = []
+
+        def drive(tenant):
+            client = AisqlHttpClient(srv.host, srv.port,
+                                     token=f"tok-{tenant}")
+            try:
+                for sql in sqls:
+                    out = client.query(sql)
+                    assert out["tenant"] == tenant
+            except Exception as e:       # surfaced after the join
+                errors.append((tenant, e))
+
+        threads = [threading.Thread(target=drive, args=(t,))
+                   for t in tenants]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors, errors
+        eng.drain()
+        report = eng.report()
+        client = AisqlHttpClient(srv.host, srv.port,
+                                 token="tok-alpha")
+        wire = client.report()
+    # every tenant completed everything it submitted
+    for t in tenants:
+        tr = wire["tenants"][t]
+        assert tr["queries"] == len(sqls)
+        assert tr["completed"] == len(sqls)
+        assert tr["failed"] == 0
+    # conservation: tenant meters sum to the dispatch spend, and the
+    # wire report agrees with the library report
+    total = sum(wire["tenants"][t]["credits_spent"] for t in tenants)
+    assert total == pytest.approx(wire["total_credits"])
+    assert wire["total_credits"] == pytest.approx(report.total_credits)
+    if report.backend_credits is not None:
+        assert wire["total_credits"] == \
+            pytest.approx(wire["backend_credits"])
+
+
+# ---------------------------------------------------------------------------
+# shutdown under load
+# ---------------------------------------------------------------------------
+
+
+def test_close_is_idempotent_and_drains_in_flight_work():
+    cat = make_catalog()
+    eng = ServingEngine.simulated(
+        cat, seed=SEED, cfg=ServingConfig(workers=4, executor=PART_CFG))
+    tickets = [eng.submit("acme",
+                          "SELECT a.id FROM articles a WHERE "
+                          "AI_FILTER(PROMPT('broad topic? {0}', "
+                          "a.headline))")
+               for _ in range(12)]
+    # concurrent closes: every caller returns only once shutdown is done
+    closers = [threading.Thread(target=eng.close) for _ in range(4)]
+    for c in closers:
+        c.start()
+    eng.close()
+    for c in closers:
+        c.join(timeout=30.0)
+        assert not c.is_alive()
+    # every pre-close ticket completed (drain-then-stop)
+    for tk in tickets:
+        assert tk.done()
+        assert tk.result().num_rows >= 0
+    # post-close submit fails fast with a clean error, never hangs
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit("acme", "SELECT a.id FROM articles a")
+    # and close stays a no-op
+    eng.close()
+
+
+def test_close_races_submit_without_stranding_tickets():
+    """A submit racing close() must either be admitted (and then
+    complete) or fail fast — a stranded ticket would hang result()."""
+    cat = small_catalog()
+    for _ in range(5):
+        eng = serving_engine(cat, workers=2)
+        out = {}
+
+        def submitter():
+            try:
+                out["ticket"] = eng.submit("acme", "SELECT COUNT(*) FROM t")
+            except RuntimeError as e:
+                out["error"] = e
+
+        th = threading.Thread(target=submitter)
+        th.start()
+        eng.close()
+        th.join(timeout=10.0)
+        assert not th.is_alive()
+        if "ticket" in out:
+            # admitted -> must resolve, never hang
+            assert out["ticket"].result(timeout=10.0).num_rows == 1
+        else:
+            assert "closed" in str(out["error"])
+
+
+def test_streaming_ticket_terminates_on_error():
+    cat = small_catalog()
+    with serving_engine(cat) as eng:
+        ticket = eng.submit("acme", "SELECT id FROM t LIMIT x",
+                            stream=True)
+        with pytest.raises(SyntaxError):
+            list(ticket.batches(timeout=10.0))
+        with pytest.raises(SyntaxError):
+            ticket.result(timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# semantic model + NL2SQL
+# ---------------------------------------------------------------------------
+
+
+def test_semantic_model_validates_against_live_catalog():
+    cat = small_catalog()
+    model = default_model(cat)
+    model.validate(cat)                 # round-trips clean
+    # unknown table
+    bad = default_model(cat)
+    bad.tables[0].name = "ghost"
+    with pytest.raises(SemanticValidationError, match="ghost"):
+        bad.validate(cat)
+    # unknown column
+    bad2 = default_model(cat)
+    bad2.tables[0].columns[0].name = "nope"
+    with pytest.raises(SemanticValidationError, match="nope"):
+        bad2.validate(cat)
+    # verified query referencing a missing column
+    bad3 = default_model(cat)
+    bad3.verified.append(VerifiedQuery(
+        "broken", "q", "SELECT missing_col FROM t"))
+    with pytest.raises(SemanticValidationError, match="missing_col"):
+        bad3.validate(cat)
+
+
+def test_semantic_model_round_trips_through_json():
+    cat = small_catalog()
+    model = default_model(cat)
+    model.tables[0].description = "the table"
+    model.tables[0].columns[0].synonyms = ("identifier",)
+    back = SemanticModel.from_json(model.to_json())
+    assert back.to_dict() == model.to_dict()
+    back.validate(cat)
+
+
+def test_nl2sql_compiles_corpus_and_matches_grounded_rows():
+    cat = small_catalog()
+    model = default_model(cat)
+    client = make_simulated_client(seed=SEED)
+    op = NL2SQLOperator(model, cat, client, max_attempts=3)
+    ref_engine = AisqlEngine(cat, make_simulated_client(seed=SEED),
+                             executor=PART_CFG)
+    corpus = question_corpus(model, 20, seed=1)
+    compiled = 0
+    for question, truth in corpus:
+        sql = op.compile(question)       # NL2SQLError would fail the test
+        compiled += 1
+        got = canon_rows(ref_engine.sql(sql))
+        want = canon_rows(ref_engine.sql(truth.sql))
+        assert got == want, (question, sql)
+    assert compiled == len(corpus)
+
+
+def test_nl2sql_rejects_invalid_sql_with_validation_error():
+    cat = small_catalog()
+    model = default_model(cat)
+    op = NL2SQLOperator(model, cat, make_simulated_client(seed=SEED))
+    with pytest.raises(SemanticValidationError):
+        op.validate_sql("SELECT ghost_col FROM t")
+    with pytest.raises(SyntaxError):
+        op.validate_sql("SELECT id FROM t LIMIT x")
+
+
+def test_nl2sql_over_http_executes_grounded_query():
+    cat = small_catalog()
+    model = default_model(cat)
+    op = NL2SQLOperator(model, cat, make_simulated_client(seed=SEED),
+                        max_attempts=3)
+    with serving_engine(cat) as eng, \
+            AisqlHttpServer(eng, nl2sql=op) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        out = client.nl2sql("count all rows", execute=True)
+        assert out["rows"] == [[len(cat.tables["t"].column("id"))]]
+        # the semantic model is served too
+        served = client.semantic_model()
+        assert [t["name"] for t in served["tables"]] == ["t"]
+
+
+def test_nl2sql_unanswerable_question_is_422():
+    cat = small_catalog()
+    # an operator whose model's only example is a broken query cannot
+    # compile anything: the simulator answers with it verbatim and the
+    # validation loop rejects every attempt
+    broken = SemanticModel.from_catalog(cat)
+    broken.verified = [VerifiedQuery(
+        "bad", "show the ghost data", "SELECT ghost FROM t")]
+    op = NL2SQLOperator(broken, cat, make_simulated_client(seed=SEED),
+                        max_attempts=2, validate_model=False)
+    with serving_engine(cat) as eng, \
+            AisqlHttpServer(eng, nl2sql=op) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        with pytest.raises(HttpStatusError) as exc:
+            client.nl2sql("show the ghost data")
+        assert exc.value.status == 422
+        assert exc.value.code == "nl2sql_rejected"
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_wire_report_matches_library_report():
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        client.query("SELECT COUNT(*) FROM t")
+        eng.drain()
+        wire = client.report()
+        lib = eng.report()
+    assert wire["queries"] == lib.queries
+    assert wire["total_credits"] == pytest.approx(lib.total_credits)
+    assert set(wire["tenants"]) == set(lib.tenants)
+
+
+def test_error_contract_statuses_are_wellformed():
+    for code, (status, desc) in ERROR_CONTRACT.items():
+        assert 400 <= status <= 599, code
+        assert desc
+
+
+def test_replay_over_http_matches_direct_replay():
+    """`tools/replay.py --http` is observationally the direct replay:
+    identical per-tenant row digests (same canonicalization) and
+    conserved total credits on a fault-free trace."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+    from replay import (TraceConfig, build_catalog, generate_trace,
+                        replay, replay_http)
+    cfg = TraceConfig(seed=11, sessions=30, tenants=2, rows=256)
+    trace = generate_trace(cfg)
+    direct = replay(trace, build_catalog(cfg), workers=4, seed=11)
+    wire = replay_http(trace, build_catalog(cfg), workers=4, seed=11)
+    assert direct.failed_queries == wire.failed_queries == 0
+    for t in direct.per_tenant:
+        assert direct.per_tenant[t].rows_sha256 == \
+            wire.per_tenant[t].rows_sha256, t
+    assert abs(direct.total_credits - wire.total_credits) < 1e-9

@@ -300,6 +300,18 @@ def _digest_rows(h: "hashlib._Hash", table: Table) -> None:
     h.update(b"\x1e")
 
 
+def _digest_wire_rows(h: "hashlib._Hash", cols: List[str],
+                      rows: List[list]) -> None:
+    """`_digest_rows` over the HTTP JSON row encoding.  JSON round-trips
+    every scalar the serving layer emits (int/float/bool/str) to a value
+    whose ``str()`` matches the numpy original, so a query digested here
+    equals the same query digested from the library-call `Table`."""
+    order = sorted(range(len(cols)), key=lambda i: cols[i])
+    canon = sorted(tuple(str(r[i]) for i in order) for r in rows)
+    h.update(repr(canon).encode())
+    h.update(b"\x1e")
+
+
 def replay(trace: List[TraceEvent], catalog: Catalog, *,
            workers: int = 4, seed: int = 0,
            fault_rate: float = 0.0, timeout_rate: float = 0.0,
@@ -344,47 +356,131 @@ def replay(trace: List[TraceEvent], catalog: Catalog, *,
                 h.update(b"\x1e")
             else:
                 _digest_rows(h, ticket.result())
-        rep = eng.report()
-        faults = timeouts = 0
-        seen = set()
-        for reps in eng.scheduler._replicas.values():
-            for b in reps:
-                if id(b) not in seen and hasattr(b, "faults_injected"):
-                    faults += b.faults_injected
-                    timeouts += b.timeouts_injected
-                    seen.add(id(b))
-        per_tenant = {}
-        for name in sorted(digests):
-            tr = rep.tenants[name]
-            per_tenant[name] = TenantOutcome(
-                queries=tr.queries,
-                failed=failed_by_tenant.get(name, 0),
-                rows_sha256=digests[name].hexdigest(),
-                credits=tr.credits_spent,
-                dispatched_calls=tr.dispatched_calls)
-        submitted = max(rep.submitted_requests, 1)
-        return ReplayReport(
-            queries=len(trace),
-            sessions=len({ev.session for ev in trace}),
-            tenants=len(digests),
-            wall_s=wall,
-            qps=len(trace) / wall if wall > 0 else 0.0,
-            latency_p50_s=rep.latency_p50_s,
-            latency_p95_s=rep.latency_p95_s,
-            queue_p95_s=rep.queue_wait_p95_s,
-            total_credits=rep.total_credits,
-            backend_credits=rep.backend_credits,
-            submitted_requests=rep.submitted_requests,
-            dispatched_requests=rep.dispatched_requests,
-            dedup_hit_rate=rep.dedup_hits / submitted,
-            cross_query_hit_rate=rep.cross_query_hits / submitted,
-            retries=rep.retries,
-            scheduler_retries=rep.scheduler_retries,
-            faults_injected=faults,
-            timeouts_injected=timeouts,
-            failed_queries=sum(failed_by_tenant.values()),
-            per_tenant=per_tenant,
-            storage=rep.storage)
+        return _assemble_report(trace, digests, failed_by_tenant, eng, wall)
+    finally:
+        eng.close()
+
+
+def _assemble_report(trace: List[TraceEvent],
+                     digests: Dict[str, "hashlib._Hash"],
+                     failed_by_tenant: Dict[str, int],
+                     eng: ServingEngine, wall: float) -> ReplayReport:
+    rep = eng.report()
+    faults = timeouts = 0
+    seen = set()
+    for reps in eng.scheduler._replicas.values():
+        for b in reps:
+            if id(b) not in seen and hasattr(b, "faults_injected"):
+                faults += b.faults_injected
+                timeouts += b.timeouts_injected
+                seen.add(id(b))
+    per_tenant = {}
+    for name in sorted(digests):
+        tr = rep.tenants[name]
+        per_tenant[name] = TenantOutcome(
+            queries=tr.queries,
+            failed=failed_by_tenant.get(name, 0),
+            rows_sha256=digests[name].hexdigest(),
+            credits=tr.credits_spent,
+            dispatched_calls=tr.dispatched_calls)
+    submitted = max(rep.submitted_requests, 1)
+    return ReplayReport(
+        queries=len(trace),
+        sessions=len({ev.session for ev in trace}),
+        tenants=len(digests),
+        wall_s=wall,
+        qps=len(trace) / wall if wall > 0 else 0.0,
+        latency_p50_s=rep.latency_p50_s,
+        latency_p95_s=rep.latency_p95_s,
+        queue_p95_s=rep.queue_wait_p95_s,
+        total_credits=rep.total_credits,
+        backend_credits=rep.backend_credits,
+        submitted_requests=rep.submitted_requests,
+        dispatched_requests=rep.dispatched_requests,
+        dedup_hit_rate=rep.dedup_hits / submitted,
+        cross_query_hit_rate=rep.cross_query_hits / submitted,
+        retries=rep.retries,
+        scheduler_retries=rep.scheduler_retries,
+        faults_injected=faults,
+        timeouts_injected=timeouts,
+        failed_queries=sum(failed_by_tenant.values()),
+        per_tenant=per_tenant,
+        storage=rep.storage)
+
+
+def replay_http(trace: List[TraceEvent], catalog: Catalog, *,
+                workers: int = 4, seed: int = 0,
+                fault_rate: float = 0.0, timeout_rate: float = 0.0,
+                fault_burst_every: int = 0, fault_burst_len: int = 0,
+                replicas: int = 1, partition_rows: int = 256,
+                max_retries: int = 6, cache_size: int = 1 << 17,
+                semindex=None) -> ReplayReport:
+    """`replay`, but over the wire: boots `AisqlHttpServer` on the same
+    pinned engine configuration and drives each tenant's slice of the
+    trace in order through a persistent authenticated HTTP client.  Row
+    digests use the same canonicalization as the direct path, so on a
+    fault-free trace `replay` and `replay_http` report identical
+    per-tenant ``rows_sha256`` and conserved credits."""
+    import threading
+
+    from repro.serve import AisqlHttpClient, AisqlHttpServer, HttpConfig
+
+    cfg = ServingConfig(
+        workers=workers,
+        pipeline=PipelineConfig(cache_size=cache_size, cache_ttl_s=None,
+                                max_retries=max_retries,
+                                retry_backoff_s=0.001,
+                                retry_backoff_cap_s=0.05),
+        executor=ExecConfig(partitioned=True,
+                            partition_rows=partition_rows,
+                            partition_lookahead=1,
+                            adaptive_reorder=False, pilot_rows=0))
+    eng = ServingEngine.simulated(
+        catalog, seed=seed, fault_rate=fault_rate,
+        timeout_rate=timeout_rate, fault_burst_every=fault_burst_every,
+        fault_burst_len=fault_burst_len, replicas=replicas, cfg=cfg,
+        semindex=semindex)
+    tenant_names = sorted({ev.tenant for ev in trace})
+    by_tenant: Dict[str, List[TraceEvent]] = {t: [] for t in tenant_names}
+    for ev in trace:
+        by_tenant[ev.tenant].append(ev)
+    http_cfg = HttpConfig(tokens={f"tok-{t}": t for t in tenant_names},
+                          throttle=False)
+    digests = {t: hashlib.sha256() for t in tenant_names}
+    failed_by_tenant: Dict[str, int] = {}
+    lock = threading.Lock()
+    try:
+        with AisqlHttpServer(eng, cfg=http_cfg) as srv:
+            def drive(tenant: str) -> None:
+                client = AisqlHttpClient(srv.host, srv.port,
+                                         token=f"tok-{tenant}",
+                                         timeout=300.0)
+                h = digests[tenant]
+                for ev in by_tenant[tenant]:
+                    try:
+                        out = client.query(ev.sql)
+                    except Exception as err:
+                        with lock:
+                            failed_by_tenant[tenant] = \
+                                failed_by_tenant.get(tenant, 0) + 1
+                        code = getattr(err, "code", type(err).__name__)
+                        h.update(f"ERR:{code}".encode())
+                        h.update(b"\x1e")
+                    else:
+                        _digest_wire_rows(h, out["columns"], out["rows"])
+                client.close()
+
+            t0 = time.perf_counter()
+            threads = [threading.Thread(target=drive, args=(t,))
+                       for t in tenant_names]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            eng.drain()
+            wall = time.perf_counter() - t0
+            return _assemble_report(trace, digests, failed_by_tenant,
+                                    eng, wall)
     finally:
         eng.close()
 
@@ -401,15 +497,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--burst-every", type=int, default=0)
     ap.add_argument("--burst-len", type=int, default=0)
     ap.add_argument("--budget-bytes", type=int, default=None)
+    ap.add_argument("--http", action="store_true",
+                    help="drive the trace over the HTTP front-end "
+                         "instead of direct ServingEngine submission")
     args = ap.parse_args(argv)
     cfg = TraceConfig(seed=args.seed, sessions=args.sessions,
                       tenants=args.tenants, rows=args.rows)
     trace = generate_trace(cfg)
     catalog = build_catalog(cfg, budget_bytes=args.budget_bytes)
-    rep = replay(trace, catalog, workers=args.workers, seed=args.seed,
-                 fault_rate=args.fault_rate,
-                 fault_burst_every=args.burst_every,
-                 fault_burst_len=args.burst_len)
+    fn = replay_http if args.http else replay
+    rep = fn(trace, catalog, workers=args.workers, seed=args.seed,
+             fault_rate=args.fault_rate,
+             fault_burst_every=args.burst_every,
+             fault_burst_len=args.burst_len)
     print(rep.render())
     return 0
 
