@@ -128,6 +128,33 @@ class TableStats:
                    avg_len={c: t.avg_len(c) for c in t.column_names})
 
 
+class UnknownTableError(KeyError):
+    """A query referenced a table the `Catalog` does not have.
+
+    A ``KeyError`` subclass so every pre-existing ``except KeyError``
+    around catalog lookups still works, but distinct enough that the
+    serving layer maps *only* this — not every internal ``KeyError``
+    bug — onto its client-side ``unknown_table`` error."""
+
+    def __init__(self, name: str, known: "Dict[str, Table]"):
+        super().__init__(name)
+        self.table = name
+        self.known = sorted(known)
+
+    def __str__(self) -> str:
+        return f"unknown table {self.table!r} (catalog has: {self.known})"
+
+
+class _StatsDict(Dict[str, "TableStats"]):
+    """Table-name -> `TableStats` that reports a miss as
+    `UnknownTableError` (the first catalog lookup a query plan makes is
+    usually ``catalog.stats[...]``, so the miss must carry the same
+    client-mappable type as `Catalog.table`)."""
+
+    def __missing__(self, name: str) -> "TableStats":
+        raise UnknownTableError(name, self)
+
+
 @dataclasses.dataclass
 class Catalog:
     """The engine's table registry.
@@ -140,11 +167,16 @@ class Catalog:
     tables: Dict[str, Table]
 
     def __post_init__(self):
-        self.stats = {k: TableStats.of(v) for k, v in self.tables.items()}
+        self.stats = _StatsDict(
+            (k, TableStats.of(v)) for k, v in self.tables.items())
 
     def table(self, name: str) -> Table:
-        """Return the registered `Table`; raises ``KeyError`` if absent."""
-        return self.tables[name]
+        """Return the registered `Table`; raises `UnknownTableError`
+        (a ``KeyError``) if absent."""
+        try:
+            return self.tables[name]
+        except KeyError:
+            raise UnknownTableError(name, self.tables) from None
 
 
 class CostModel:

@@ -24,6 +24,23 @@ from typing import Any, List, Optional, Tuple
 from repro.core import expr as E
 
 
+def _locate(source: str, pos: int) -> Tuple[int, int, str]:
+    """``(lineno, col, line)`` for a 0-based character offset, clamped
+    to the last line: an offset at end-of-source in a newline-terminated
+    query (e.g. ``'SELECT a FROM\\n'``) lands one line past
+    ``splitlines()``, so point just past the last line instead of
+    indexing out of range."""
+    lines = source.splitlines() or [""]
+    prefix = source[:pos]
+    lineno = prefix.count("\n") + 1
+    col = pos - (prefix.rfind("\n") + 1)
+    if lineno > len(lines):
+        lineno = len(lines)
+        col = len(lines[-1])
+    line = lines[lineno - 1]
+    return lineno, min(col, len(line)), line
+
+
 class ParseError(SyntaxError):
     """Structured parse failure: message + source position + offending
     token.
@@ -51,10 +68,7 @@ class ParseError(SyntaxError):
         self.token = token
         self.source = source
         if source is not None and pos is not None:
-            prefix = source[:pos]
-            lineno = prefix.count("\n") + 1
-            col = pos - (prefix.rfind("\n") + 1)
-            line = (source.splitlines() or [""])[lineno - 1]
+            lineno, col, line = _locate(source, pos)
             super().__init__(message, (None, lineno, col + 1, line))
         else:
             super().__init__(message)
@@ -64,10 +78,7 @@ class ParseError(SyntaxError):
         under the failure position; empty when no position is known."""
         if self.source is None or self.pos is None:
             return ""
-        prefix = self.source[:self.pos]
-        lineno = prefix.count("\n") + 1
-        col = self.pos - (prefix.rfind("\n") + 1)
-        line = (self.source.splitlines() or [""])[lineno - 1]
+        _, col, line = _locate(self.source, self.pos)
         return f"{line}\n{' ' * col}^"
 
     def __str__(self) -> str:

@@ -45,6 +45,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.cost import UnknownTableError
 from repro.core.serving import AdmissionError, ServingEngine
 from repro.core.sqlparse import ParseError
 from repro.inference.pipeline import RequestFailed
@@ -118,8 +119,10 @@ def error_for(exc: Exception, *,
     if isinstance(exc, RequestFailed):
         return HttpError("backend_unavailable", str(exc),
                          retry_after_s=default_retry_s)
-    if isinstance(exc, KeyError):
-        return HttpError("unknown_table", f"unknown table: {exc}")
+    if isinstance(exc, UnknownTableError):
+        # only the catalog's own miss is client error; a bare KeyError
+        # from anywhere else is a server bug and falls through to 500
+        return HttpError("unknown_table", str(exc))
     if isinstance(exc, TimeoutError):
         return HttpError("timeout", str(exc))
     if isinstance(exc, RuntimeError) and "closed" in str(exc):
@@ -320,6 +323,10 @@ class _Handler(BaseHTTPRequestHandler):
 
     # -- chunked NDJSON ------------------------------------------------
     def _begin_stream(self) -> None:
+        # past this point the status line is on the wire: failures must
+        # become a terminal {"kind": "error"} chunk, never a second
+        # send_response (see do_POST)
+        self._streaming = True
         self.send_response(200)
         self.send_header("Content-Type", "application/x-ndjson")
         self.send_header("Transfer-Encoding", "chunked")
@@ -357,6 +364,7 @@ class _Handler(BaseHTTPRequestHandler):
                 e, default_retry_s=self.app.cfg.default_retry_after_s))
 
     def do_POST(self) -> None:  # noqa: N802
+        self._streaming = False
         try:
             body = self._body()
             tenant = self.app.resolve_tenant(
@@ -369,8 +377,20 @@ class _Handler(BaseHTTPRequestHandler):
                 raise HttpError("not_found",
                                 f"unknown endpoint {self.path!r}")
         except Exception as e:
-            self._send_error_obj(error_for(
-                e, default_retry_s=self.app.cfg.default_retry_after_s))
+            err = error_for(
+                e, default_retry_s=self.app.cfg.default_retry_after_s)
+            if not self._streaming:
+                self._send_error_obj(err)
+                return
+            # the chunked response already started: a second status line
+            # would corrupt the keep-alive framing, so finish the body
+            # with a terminal error event instead — and if even that
+            # write fails, drop the connection
+            try:
+                self._chunk({"kind": "error", **err.body()["error"]})
+                self._end_stream()
+            except Exception:
+                self.close_connection = True
 
     # -- endpoints -----------------------------------------------------
     def _handle_query(self, tenant: str, body: Dict[str, Any]) -> None:
@@ -436,18 +456,14 @@ class _Handler(BaseHTTPRequestHandler):
         for row in rows:
             self._chunk({"kind": "row", "values": row})
             count += 1
-        try:
-            for batch in gen:
-                _, rows = table_rows(batch)
-                for row in rows:
-                    self._chunk({"kind": "row", "values": row})
-                    count += 1
-        except Exception as e:
-            err = error_for(
-                e, default_retry_s=app.cfg.default_retry_after_s)
-            self._chunk({"kind": "error", **err.body()["error"]})
-            self._end_stream()
-            return
+        # failures from here on (batch iteration, chunk writes, the
+        # summary) propagate to do_POST, which sees the started stream
+        # and emits a terminal {"kind": "error"} chunk
+        for batch in gen:
+            _, rows = table_rows(batch)
+            for row in rows:
+                self._chunk({"kind": "row", "values": row})
+                count += 1
         self._emit_summary(ticket, count)
         self._end_stream()
 
@@ -503,8 +519,10 @@ class AisqlHttpClient:
 
     One `http.client.HTTPConnection` per client instance (use one
     client per thread).  429 responses are retried up to
-    ``max_retries`` times honouring ``Retry-After``; everything else
-    non-2xx raises `HttpStatusError`."""
+    ``max_retries`` times honouring ``Retry-After``; connection
+    failures are retried for GETs only (the server may already have
+    executed a POST whose response was lost); everything else non-2xx
+    raises `HttpStatusError`."""
 
     def __init__(self, host: str, port: int, *,
                  token: Optional[str] = None, tenant: Optional[str] = None,
@@ -565,7 +583,10 @@ class AisqlHttpClient:
                 resp = conn.getresponse()
             except (ConnectionError, http.client.HTTPException, OSError):
                 self.close()
-                if attempt >= self.max_retries:
+                # only GETs are safe to resend: a POST the server may
+                # already have executed (response lost on the wire)
+                # would double-run the query and double-bill the tenant
+                if method != "GET" or attempt >= self.max_retries:
                     raise
                 continue
             if resp.status == 429 and attempt < self.max_retries:

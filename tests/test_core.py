@@ -91,6 +91,27 @@ def test_parse_errors_are_structured(sql):
     assert err.message
 
 
+@pytest.mark.parametrize("sql", [
+    "SELECT a FROM\n",
+    "SELECT\n",
+    "SELECT a FROM t WHERE\n",
+    "SELECT a FROM t LIMIT\n\n",
+])
+def test_parse_error_at_trailing_newline(sql):
+    """A truncated query ending in a newline puts the failure offset one
+    line past ``splitlines()``; this used to crash ParseError.__init__
+    with IndexError instead of raising the ParseError."""
+    with pytest.raises(sqlparse.ParseError) as exc:
+        sqlparse.parse(sql)
+    err = exc.value
+    # caret/str must render (clamped to the last line), not crash
+    caret = err.caret()
+    if caret:
+        line, marker = caret.splitlines()
+        assert marker.index("^") <= len(line)
+    assert err.message in str(err)
+
+
 def test_parse_error_caret_marks_position():
     with pytest.raises(sqlparse.ParseError) as exc:
         sqlparse.parse("SELECT a FROM t LIMIT x")

@@ -102,6 +102,33 @@ def test_unknown_table_is_400():
         assert exc.value.code == "unknown_table"
 
 
+def test_truncated_sql_with_trailing_newline_is_400():
+    """A parse failure at the very end of a newline-terminated query
+    used to crash ParseError.__init__ (IndexError) and surface as a
+    500 internal instead of 400 invalid_sql."""
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        for sql in ("SELECT id FROM\n", "SELECT id FROM t WHERE\n"):
+            with pytest.raises(HttpStatusError) as exc:
+                client.query(sql)
+            assert exc.value.status == 400
+            assert exc.value.code == "invalid_sql"
+
+
+def test_internal_keyerror_is_500_not_unknown_table():
+    """Only the catalog's own `UnknownTableError` is a client error;
+    a bare KeyError from engine internals is a server bug (500) and
+    must not leak as unknown_table."""
+    from repro.core.cost import UnknownTableError
+    from repro.serve.http import error_for
+
+    assert error_for(KeyError("internal_state_key")).code == "internal"
+    err = error_for(UnknownTableError("nope", {"t": None}))
+    assert err.code == "unknown_table"
+    assert "nope" in err.message and "t" in err.message
+
+
 def test_budget_exhaustion_is_429():
     cat = small_catalog()
     tenants = {"tiny": TenantPolicy(credit_budget=0.0)}
@@ -233,6 +260,60 @@ def test_stream_error_surfaces_as_status():
         with pytest.raises(HttpStatusError) as exc:
             list(client.query_stream("SELECT id FROM t LIMIT x"))
         assert exc.value.status == 400
+
+
+def test_mid_stream_failure_emits_terminal_error_chunk(monkeypatch):
+    """A failure after the chunked response has started (here: while
+    emitting the summary) must finish the body with a terminal
+    ``{"kind": "error"}`` event — not call send_response again, which
+    would put a second status line inside the chunked body and corrupt
+    the keep-alive framing."""
+    from repro.serve.http import _Handler
+
+    def boom(self, ticket, count):
+        raise RuntimeError("summary exploded")
+
+    monkeypatch.setattr(_Handler, "_emit_summary", boom)
+    cat = small_catalog()
+    with serving_engine(cat) as eng, AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        events = []
+        with pytest.raises(HttpStatusError) as exc:
+            for ev in client.query_stream("SELECT id FROM t"):
+                events.append(ev)
+        assert exc.value.code == "internal"
+        # the rows before the failure were delivered intact
+        assert events and events[0]["kind"] == "schema"
+        assert sum(e["kind"] == "row" for e in events) == 160
+        # and the framing survived: the same keep-alive connection
+        # still serves a well-formed follow-up response
+        monkeypatch.undo()
+        assert client.query("SELECT COUNT(*) FROM t")["row_count"] == 1
+
+
+def test_client_does_not_retry_posts_on_connection_error():
+    """A POST whose connection dies mid-exchange may already have been
+    executed (and billed) server-side; resubmitting it would double-run
+    the query.  Connection errors are only retried for GETs."""
+    attempts = []
+
+    class _DeadConn:
+        def request(self, *a, **k):
+            attempts.append(1)
+            raise ConnectionError("wire died")
+
+        def close(self):
+            pass
+
+    client = AisqlHttpClient("127.0.0.1", 1, max_retries=3)
+    client._connection = lambda: _DeadConn()
+    with pytest.raises(ConnectionError):
+        client.query("SELECT id FROM t")
+    assert len(attempts) == 1            # surfaced, not resubmitted
+    attempts.clear()
+    with pytest.raises(ConnectionError):
+        client.healthz()
+    assert len(attempts) == 4            # GETs retry max_retries times
 
 
 # ---------------------------------------------------------------------------
