@@ -1,0 +1,236 @@
+"""Observability overhead + reconciliation gates.
+
+Three gated claims about the tracing/metrics subsystem (`repro.obs`):
+
+  * **overhead**: a fully-traced replay of the mixed multi-tenant
+    workload stays within 5% wall time of an untraced twin (best-of-N
+    on both sides), and its per-tenant row digests are byte-identical
+    to the untraced run — observation never changes results;
+  * **reconciliation**: summing the ``credits`` / token attrs over
+    every ``dispatch.replica`` span in the trace ring equals the
+    backends' own billing meters to 1e-9 relative — under injected
+    transient faults, because failed attempts carry no credits;
+  * **wire round-trip**: over a real loopback socket, ``/v1/metrics``
+    parses with the minimal Prometheus parser and carries every
+    declared family with samples, ``/v1/trace/<query_id>`` returns the
+    span tree of a query just executed, and the rows that came over
+    the wire from the traced server are byte-identical to an
+    identically-seeded untraced engine's.
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--quick] [--wire-smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from benchmarks.common import fmt_table, save_result
+from repro.obs import (METRIC_FAMILIES, Observability, TickClock,
+                       parse_prometheus_text, walk_spans)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+from replay import (TraceConfig, build_catalog, generate_trace,  # noqa: E402
+                    replay)
+
+SEED = 0
+
+
+def _run(trace_cfg: TraceConfig, *, traced: bool, workers: int,
+         fault_rate: float = 0.0, burst_every: int = 0,
+         burst_len: int = 0):
+    """One replay run; returns ``(ReplayReport, Observability)``."""
+    trace = generate_trace(trace_cfg)
+    catalog = build_catalog(trace_cfg)
+    obs = Observability(enabled=traced, clock=TickClock,
+                        ring_size=len(trace))
+    rep = replay(trace, catalog, workers=workers, seed=trace_cfg.seed,
+                 fault_rate=fault_rate, fault_burst_every=burst_every,
+                 fault_burst_len=burst_len, obs=obs)
+    return rep, obs
+
+
+# ---------------------------------------------------------------------------
+# 1) overhead: traced vs untraced twins, best-of-N
+# ---------------------------------------------------------------------------
+
+
+def bench_overhead(trace_cfg: TraceConfig, *, iters: int,
+                   workers: int) -> Dict[str, Any]:
+    runs: Dict[bool, List[float]] = {False: [], True: []}
+    digests: Dict[bool, Dict[str, str]] = {}
+    for traced in (False, True):
+        for _ in range(iters):
+            rep, _obs = _run(trace_cfg, traced=traced, workers=workers)
+            runs[traced].append(rep.wall_s)
+            digests[traced] = {t: o.rows_sha256
+                               for t, o in rep.per_tenant.items()}
+    best_off, best_on = min(runs[False]), min(runs[True])
+    overhead = best_on / best_off - 1.0
+    rows_identical = digests[False] == digests[True]
+    print(fmt_table([
+        {"mode": "untraced", "best_wall_s": f"{best_off:.3f}",
+         "runs": iters},
+        {"mode": "traced", "best_wall_s": f"{best_on:.3f}",
+         "runs": iters},
+    ], ["mode", "best_wall_s", "runs"]))
+    print(f"tracing overhead: {overhead:+.2%} (gate < 5%); "
+          f"rows identical: {rows_identical}")
+    assert rows_identical, \
+        "tracing changed result rows — observation must be passive"
+    assert overhead < 0.05, \
+        f"tracing overhead {overhead:.2%} exceeds the 5% gate"
+    return {"overhead_frac": overhead, "untraced_best_s": best_off,
+            "traced_best_s": best_on, "rows_identical": rows_identical}
+
+
+# ---------------------------------------------------------------------------
+# 2) reconciliation: replica-span sums vs the billing meters
+# ---------------------------------------------------------------------------
+
+
+def bench_reconcile(trace_cfg: TraceConfig, *,
+                    workers: int) -> Dict[str, Any]:
+    rep, obs = _run(trace_cfg, traced=True, workers=workers,
+                    fault_rate=0.05, burst_every=40, burst_len=4)
+    span_credits = 0.0
+    span_tokens = 0
+    attempts = ok = 0
+    for qid in obs.ring.ids():
+        for span in walk_spans(obs.ring.get(qid)):
+            if span["kind"] != "dispatch.replica":
+                continue
+            attempts += 1
+            if span["attrs"].get("outcome") == "ok":
+                ok += 1
+                span_credits += span["attrs"]["credits"]
+                span_tokens += (span["attrs"]["tokens_in"]
+                                + span["attrs"]["tokens_out"])
+    backend = rep.backend_credits
+    assert backend is not None and backend > 0
+    rel = abs(span_credits - backend) / backend
+    # independent token path: the scheduler's registry families
+    reg_tokens = sum(
+        s["value"] for s in obs.registry.snapshot()
+        ["aisql_ai_tokens_total"]["series"])
+    print(f"replica spans: {attempts} attempts, {ok} ok, "
+          f"{attempts - ok} faulted ({rep.scheduler_retries} scheduler "
+          f"retries, {rep.retries} pipeline retries)")
+    print(f"credits: spans {span_credits:.9g} vs backends "
+          f"{backend:.9g} (rel err {rel:.2e}, gate 1e-9)")
+    print(f"tokens: spans {span_tokens} vs registry {int(reg_tokens)}")
+    assert rel <= 1e-9, \
+        f"span credit sum diverges from backend meter: rel err {rel:.2e}"
+    assert span_tokens == int(reg_tokens), \
+        "span token sum diverges from the registry token counters"
+    return {"span_credits": span_credits, "backend_credits": backend,
+            "credit_rel_err": rel, "replica_attempts": attempts,
+            "replica_ok": ok, "span_tokens": span_tokens}
+
+
+# ---------------------------------------------------------------------------
+# 3) wire round-trip: /v1/metrics + /v1/trace + row fidelity
+# ---------------------------------------------------------------------------
+
+
+def bench_wire(trace_cfg: TraceConfig) -> Dict[str, Any]:
+    from repro.core import ServingEngine
+    from repro.serve import AisqlHttpClient, AisqlHttpServer
+
+    trace = generate_trace(trace_cfg)
+    # traced engine behind a real socket
+    obs = Observability(clock=TickClock, ring_size=len(trace))
+    from repro.core import ServingConfig
+    eng = ServingEngine.simulated(build_catalog(trace_cfg),
+                                  seed=trace_cfg.seed,
+                                  cfg=ServingConfig(obs=obs))
+    wire_rows: Dict[int, str] = {}
+    qids: List[str] = []
+    with AisqlHttpServer(eng) as srv:
+        client = AisqlHttpClient(srv.host, srv.port)
+        for i, ev in enumerate(trace):
+            out = client.query(ev.sql)
+            wire_rows[i] = json.dumps([out["columns"], out["rows"]],
+                                      sort_keys=True)
+            qids.append(out["query_id"])
+        # metrics: must parse, and every declared family must be present
+        families = parse_prometheus_text(client.metrics())
+        missing = [f for f in METRIC_FAMILIES
+                   if not any(k == f or k.startswith(f + "_")
+                              for k in families)]
+        # trace: the last query's span tree is still in the ring
+        tree = client.trace(qids[-1])["trace"]
+        client.close()
+    eng.close()
+    assert not missing, f"families absent from /v1/metrics: {missing}"
+    assert tree["kind"] == "query" and tree["children"], \
+        "/v1/trace returned a malformed span tree"
+    # untraced twin, identical seed, direct library execution
+    twin = ServingEngine.simulated(
+        build_catalog(trace_cfg), seed=trace_cfg.seed,
+        cfg=ServingConfig(obs=Observability(enabled=False)))
+    from repro.serve.http import table_rows
+    identical = 0
+    try:
+        for i, ev in enumerate(trace):
+            table = twin.submit(ev.tenant, ev.sql).result(timeout=120)
+            cols, rows = table_rows(table)
+            if json.dumps([cols, rows], sort_keys=True) == wire_rows[i]:
+                identical += 1
+    finally:
+        twin.close()
+    print(f"wire: {len(trace)} queries, {identical} row-identical to "
+          f"the untraced twin; {len(families)} metric series names, "
+          f"trace fetched for {qids[-1]}")
+    assert identical == len(trace), \
+        f"only {identical}/{len(trace)} wire results matched the twin"
+    return {"wire_queries": len(trace), "wire_identical": identical,
+            "metric_names": len(families)}
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload, fewer overhead iterations")
+    ap.add_argument("--wire-smoke", action="store_true",
+                    help="run only the wire round-trip gate (CI smoke)")
+    args = ap.parse_args(argv)
+
+    wire_cfg = TraceConfig(seed=SEED, sessions=12, tenants=2, rows=512,
+                           queries_per_session=(1, 2))
+    if args.wire_smoke:
+        payload: Dict[str, Any] = {"mode": "wire-smoke"}
+        payload.update(bench_wire(wire_cfg))
+        save_result("bench_obs", payload)
+        return 0
+
+    if args.quick:
+        load_cfg = TraceConfig(seed=SEED, sessions=120, tenants=4,
+                               rows=1024)
+        iters = 2
+    else:
+        load_cfg = TraceConfig(seed=SEED, sessions=400, tenants=8,
+                               rows=2048)
+        iters = 3
+
+    payload = {"mode": "quick" if args.quick else "full",
+               "sessions": load_cfg.sessions}
+    print("== overhead: traced vs untraced twins ==")
+    payload.update(bench_overhead(load_cfg, iters=iters, workers=4))
+    print("\n== reconciliation: replica spans vs billing meters ==")
+    payload.update(bench_reconcile(load_cfg, workers=4))
+    print("\n== wire round-trip over a loopback socket ==")
+    payload.update(bench_wire(wire_cfg))
+    path = save_result("bench_obs", payload)
+    print(f"\nresults -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

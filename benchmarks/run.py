@@ -103,10 +103,12 @@ def main(argv=None) -> int:
          lambda: bench_http.main(["--quick"])),
     ]
     if not args.skip_serving:
-        from benchmarks import bench_backend, bench_serving
+        from benchmarks import bench_backend, bench_obs, bench_serving
         benches.append(("S2 serving throughput", bench_serving.main))
         benches.append(("S2 decode backend: continuous vs static batching",
                         lambda: bench_backend.main(["--quick"])))
+        benches.append(("observability: overhead + billing reconciliation",
+                        lambda: bench_obs.main(["--quick"])))
 
     t0 = time.perf_counter()
     for name, fn in benches:

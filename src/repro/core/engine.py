@@ -27,6 +27,7 @@ from repro.core.executor import ExecConfig, Executor
 from repro.core.optimizer import Optimizer, OptimizerConfig
 from repro.core.stats import StatsStore
 from repro.inference.api import CortexClient
+from repro.obs.trace import NOOP, activate, critical_path
 from repro.tables.table import Table
 
 
@@ -91,6 +92,11 @@ class QueryReport:
     # plan-memo telemetry: hit flag, optimizer cost races actually run
     # (zero on a hit), memo entry count; None when the memo is disabled
     memo: Optional[Dict[str, Any]] = None
+    # span-tree dict (parse/optimize/execute/dispatch hierarchy with
+    # per-span rows/tokens/credits attributes); None unless the engine
+    # was built with a tracing-enabled Observability — see docs/
+    # observability.md for the span taxonomy and export formats
+    trace: Optional[Dict[str, Any]] = None
 
     def explain_analyze(self) -> str:
         """EXPLAIN ANALYZE-style rendering: the optimized plan followed
@@ -151,6 +157,8 @@ class QueryReport:
                 f"-- plan-memo: {'hit' if m['hit'] else 'miss'}, "
                 f"{m['cost_races']} cost race(s) run, "
                 f"{m['entries']} plan(s) memoized")
+        if self.trace:
+            lines.append("-- " + critical_path(self.trace))
         return "\n".join(lines)
 
 
@@ -189,7 +197,8 @@ class AisqlEngine:
                  stats: Optional[StatsStore] = None,
                  stats_path: Optional[str] = None,
                  semindex=None,
-                 semindex_path: Optional[str] = None):
+                 semindex_path: Optional[str] = None,
+                 obs=None):
         from repro.semindex import SemanticIndexManager, SemIndexConfig
         self.catalog = catalog
         self.client = client
@@ -222,6 +231,11 @@ class AisqlEngine:
                              stats=self.stats, semindex=self.semindex)
         # keep the planner's TopK pricing on the path the runtime takes
         self.cost.topk_prefilter = self.exec.cfg.topk_prefilter
+        # an `Observability` (repro.obs): span tracing for every sql()
+        # call plus the metrics registry the executor records into.
+        # None (default) keeps the no-op fast path everywhere.
+        self.obs = obs
+        self.exec.obs = obs
         self.last_report: Optional[QueryReport] = None
 
     # ------------------------------------------------------------------
@@ -343,27 +357,47 @@ class AisqlEngine:
         With ``on_batch`` (a callable taking a `Table`), incremental
         result batches are delivered as the executor produces them —
         the returned table and all telemetry are unchanged."""
+        obs = self.obs
+        tr = obs.tracer() if obs is not None and obs.enabled else NOOP
         before = self.client.snapshot()
         t0 = time.perf_counter()
-        node = self.plan(sql)
-        # estimates are frozen pre-execution so est-vs-actual is honest
-        est_cost = self.cost.est_llm_cost(node)
-        operators = self._collect_estimates(node)
-        try:
-            if on_batch is not None:
-                out = self.exec.execute_stream(node, on_batch)
-            else:
-                out = self.exec.execute(node)
-        except Exception:
-            # a failed query must not leave queued requests behind: a
-            # later barrier (possibly another session's) would dispatch
-            # and bill them on behalf of a query that produced nothing
-            if self.client.pipeline is not None:
-                self.client.cancel_queued()
-            raise
-        self.client.flush()        # drain any still-queued pipeline work
+        with activate(tr), tr.span("query", kind="query") as qsp:
+            with tr.span("parse", kind="parse"):
+                ast = P.build_plan(sqlparse.parse(sql))
+            with tr.span("optimize", kind="optimize") as osp:
+                node = self.opt.optimize(ast)
+                if tr.enabled:
+                    for line in self.opt.trace:
+                        tr.event("optimize.rewrite", decision=line)
+                    osp.set(memo_hit=getattr(self.opt, "memo_hit", False),
+                            cost_races=getattr(self.opt, "cost_races", 0),
+                            rewrites=len(self.opt.trace))
+            # estimates are frozen pre-execution so est-vs-actual is
+            # honest
+            est_cost = self.cost.est_llm_cost(node)
+            operators = self._collect_estimates(node)
+            with tr.span("execute", kind="execute") as esp:
+                try:
+                    if on_batch is not None:
+                        out = self.exec.execute_stream(node, on_batch)
+                    else:
+                        out = self.exec.execute(node)
+                except Exception:
+                    # a failed query must not leave queued requests
+                    # behind: a later barrier (possibly another
+                    # session's) would dispatch and bill them on behalf
+                    # of a query that produced nothing
+                    if self.client.pipeline is not None:
+                        self.client.cancel_queued()
+                    raise
+                # drain any still-queued pipeline work
+                self.client.flush()
+                esp.set(rows_out=out.num_rows)
+            delta = self.client.meter_delta(before)
+            if tr.enabled:
+                qsp.set(rows_out=out.num_rows, ai_calls=delta["ai_calls"],
+                        credits=delta["ai_credits"])
         dt = time.perf_counter() - t0
-        delta = self.client.meter_delta(before)
         self._fill_actuals(operators)
         pipe = delta.get("pipeline")
         if pipe and pipe.get("submitted"):
@@ -384,7 +418,8 @@ class AisqlEngine:
             pilot=self.exec.pilot_telemetry,
             partitions=self.exec.partition_telemetry,
             semindex=self.exec.index_telemetry,
-            memo=memo_info)
+            memo=memo_info,
+            trace=tr.to_dict() if tr.enabled else None)
         if self.stats_path is not None:
             self.stats.save(self.stats_path)
         if self.semindex_path is not None and self.semindex is not None:

@@ -83,6 +83,7 @@ from repro.core.stats import (StatsStore, index_join_fingerprint,
 from repro.inference.api import CortexClient
 from repro.inference.backend import CLASSIFY, COMPLETE, SCORE, Request
 from repro.inference.pipeline import ResultFuture
+from repro.obs.trace import active_tracer
 from repro.tables.chunked import ChunkedTable
 from repro.tables.table import Table, _hash_join_indices
 
@@ -414,6 +415,9 @@ class Executor:
         # incremental-result hook: when set, `_partition_pull` forwards
         # each partition's accepted row indices here as they survive
         self._stream_sink: Optional[Callable[[np.ndarray], None]] = None
+        # an `Observability` for the metrics registry (set by the owning
+        # engine); span tracing rides the thread-local active tracer
+        self.obs = None
 
     @property
     def pipelined(self) -> bool:
@@ -649,47 +653,55 @@ class Executor:
         known: Dict[str, Dict[int, bool]] = {}
         n_sampled = 0
         if cold:
-            k = min(cfg.pilot_rows, n)
-            idx = np.unique(np.linspace(0, n - 1, k).astype(np.int64))
-            n_sampled = int(len(idx))
-            # submit every pilot batch before awaiting any, so the
-            # pipeline coalesces across predicates
-            c0 = self.client.ai_credits
-            handles = [(p, SemanticOp.from_filter(
-                p, table, idx, self._filter_model(p)).submit(self.client))
-                for p in cold]
-            per_pred = []
-            for pred, handle in handles:
-                results = handle.results()
-                passes = [r.score >= 0.5 for r in results]
-                # raw result credits apportion the dispatch-metered spend
-                # across predicates; dedup-served results cost nothing at
-                # dispatch, so the apportioned total matches real spend
-                per_pred.append((pred, passes,
-                                 float(sum(r.credits for r in results)),
-                                 float(sum(r.latency_s for r in results))))
-            spent = self.client.ai_credits - c0
-            raw_total = sum(raw for _, _, raw, _ in per_pred)
-            scale = spent / raw_total if raw_total > 0 else 0.0
-            for pred, passes, raw, seconds in per_pred:
-                passed = int(sum(passes))
-                credits = raw * scale
-                key = self._pred_key(pred)
-                known[key] = dict(zip(idx.tolist(), passes))
-                st = self._stats_for(pred)
-                st.evaluated += len(idx)
-                st.passed += passed
-                st.credits += credits
-                st.seconds += seconds
-                obs = self.stats.observe_predicate(
-                    self._fp_by_key[key],
-                    evaluated=len(idx), passed=passed,
-                    credits=credits, seconds=seconds)
-                lo, hi = obs.selectivity_ci()
-                sampled[key] = {
-                    "rows": int(len(idx)), "selectivity": obs.selectivity,
-                    "selectivity_ci": (round(lo, 4), round(hi, 4)),
-                    "cost_per_row": obs.cost_per_row}
+            with active_tracer().span("pilot", kind="pilot",
+                                      predicates=len(cold)) as psp:
+                k = min(cfg.pilot_rows, n)
+                idx = np.unique(np.linspace(0, n - 1, k).astype(np.int64))
+                n_sampled = int(len(idx))
+                # submit every pilot batch before awaiting any, so the
+                # pipeline coalesces across predicates
+                c0 = self.client.ai_credits
+                handles = [(p, SemanticOp.from_filter(
+                    p, table, idx,
+                    self._filter_model(p)).submit(self.client))
+                    for p in cold]
+                per_pred = []
+                for pred, handle in handles:
+                    results = handle.results()
+                    passes = [r.score >= 0.5 for r in results]
+                    # raw result credits apportion the dispatch-metered
+                    # spend across predicates; dedup-served results cost
+                    # nothing at dispatch, so the apportioned total
+                    # matches real spend
+                    per_pred.append((pred, passes,
+                                     float(sum(r.credits
+                                               for r in results)),
+                                     float(sum(r.latency_s
+                                               for r in results))))
+                spent = self.client.ai_credits - c0
+                raw_total = sum(raw for _, _, raw, _ in per_pred)
+                scale = spent / raw_total if raw_total > 0 else 0.0
+                psp.set(rows_in=n_sampled, credits=spent)
+                for pred, passes, raw, seconds in per_pred:
+                    passed = int(sum(passes))
+                    credits = raw * scale
+                    key = self._pred_key(pred)
+                    known[key] = dict(zip(idx.tolist(), passes))
+                    st = self._stats_for(pred)
+                    st.evaluated += len(idx)
+                    st.passed += passed
+                    st.credits += credits
+                    st.seconds += seconds
+                    obs = self.stats.observe_predicate(
+                        self._fp_by_key[key],
+                        evaluated=len(idx), passed=passed,
+                        credits=credits, seconds=seconds)
+                    lo, hi = obs.selectivity_ci()
+                    sampled[key] = {
+                        "rows": int(len(idx)),
+                        "selectivity": obs.selectivity,
+                        "selectivity_ci": (round(lo, 4), round(hi, 4)),
+                        "cost_per_row": obs.cost_per_row}
         # re-rank with the stats-informed cost model: observed numbers
         # for piloted/warm AI predicates, static estimates elsewhere
         ranked = sorted(preds, key=self.cost.predicate_rank)
@@ -743,16 +755,25 @@ class Executor:
             out[in_known] = [km[int(r)] for r in rows[in_known]]
         unk = rows[~in_known]
         if len(unk):
-            t0 = time.perf_counter()
-            c0 = self.client.ai_credits
-            res = np.asarray(self._eval_pred(pred, table, unk), dtype=bool)
-            seconds = time.perf_counter() - t0
-            credits = self.client.ai_credits - c0
+            with active_tracer().span(self._pred_key(pred),
+                                      kind="predicate",
+                                      rows_in=int(len(unk))) as sp:
+                t0 = time.perf_counter()
+                c0 = self.client.ai_credits
+                res = np.asarray(self._eval_pred(pred, table, unk),
+                                 dtype=bool)
+                seconds = time.perf_counter() - t0
+                credits = self.client.ai_credits - c0
+                sp.set(rows_out=int(res.sum()), credits=credits)
             st.seconds += seconds
             st.credits += credits
             st.evaluated += len(unk)
             st.passed += int(res.sum())
             if pred.is_ai():
+                if self.obs is not None:
+                    self.obs.registry.histogram(
+                        "aisql_operator_seconds").observe(
+                            seconds, operator=type(pred).__name__)
                 self.stats.observe_predicate(
                     self._fp_by_key[self._pred_key(pred)],
                     evaluated=len(unk), passed=int(res.sum()),
@@ -885,30 +906,34 @@ class Executor:
                "partitions_cancelled": 0, "partition_rows": psize,
                "rows_scanned": 0, "rows_emitted": 0,
                "early_terminated": False, "cancelled_requests": 0}
+        tr = active_tracer()
         try:
             for i, (lo, hi, sid) in enumerate(spans):
                 part = np.arange(lo, hi, dtype=np.int64)
                 tel["rows_scanned"] += int(len(part))
-                self._prefetch_first_pred(table, order, known, spans, i,
-                                          prefetched)
-                mtable, moff = self._span_morsel(table, sid)
-                kloc = known if sid is None else self._localize_known(
-                    known, moff, table.segment_bounds()[sid][1])
-                alive = part
-                for pred in order:
-                    if not len(alive):
-                        break
-                    pf = prefetched.get(lo)
-                    if pf is not None and pf[0] == self._pred_key(pred):
-                        _, rows, handle = prefetched.pop(lo)
-                        res = self._consume_prefetched(pred, rows, handle,
-                                                       alive)
-                    else:
-                        res = self._timed_pred(pred, mtable, alive - moff,
-                                               kloc)
-                    alive = alive[res]
-                # a prefetch this partition never reached (rows died first,
-                # or a reorder changed the chain): withdraw it
+                with tr.span(f"partition[{i}]", kind="partition",
+                             index=i, rows_in=int(len(part))) as msp:
+                    self._prefetch_first_pred(table, order, known, spans,
+                                              i, prefetched)
+                    mtable, moff = self._span_morsel(table, sid)
+                    kloc = known if sid is None else self._localize_known(
+                        known, moff, table.segment_bounds()[sid][1])
+                    alive = part
+                    for pred in order:
+                        if not len(alive):
+                            break
+                        pf = prefetched.get(lo)
+                        if pf is not None and pf[0] == self._pred_key(pred):
+                            _, rows, handle = prefetched.pop(lo)
+                            res = self._consume_prefetched(pred, rows,
+                                                           handle, alive)
+                        else:
+                            res = self._timed_pred(pred, mtable,
+                                                   alive - moff, kloc)
+                        alive = alive[res]
+                    msp.set(rows_out=int(len(alive)))
+                # a prefetch this partition never reached (rows died
+                # first, or a reorder changed the chain): withdraw it
                 leftover = prefetched.pop(lo, None)
                 if leftover is not None:
                     tel["cancelled_requests"] += \
@@ -926,11 +951,14 @@ class Executor:
                         self.reorder_events.append(
                             f"partition[{i}]: reorder -> "
                             + ", ".join(self._pred_key(p) for p in ranked))
+                        tr.event("partition.reorder", index=i)
                         order = ranked
                 if consumer.satisfied:
                     remaining = len(spans) - (i + 1)
                     if remaining or prefetched:
                         tel["early_terminated"] = True
+                        tr.event("partition.early_stop",
+                                 cancelled=remaining)
                     tel["partitions_cancelled"] = remaining
                     break
         except Exception:
@@ -1004,11 +1032,15 @@ class Executor:
         same per-query telemetry and `StatsStore` rows as `_timed_pred`
         (every prefetched row is billed and recorded exactly once)."""
         st = self._stats_for(pred)
-        t0 = time.perf_counter()
-        c0 = self.client.ai_credits
-        passes = handle.scores() >= 0.5
-        seconds = time.perf_counter() - t0
-        credits = self.client.ai_credits - c0
+        with active_tracer().span(self._pred_key(pred), kind="predicate",
+                                  rows_in=int(len(rows)),
+                                  prefetched=True) as sp:
+            t0 = time.perf_counter()
+            c0 = self.client.ai_credits
+            passes = handle.scores() >= 0.5
+            seconds = time.perf_counter() - t0
+            credits = self.client.ai_credits - c0
+            sp.set(rows_out=int(passes.sum()), credits=credits)
         # credits already metered while this (or a sibling) prefetch was
         # being submitted belong to the same predicate: claim them here
         # so learned cost-per-row reflects the real spend
@@ -1514,18 +1546,27 @@ class Executor:
             self._pred_key(pred), SupgItCascade(self.cfg.cascade))
         items = list(zip(op.prompts, op.metadata))
 
+        tr = active_tracer()
+
         def proxy_scores(batch):
+            tr.event("cascade.proxy", rows=len(batch), model=proxy)
             return SemanticOp.scores(
                 [p for p, _ in batch], [m for _, m in batch],
                 proxy).submit(self.client).scores()
 
         def oracle_labels(batch):
+            tr.event("cascade.escalate", rows=len(batch), model=model)
             s = SemanticOp.scores(
                 [p for p, _ in batch], [m for _, m in batch],
                 model).submit(self.client).scores()
             return s >= 0.5
 
-        return cascade.run(items, proxy_scores, oracle_labels)
+        with tr.span(self._pred_key(pred), kind="cascade",
+                     rows_in=int(len(rows)), proxy=proxy,
+                     oracle=model) as csp:
+            out = cascade.run(items, proxy_scores, oracle_labels)
+            csp.set(rows_out=int(np.asarray(out).sum()))
+        return out
 
     # ------------------------------------------------------------------
     # Joins

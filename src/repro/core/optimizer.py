@@ -33,6 +33,7 @@ from repro.core import plan as P
 from repro.core.cost import Catalog, CostDefaults, CostModel
 from repro.core.plan import refs_aliases
 from repro.core.stats import predicate_fingerprint
+from repro.obs.trace import active_tracer
 
 MODES = ("ai_aware", "always_pushdown", "always_pullup", "none")
 
@@ -452,6 +453,8 @@ class Optimizer:
                 drift_cost_rel=self.cfg.memo_drift_cost_rel)
             if entry is not None:
                 self.memo_hit = True
+                active_tracer().event("optimize.memo_hit",
+                                      reuses=entry.hits)
                 self.trace = list(entry.trace)
                 self.trace.append(
                     f"plan-memo: hit ({entry.hits} reuse(s), "
@@ -536,6 +539,7 @@ class Optimizer:
         if isinstance(node, P.Filter):
             if len(node.predicates) > 1:
                 self.cost_races += 1        # rank race over the conjuncts
+                active_tracer().event("optimize.cost_race", race="reorder")
             ordered = tuple(sorted(node.predicates, key=self.rank))
             if ordered != node.predicates:
                 self.trace.append(
@@ -585,6 +589,7 @@ class Optimizer:
     def _best_placement(self, join: P.Join, left, right, movable
                         ) -> List[bool]:
         self.cost_races += 1
+        active_tracer().event("optimize.cost_race", race="placement")
         best_cost = float("inf")
         best: List[bool] = [False] * len(movable)
         for choice in itertools.product([False, True], repeat=len(movable)):
@@ -630,6 +635,7 @@ class Optimizer:
         if project is not None:
             fused = P.Project(fused, project.items)
         self.cost_races += 1
+        active_tracer().event("optimize.cost_race", race="topk-fusion")
         c_orig = self.cost.est_llm_cost(node)
         c_new = self.cost.est_llm_cost(fused)
         self.trace.append(
@@ -685,6 +691,7 @@ class Optimizer:
             if indexed is not None:
                 contenders.append(("index", indexed))
             self.cost_races += 1
+            active_tracer().event("optimize.cost_race", race="join-rewrite")
             priced = [(self.cost.est_llm_cost(n), name, n)
                       for name, n in contenders]
             self.trace.append(

@@ -53,6 +53,8 @@ from repro.core.stats import PredObservation, StatsStore, \
 from repro.inference.api import CortexClient
 from repro.inference.pipeline import PipelineConfig, RequestPipeline
 from repro.inference.scheduler import Scheduler
+from repro.obs import Observability
+from repro.obs.metrics import MetricsRegistry, _HistChild
 from repro.tables.table import Table
 
 
@@ -136,43 +138,79 @@ class TokenBucket:
 
 
 class TenantMeter:
-    """Per-tenant serving accounting: credits billed at dispatch, query
-    counts by outcome, queue-wait and latency samples."""
+    """Per-tenant serving accounting, held as a *view* over the metrics
+    registry: credits, call counts and query outcomes are registry
+    counter children, queue-wait/latency are exponential-bucket
+    histogram children — so ``ServingReport``, ``/v1/metrics`` and the
+    tenant meter can never disagree, and percentiles cover the whole
+    run instead of a bounded last-N sample window whose tail silently
+    vanished on long runs (the old ``MAX_SAMPLES`` deques)."""
 
-    def __init__(self, name: str, policy: TenantPolicy):
+    def __init__(self, name: str, policy: TenantPolicy,
+                 registry: Optional[MetricsRegistry] = None):
         self.name = name
         self.policy = policy
         self.bucket = TokenBucket(policy.queries_per_s, policy.burst)
         self.lock = threading.Lock()
-        self.credits = 0.0          # dispatch-billed AI credits
-        self.dispatched_calls = 0   # LLM requests billed to this tenant
-        self.submitted = 0
-        self.completed = 0
-        self.failed = 0
-        self.rejected = 0
-        # bounded sample windows (long-running engines must not grow
-        # without bound; percentiles cover the most recent queries)
-        self.queue_waits: List[float] = []
-        self.latencies: List[float] = []
+        reg = registry if registry is not None else MetricsRegistry()
+        self.registry = reg
+        self._queries = reg.counter("aisql_queries_total")
+        self._credits = reg.counter("aisql_credits_total").labels(
+            tenant=name)
+        self._calls = reg.counter(
+            "aisql_dispatched_calls_total").labels(tenant=name)
+        self.queue_hist = reg.histogram(
+            "aisql_queue_wait_seconds").labels(tenant=name)
+        self.latency_hist = reg.histogram(
+            "aisql_query_latency_seconds").labels(tenant=name)
+        self._status = {
+            s: self._queries.labels(tenant=name, status=s)
+            for s in ("submitted", "completed", "failed", "rejected")}
 
-    MAX_SAMPLES = 4096
+    def mark(self, status: str, n: int = 1) -> None:
+        """Count a query lifecycle transition
+        (submitted/completed/failed/rejected)."""
+        with self.lock:
+            self._status[status].value += n
 
     def record(self, queue_wait_s: float, latency_s: float) -> None:
         with self.lock:
-            self.completed += 1
-            self.queue_waits.append(queue_wait_s)
-            self.latencies.append(latency_s)
-            if len(self.latencies) > self.MAX_SAMPLES:
-                del self.queue_waits[:self.MAX_SAMPLES // 2]
-                del self.latencies[:self.MAX_SAMPLES // 2]
+            self._status["completed"].value += 1
+            self.queue_hist.observe(queue_wait_s)
+            self.latency_hist.observe(latency_s)
 
     def bill(self, results) -> None:
         """Dispatch-time hook: exact spend attribution (conservation:
         summing this over tenants gives the pipeline's dispatch spend)."""
         with self.lock:
-            self.dispatched_calls += len(results)
+            self._calls.value += len(results)
             for r in results:
-                self.credits += r.credits
+                self._credits.value += r.credits
+
+    # registry-backed reads (the report and admission control use these)
+    @property
+    def credits(self) -> float:
+        return self._credits.value
+
+    @property
+    def dispatched_calls(self) -> int:
+        return int(self._calls.value)
+
+    @property
+    def submitted(self) -> int:
+        return int(self._status["submitted"].value)
+
+    @property
+    def completed(self) -> int:
+        return int(self._status["completed"].value)
+
+    @property
+    def failed(self) -> int:
+        return int(self._status["failed"].value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._status["rejected"].value)
 
     @property
     def over_budget(self) -> bool:
@@ -311,10 +349,12 @@ class QueryTicket:
     still executing (the HTTP front-end turns these into NDJSON lines).
     """
 
-    def __init__(self, tenant: str, sql: str, *, stream: bool = False):
+    def __init__(self, tenant: str, sql: str, *, stream: bool = False,
+                 query_id: str = ""):
         self.tenant = tenant
         self.sql = sql
         self.stream = stream
+        self.query_id = query_id    # serving-assigned ("q000001", ...)
         self.submitted_at = time.perf_counter()
         self.queue_wait_s = 0.0     # submit -> execution start
         self.wall_s = 0.0           # execution only
@@ -377,7 +417,7 @@ class QuerySession:
     def __init__(self, owner: str, tenant: str, meter: TenantMeter,
                  catalog: Catalog, scheduler: Scheduler,
                  pipeline: RequestPipeline, stats: StatsStore,
-                 cfg: "ServingConfig", semindex=None):
+                 cfg: "ServingConfig", semindex=None, obs=None):
         self.owner = owner
         self.tenant = tenant
         # tenant billing chains onto the client meter in one registered
@@ -394,7 +434,8 @@ class QuerySession:
         # answers tenant B's for free; the manager is lock-protected)
         self.engine = AisqlEngine(
             catalog, self.client, optimizer=cfg.optimizer,
-            executor=cfg.executor, stats=stats, semindex=semindex)
+            executor=cfg.executor, stats=stats, semindex=semindex,
+            obs=obs)
 
     def run(self, sql: str,
             on_batch=None) -> Tuple[Table, Optional[QueryReport]]:
@@ -407,16 +448,15 @@ class QuerySession:
 # ---------------------------------------------------------------------------
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    if not xs:
-        return 0.0
-    ys = sorted(xs)
-    return ys[min(int(q * len(ys)), len(ys) - 1)]
-
-
 @dataclasses.dataclass
 class TenantReport:
-    """One tenant's slice of a `ServingReport`."""
+    """One tenant's slice of a `ServingReport`.
+
+    Percentiles come from the registry's exponential-bucket histograms
+    (no raw samples kept): each is a bucket midpoint, with relative
+    error at most ``repro.obs.metrics.QUANTILE_REL_ERROR`` (≈17% for
+    the √2 buckets) — in exchange the estimate covers **every** query
+    of the run, not a bounded last-N window."""
     tenant: str
     queries: int                    # submitted
     completed: int
@@ -523,6 +563,11 @@ class ServingConfig:
     # per fingerprint — another tenant's long history can never outweigh
     # this tenant's own fresh observations
     shared_prior_rows: int = 48
+    # observability: tracing + metrics.  None builds a default
+    # `Observability` (tracing on, wall-clock, 64-trace ring); pass
+    # ``Observability(enabled=False)`` to skip span recording, or one
+    # with ``clock=TickClock`` for byte-stable replay traces.
+    obs: Optional[Observability] = None
 
 
 class ServingEngine:
@@ -554,9 +599,18 @@ class ServingEngine:
         # ANN indexes are cross-tenant shared state, like the pipeline
         self.semindex = semindex or None
         self.pipeline = RequestPipeline(scheduler, self.cfg.pipeline)
+        # observability: one registry + trace ring for the process; the
+        # scheduler and pipeline record their per-dispatch families into
+        # the same registry the tenant meters live in
+        self.obs = self.cfg.obs if self.cfg.obs is not None \
+            else Observability()
+        self.scheduler.registry = self.obs.registry
+        self.pipeline.registry = self.obs.registry
+        self._register_collectors()
         self._lock = threading.Lock()
+        self._qids = itertools.count(1)
         self.tenants: Dict[str, TenantMeter] = {
-            name: TenantMeter(name, pol)
+            name: TenantMeter(name, pol, registry=self.obs.registry)
             for name, pol in (tenants or {}).items()}
         self._idle_sessions: Dict[str, List[QuerySession]] = {}
         self._session_ids = itertools.count(1)
@@ -573,6 +627,46 @@ class ServingEngine:
             for i in range(max(self.cfg.workers, 1))]
         for w in self._workers:
             w.start()
+
+    def _register_collectors(self) -> None:
+        """Expose the pipeline/scheduler/storage counters as scrape-time
+        registry samples.  Collectors read the same locked snapshots the
+        `ServingReport` reads, so ``/v1/metrics`` and ``report()`` can
+        never disagree about these numbers."""
+        def pipeline_events():
+            # scalar counters only — batch_size_hist is covered by the
+            # aisql_pipeline_batch_size histogram the pipeline records
+            snap = self.pipeline.stats_snapshot()
+            return [("aisql_pipeline_events_total", {"event": k}, float(v))
+                    for k, v in snap.items()
+                    if isinstance(v, (int, float))]
+
+        def scheduler_events():
+            snap = self.scheduler.stats_snapshot()
+            return [("aisql_scheduler_events_total", {"event": k}, float(v))
+                    for k, v in snap.items()]
+
+        def storage():
+            stats = self.storage_stats()
+            if stats is None:
+                return []
+            return [
+                ("aisql_storage_events_total", {"event": "spill"},
+                 float(stats["spill_events"])),
+                ("aisql_storage_events_total", {"event": "reload"},
+                 float(stats["reload_events"])),
+                ("aisql_storage_bytes", {"state": "resident"},
+                 float(stats["tracked_bytes"])),
+                ("aisql_storage_bytes", {"state": "peak"},
+                 float(stats["peak_bytes"])),
+                ("aisql_storage_bytes", {"state": "spilled"},
+                 float(stats["spilled_bytes"])),
+            ]
+
+        reg = self.obs.registry
+        reg.register_collector(pipeline_events)
+        reg.register_collector(scheduler_events)
+        reg.register_collector(storage)
 
     @classmethod
     def simulated(cls, catalog: Catalog, *, seed: int = 0,
@@ -605,7 +699,8 @@ class ServingEngine:
             meter = self.tenants.get(name)
             if meter is None:
                 meter = TenantMeter(
-                    name, dataclasses.replace(self.cfg.default_policy))
+                    name, dataclasses.replace(self.cfg.default_policy),
+                    registry=self.obs.registry)
                 self.tenants[name] = meter
             return meter
 
@@ -637,7 +732,8 @@ class ServingEngine:
             self.sessions_created += 1
         return QuerySession(owner, tenant, meter, self.catalog,
                             self.scheduler, self.pipeline, stats,
-                            self.cfg, semindex=self.semindex)
+                            self.cfg, semindex=self.semindex,
+                            obs=self.obs)
 
     def _checkin(self, tenant: str, session: QuerySession) -> None:
         with self._lock:
@@ -659,9 +755,9 @@ class ServingEngine:
             if self._closed:
                 raise RuntimeError("ServingEngine is closed")
             self._submitted += 1
+            ticket.query_id = f"q{next(self._qids):06d}"
             self._queue.put(ticket)
-        with meter.lock:
-            meter.submitted += 1
+        meter.mark("submitted")
         return ticket
 
     def run_all(self, workload: List[Tuple[str, str]]) -> List[QueryTicket]:
@@ -718,8 +814,7 @@ class ServingEngine:
         meter = self.tenant(ticket.tenant)
         try:
             if meter.over_budget:
-                with meter.lock:
-                    meter.rejected += 1
+                meter.mark("rejected")
                 raise AdmissionError(
                     f"tenant {ticket.tenant!r} exhausted its credit "
                     f"budget ({meter.credits:.6g} >= "
@@ -729,8 +824,7 @@ class ServingEngine:
                 if meter.bucket.rate <= 0.0:
                     # a zero-rate (paused) tenant's bucket never refills:
                     # requeueing would spin forever and hang drain()
-                    with meter.lock:
-                        meter.rejected += 1
+                    meter.mark("rejected")
                     raise AdmissionError(
                         f"tenant {ticket.tenant!r} is paused "
                         f"(queries_per_s=0) and its burst is exhausted")
@@ -749,6 +843,8 @@ class ServingEngine:
                 ticket.wall_s = time.perf_counter() - t0
                 ticket.report = report
                 ticket._table = table
+                if report is not None and report.trace is not None:
+                    self.obs.ring.put(ticket.query_id, report.trace)
             finally:
                 self._checkin(ticket.tenant, session)
             meter.record(ticket.queue_wait_s, ticket.wall_s)
@@ -756,8 +852,7 @@ class ServingEngine:
             ticket._error = e
         except Exception as e:          # the query's own failure
             ticket._error = e
-            with meter.lock:
-                meter.failed += 1
+            meter.mark("failed")
         return False
 
     # -- reporting -----------------------------------------------------
@@ -804,26 +899,27 @@ class ServingEngine:
             meters = list(self.tenants.values())
             n_tickets = self._submitted
         tenant_reports: Dict[str, TenantReport] = {}
-        all_waits: List[float] = []
-        all_lats: List[float] = []
         total_credits = 0.0
+        all_waits = _HistChild()
+        all_lats = _HistChild()
         for m in meters:
             with m.lock:
-                waits, lats = list(m.queue_waits), list(m.latencies)
+                waits, lats = m.queue_hist, m.latency_hist
                 tenant_reports[m.name] = TenantReport(
                     tenant=m.name, queries=m.submitted,
                     completed=m.completed, failed=m.failed,
                     rejected=m.rejected, credits_spent=m.credits,
                     credit_budget=m.policy.credit_budget,
                     dispatched_calls=m.dispatched_calls,
-                    queue_wait_p50_s=_percentile(waits, 0.50),
-                    queue_wait_p95_s=_percentile(waits, 0.95),
-                    latency_p50_s=_percentile(lats, 0.50),
-                    latency_p95_s=_percentile(lats, 0.95))
+                    queue_wait_p50_s=waits.quantile(0.50),
+                    queue_wait_p95_s=waits.quantile(0.95),
+                    latency_p50_s=lats.quantile(0.50),
+                    latency_p95_s=lats.quantile(0.95))
                 total_credits += m.credits
-            all_waits.extend(waits)
-            all_lats.extend(lats)
+                all_waits.merge(waits)
+                all_lats.merge(lats)
         ps = self.pipeline.stats_snapshot()   # atomic under pipeline lock
+        ss = self.scheduler.stats_snapshot()  # atomic under scheduler lock
         return ServingReport(
             tenants=tenant_reports, queries=n_tickets,
             total_credits=total_credits,
@@ -835,11 +931,11 @@ class ServingEngine:
             cache_expired=ps["cache_expired"],
             cancelled_requests=ps["cancelled"],
             retries=ps["retries"],
-            scheduler_retries=self.scheduler.retries,
-            scheduler_timeouts=self.scheduler.timeouts,
+            scheduler_retries=ss["retries"],
+            scheduler_timeouts=ss["timeouts"],
             failed_requests=ps["failures"],
-            queue_wait_p50_s=_percentile(all_waits, 0.50),
-            queue_wait_p95_s=_percentile(all_waits, 0.95),
-            latency_p50_s=_percentile(all_lats, 0.50),
-            latency_p95_s=_percentile(all_lats, 0.95),
+            queue_wait_p50_s=all_waits.quantile(0.50),
+            queue_wait_p95_s=all_waits.quantile(0.95),
+            latency_p50_s=all_lats.quantile(0.50),
+            latency_p95_s=all_lats.quantile(0.95),
             storage=self.storage_stats())

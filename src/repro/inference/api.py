@@ -193,9 +193,10 @@ class CortexClient:
                    "calls_by_model": dict(self.calls_by_model)}
         # a shared pipeline's stats mix every session's traffic — a
         # per-query delta of them would be misleading, so only a private
-        # pipeline surfaces them here (QueryReport.pipeline)
+        # pipeline surfaces them here (QueryReport.pipeline); read via
+        # the locked snapshot so a concurrent dispatch never tears it
         if self.pipeline is not None and self.owner is None:
-            out["pipeline"] = self.pipeline.stats.snapshot()
+            out["pipeline"] = self.pipeline.stats_snapshot()
         return out
 
     def meter_delta(self, before: Dict[str, Any]) -> Dict[str, Any]:
@@ -205,7 +206,7 @@ class CortexClient:
             "ai_seconds": self.ai_seconds - before["ai_seconds"],
         }
         if self.pipeline is not None and "pipeline" in before:
-            out["pipeline"] = self.pipeline.stats.delta(before["pipeline"])
+            out["pipeline"] = self.pipeline.stats_delta(before["pipeline"])
         return out
 
 

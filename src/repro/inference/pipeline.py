@@ -61,6 +61,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.inference.backend import EngineFailure, Request, Result
 from repro.inference.scheduler import Scheduler, SchedulerError
+from repro.obs.metrics import locked_snapshot
+from repro.obs.trace import active_tracer
 
 
 class RequestFailed(RuntimeError):
@@ -211,7 +213,8 @@ class PipelineStats:
 
 
 class _QueueItem:
-    __slots__ = ("request", "futures", "enqueued_at", "owner", "owners")
+    __slots__ = ("request", "futures", "enqueued_at", "owner", "owners",
+                 "trace_t0")
 
     def __init__(self, request: Request, future: ResultFuture, t: float,
                  owner: Optional[str] = None):
@@ -220,6 +223,10 @@ class _QueueItem:
         self.enqueued_at = t
         self.owner = owner            # billed at dispatch (primary submitter)
         self.owners = {owner}         # every owner with an attached future
+        # submit timestamp on the *tracer's* clock (None untraced) — the
+        # dispatch span's queue_wait_s must stay deterministic under an
+        # injected clock, so it never reads perf_counter
+        self.trace_t0 = None
 
 
 class _CacheEntry:
@@ -247,6 +254,9 @@ class RequestPipeline:
         self.cfg = cfg or PipelineConfig()
         self.on_dispatch = on_dispatch
         self.stats = PipelineStats()
+        # optional `MetricsRegistry` (set by the serving runtime):
+        # dispatched batch sizes are observed there
+        self.registry = None
         self._lock = threading.RLock()
         self._queues: Dict[str, List[_QueueItem]] = {}
         self._inflight: Dict[Tuple, _QueueItem] = {}
@@ -284,8 +294,13 @@ class RequestPipeline:
     def _submit_many_locked(self, requests: Sequence[Request],
                             owner: Optional[str]) -> List[ResultFuture]:
         now = time.perf_counter()
+        tr = active_tracer()
         futures: List[ResultFuture] = []
         touched: List[str] = []
+        # dedup hits are the hottest pipeline path (thousands per query
+        # on a warm cache): trace them as ONE aggregated event per
+        # submit call, never one event per request
+        hit_cache = hit_inflight = 0
         for r in requests:
             self.stats.submitted += 1
             self.stats.kind_hist[r.kind] = \
@@ -296,6 +311,7 @@ class RequestPipeline:
                 if cached is not None:
                     self.stats.dedup_hits += 1
                     self.stats.cache_hits += 1
+                    hit_cache += 1
                     futures.append(ResultFuture.resolved(cached))
                     continue
                 pending = self._inflight.get(key)
@@ -307,15 +323,21 @@ class RequestPipeline:
                     self.stats.inflight_hits += 1
                     if owner != pending.owner:
                         self.stats.cross_query_hits += 1
+                    hit_inflight += 1
                     futures.append(f)
                     continue
             f = ResultFuture(self, r.model)
             item = _QueueItem(r, f, now, owner)
+            if tr.enabled:
+                item.trace_t0 = tr.now()
             self._queues.setdefault(r.model, []).append(item)
             if key is not None:
                 self._inflight[key] = item
             futures.append(f)
             touched.append(r.model)
+        if tr.enabled and (hit_cache or hit_inflight):
+            tr.event("pipeline.dedup_hit", cache=hit_cache,
+                     inflight=hit_inflight)
         for model in dict.fromkeys(touched):
             if len(self._queues.get(model, ())) >= self.cfg.max_batch:
                 self.stats.flushes_on_size += 1
@@ -490,22 +512,45 @@ class RequestPipeline:
         if not items:
             return
         t0 = time.perf_counter()
+        tr = active_tracer()
         requests = [it.request for it in items]
-        results: Optional[List[Result]] = None
-        last_exc: Optional[Exception] = None
-        for attempt in range(self.cfg.max_retries + 1):
-            if attempt:
-                # transient fault: back off, then re-dispatch the same
-                # batch (the scheduler re-picks replicas underneath)
-                self.stats.retries += 1
-                time.sleep(min(
-                    self.cfg.retry_backoff_s * (2 ** (attempt - 1)),
-                    self.cfg.retry_backoff_cap_s))
-            try:
-                results = self.scheduler.submit(requests)
-                break
-            except (EngineFailure, SchedulerError) as e:
-                last_exc = e
+        if self.registry is not None:
+            self.registry.histogram(
+                "aisql_pipeline_batch_size").observe(float(len(items)))
+        with tr.span("pipeline.dispatch", kind="pipeline.dispatch",
+                     model=requests[0].model,
+                     requests=len(items)) as dsp:
+            if tr.enabled and len(items) > 1:
+                tr.event("pipeline.coalesce", requests=len(items))
+            results: Optional[List[Result]] = None
+            last_exc: Optional[Exception] = None
+            for attempt in range(self.cfg.max_retries + 1):
+                if attempt:
+                    # transient fault: back off, then re-dispatch the
+                    # same batch (the scheduler re-picks replicas
+                    # underneath)
+                    self.stats.retries += 1
+                    tr.event("pipeline.retry", attempt=attempt)
+                    time.sleep(min(
+                        self.cfg.retry_backoff_s * (2 ** (attempt - 1)),
+                        self.cfg.retry_backoff_cap_s))
+                try:
+                    results = self.scheduler.submit(requests)
+                    break
+                except (EngineFailure, SchedulerError) as e:
+                    last_exc = e
+            if tr.enabled and results is not None:
+                waits = [it.trace_t0 for it in items
+                         if it.trace_t0 is not None]
+                dsp.set(credits=float(sum(r.credits for r in results)),
+                        tokens_in=int(sum(r.tokens_in for r in results)),
+                        tokens_out=int(sum(r.tokens_out
+                                           for r in results)),
+                        queue_wait_s=(tr.now() - min(waits)
+                                      if waits else 0.0),
+                        outcome="ok")
+            elif tr.enabled:
+                dsp.set(outcome="failed")
         if results is None:
             # retries exhausted: resolve every attached future with a
             # clean error — never a silent drop, never a hang.  Nothing
@@ -593,8 +638,13 @@ class RequestPipeline:
         pipeline lock, so the counters are mutually consistent (no
         dispatch can land between reading ``submitted`` and
         ``dispatched``)."""
-        with self._lock:
-            return self.stats.snapshot()
+        return locked_snapshot(self._lock, self.stats.snapshot)
+
+    def stats_delta(self, before: Dict[str, Any]) -> Dict[str, Any]:
+        """`PipelineStats.delta` under the pipeline lock (atomic with
+        respect to a concurrent dispatch)."""
+        return locked_snapshot(self._lock,
+                               lambda: self.stats.delta(before))
 
     def cache_keys(self):
         with self._lock:

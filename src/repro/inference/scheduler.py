@@ -30,6 +30,8 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.inference.backend import (EngineFailure, EngineTimeout,
                                      InferenceBackend, Request, Result)
+from repro.obs.metrics import locked_snapshot
+from repro.obs.trace import active_tracer
 
 _DEFAULT_CAPACITY = 32
 
@@ -71,6 +73,10 @@ class Scheduler:
         self.splits = 0
         self.submits = 0           # submit() calls (what the pipeline saves)
         self.dispatches = 0        # engine submit_batch calls
+        # optional `MetricsRegistry` (set by the serving runtime): each
+        # successful replica dispatch records per-model calls, tokens,
+        # credits and latency families there
+        self.registry = None
 
     # ---- registry / elasticity ----
     def register(self, engine: InferenceBackend) -> None:
@@ -103,7 +109,7 @@ class Scheduler:
         """Decode-backend telemetry per registered engine (engines that
         expose ``backend_stats``), keyed by engine id — what the serving
         report surfaces for continuous-batching occupancy/step counts."""
-        with self._lock:
+        def read():
             out: Dict[str, Dict] = {}
             seen = set()
             for reps in self._replicas.values():
@@ -113,8 +119,24 @@ class Scheduler:
                     seen.add(id(e))
                     fn = getattr(e, "backend_stats", None)
                     if callable(fn):
-                        out[getattr(e, "engine_id", f"engine#{len(out)}")] = fn()
+                        out[getattr(e, "engine_id",
+                                    f"engine#{len(out)}")] = fn()
             return out
+        return locked_snapshot(self._lock, read)
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Atomic copy of the telemetry counters, taken under the same
+        lock the dispatcher mutates them behind — the one sanctioned way
+        to read them (`ServingEngine.report` and the registry collector
+        both come through here, so their numbers agree)."""
+        return locked_snapshot(self._lock, lambda: {
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "redispatches": self.redispatches,
+            "splits": self.splits,
+            "submits": self.submits,
+            "dispatches": self.dispatches,
+        })
 
     def atomic_batch(self, model: str) -> Optional[int]:
         """Largest single-model batch ``submit`` will never split across
@@ -195,18 +217,67 @@ class Scheduler:
         size = -(-len(reqs) // n_parts)
         return [reqs[i:i + size] for i in range(0, len(reqs), size)]
 
+    def _replica_name(self, model: str, engine: InferenceBackend) -> str:
+        name = getattr(engine, "engine_id", None)
+        if name:
+            return str(name)
+        reps = self._replicas.get(model, ())
+        try:
+            i = reps.index(engine)
+        except ValueError:
+            i = -1
+        return f"{type(engine).__name__}#{i}"
+
+    def _record_dispatch(self, model: str, results: Sequence[Result],
+                         seconds: float) -> None:
+        reg = self.registry
+        if reg is None or not results:
+            return
+        calls = reg.counter("aisql_ai_calls_total")
+        by_kind: Dict[str, int] = {}
+        tokens_in = tokens_out = 0
+        credits = 0.0
+        for r in results:
+            by_kind[r.kind] = by_kind.get(r.kind, 0) + 1
+            tokens_in += r.tokens_in
+            tokens_out += r.tokens_out
+            credits += r.credits
+        for kind, n in by_kind.items():
+            calls.inc(n, model=model, kind=kind)
+        tok = reg.counter("aisql_ai_tokens_total")
+        tok.inc(tokens_in, model=model, direction="in")
+        tok.inc(tokens_out, model=model, direction="out")
+        reg.counter("aisql_backend_credits_total").inc(credits, model=model)
+        reg.histogram("aisql_dispatch_latency_seconds").observe(
+            seconds, model=model)
+
     def _submit_one_model(self, model: str, reqs: Sequence[Request]
                           ) -> List[Result]:
         last_exc: Optional[Exception] = None
+        tr = active_tracer()
         engine = self._pick(model)
         for attempt in range(self.max_retries + 1):
             eid = id(engine)
             self._depth[eid] = self._depth.get(eid, 0) + len(reqs)
             try:
-                t0 = time.perf_counter()
-                self.dispatches += 1
-                out = engine.submit_batch(reqs)
-                dt = time.perf_counter() - t0
+                with tr.span("dispatch.replica", kind="dispatch.replica",
+                             model=model,
+                             replica=(self._replica_name(model, engine)
+                                      if tr.enabled else ""),
+                             attempt=attempt,
+                             requests=len(reqs)) as sp:
+                    t0 = time.perf_counter()
+                    self.dispatches += 1
+                    out = engine.submit_batch(reqs)
+                    dt = time.perf_counter() - t0
+                    if tr.enabled:
+                        sp.set(credits=float(sum(r.credits for r in out)),
+                               tokens_in=int(sum(r.tokens_in
+                                                 for r in out)),
+                               tokens_out=int(sum(r.tokens_out
+                                                  for r in out)),
+                               outcome="ok")
+                self._record_dispatch(model, out, dt)
                 self._busy_s[eid] = self._busy_s.get(eid, 0.0) + dt
                 if (self.straggler_deadline_s is not None
                         and dt > self.straggler_deadline_s
@@ -220,8 +291,12 @@ class Scheduler:
             except EngineFailure as e:
                 last_exc = e
                 self.retries += 1
-                if isinstance(e, EngineTimeout):
+                timeout = isinstance(e, EngineTimeout)
+                if timeout:
                     self.timeouts += 1
+                sp.set(outcome="timeout" if timeout else "fault")
+                tr.event("scheduler.retry", attempt=attempt,
+                         timeout=timeout)
                 engine = self._pick(model, exclude=engine)
             finally:
                 self._depth[eid] = max(self._depth.get(eid, 0) - len(reqs), 0)

@@ -10,6 +10,10 @@ Endpoints (all JSON):
 
   * ``GET  /v1/healthz``         — liveness probe
   * ``GET  /v1/report``          — the live `ServingReport`
+  * ``GET  /v1/metrics``         — the engine's metrics registry in
+    Prometheus text exposition format (the one non-JSON endpoint)
+  * ``GET  /v1/trace/<query_id>`` — the span tree of a recent query
+    (bounded ring; 404 once evicted or for an unknown id)
   * ``GET  /v1/semantic-model``  — the attached `SemanticModel` (404
     when the server has none)
   * ``POST /v1/query``           — ``{"sql": ..., "stream": bool}``;
@@ -300,6 +304,15 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _send_text(self, status: int, text: str,
+                   content_type: str) -> None:
+        data = text.encode("utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
     def _send_error_obj(self, err: HttpError) -> None:
         headers = {}
         if err.retry_after_s is not None:
@@ -350,6 +363,19 @@ class _Handler(BaseHTTPRequestHandler):
             elif self.path == "/v1/report":
                 report = self.app.engine.report()
                 self._send_json(200, dataclasses.asdict(report))
+            elif self.path == "/v1/metrics":
+                text = self.app.engine.obs.registry.render_prometheus()
+                self._send_text(200, text,
+                                "text/plain; version=0.0.4; charset=utf-8")
+            elif self.path.startswith("/v1/trace/"):
+                qid = self.path[len("/v1/trace/"):]
+                tree = self.app.engine.obs.ring.get(qid)
+                if tree is None:
+                    raise HttpError(
+                        "not_found",
+                        f"no trace for query {qid!r} (never traced, "
+                        f"or evicted from the ring)")
+                self._send_json(200, {"query_id": qid, "trace": tree})
             elif self.path == "/v1/semantic-model":
                 model = self.app.semantic_model
                 if model is None:
@@ -410,7 +436,7 @@ class _Handler(BaseHTTPRequestHandler):
         cols, rows = table_rows(table)
         payload: Dict[str, Any] = {
             "columns": cols, "rows": rows, "row_count": len(rows),
-            "tenant": tenant,
+            "tenant": tenant, "query_id": ticket.query_id,
         }
         if ticket.report is not None:
             payload["stats"] = {
@@ -469,7 +495,8 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _emit_summary(self, ticket, count: int) -> None:
         summary: Dict[str, Any] = {"kind": "summary", "row_count": count,
-                                   "wall_s": ticket.wall_s}
+                                   "wall_s": ticket.wall_s,
+                                   "query_id": ticket.query_id}
         if ticket.report is not None:
             summary["ai_calls"] = ticket.report.ai_calls
             summary["ai_credits"] = ticket.report.ai_credits
@@ -615,6 +642,17 @@ class AisqlHttpClient:
 
     def report(self) -> Dict[str, Any]:
         return json.loads(self._request("GET", "/v1/report").read())
+
+    def metrics(self) -> str:
+        """The raw Prometheus text exposition (parse it with
+        ``repro.obs.parse_prometheus_text``)."""
+        return self._request("GET", "/v1/metrics").read().decode("utf-8")
+
+    def trace(self, query_id: str) -> Dict[str, Any]:
+        """``{"query_id", "trace"}`` for a recent query (404 →
+        `HttpStatusError` once the ring evicted it)."""
+        return json.loads(
+            self._request("GET", f"/v1/trace/{query_id}").read())
 
     def semantic_model(self) -> Dict[str, Any]:
         return json.loads(

@@ -34,6 +34,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.obs.trace import active_tracer
+
 
 def array_bytes(arr: np.ndarray) -> int:
     """Estimated resident bytes of ``arr`` including object payloads."""
@@ -153,6 +155,8 @@ class SpillManager:
             if seg._arrays is None:
                 seg._load()
                 self.reload_events += 1
+                active_tracer().event("storage.reload", sid=seg.sid,
+                                      bytes=seg.nbytes)
                 self._resident[seg.sid] = seg
                 self.tracked_bytes += seg.nbytes
                 self.peak_bytes = max(self.peak_bytes, self.tracked_bytes)
@@ -188,6 +192,8 @@ class SpillManager:
             self.tracked_bytes -= victim.nbytes
             self.spill_events += 1
             self.spilled_bytes += victim.nbytes
+            active_tracer().event("storage.spill", sid=victim.sid,
+                                  bytes=victim.nbytes)
 
     # -- reporting ------------------------------------------------------
     def stats(self) -> Dict[str, int]:

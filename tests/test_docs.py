@@ -282,3 +282,71 @@ def test_http_api_error_table_matches_contract():
         f"code-only {set(actual) - set(documented)}, "
         f"status mismatches "
         f"{ {c for c in documented.keys() & actual.keys() if documented[c] != actual[c]} }")
+
+
+def test_observability_doc_exists_and_linked():
+    assert os.path.exists(os.path.join(DOCS, "observability.md"))
+    assert "docs/observability.md" in _read("README.md")
+    assert "observability.md" in _read("docs/architecture.md")
+    assert "observability.md" in _read("docs/serving.md")
+    assert "observability.md" in _read("docs/http-api.md")
+    assert "observability.md" in _read("docs/query-reference.md")
+
+
+def _catalog_rows(text, heading):
+    """First-column backticked names (dots allowed) of the table under a
+    heading — span kinds, event kinds and metric families use dotted /
+    prefixed names the stricter ``_table_fields`` regex rejects."""
+    section = text.split(heading, 1)[1].split("\n## ", 1)[0]
+    return [m.group(1) for m in
+            re.finditer(r"^\|\s*`([A-Za-z_][A-Za-z0-9_.]*)`\s*\|",
+                        section, re.M)]
+
+
+def test_documented_span_kinds_match_catalog():
+    from repro.obs import SPAN_KINDS
+    rows = _catalog_rows(_read("docs/observability.md"), "## Span taxonomy")
+    assert rows, "span taxonomy table not found in observability.md"
+    assert set(rows) == set(SPAN_KINDS), (
+        set(rows) - set(SPAN_KINDS), set(SPAN_KINDS) - set(rows))
+
+
+def test_documented_event_kinds_match_catalog():
+    from repro.obs import EVENT_KINDS
+    rows = _catalog_rows(_read("docs/observability.md"), "## Event kinds")
+    assert rows, "event kinds table not found in observability.md"
+    assert set(rows) == set(EVENT_KINDS), (
+        set(rows) - set(EVENT_KINDS), set(EVENT_KINDS) - set(rows))
+
+
+def test_documented_metric_families_match_catalog():
+    """Name, type and label set of every documented family must match
+    the code catalog exactly."""
+    from repro.obs import METRIC_FAMILIES
+    text = _read("docs/observability.md")
+    section = text.split("## Metric families", 1)[1].split("\n### ", 1)[0]
+    rows = re.findall(
+        r"^\|\s*`([a-z_]+)`\s*\|\s*(\w+)\s*\|\s*([^|]*)\|", section, re.M)
+    documented = {}
+    for name, mtype, labels in rows:
+        if name == "family":
+            continue
+        labelset = tuple(
+            s.strip() for s in labels.split(",") if s.strip() not in ("", "—"))
+        documented[name] = (mtype, labelset)
+    actual = {name: (mtype, tuple(labels))
+              for name, (mtype, _help, labels) in METRIC_FAMILIES.items()}
+    assert documented, "metric family table not found in observability.md"
+    assert documented == actual, (
+        f"doc-only {set(documented) - set(actual)}, "
+        f"code-only {set(actual) - set(documented)}, "
+        f"mismatched { {n for n in documented.keys() & actual.keys() if documented[n] != actual[n]} }")
+
+
+def test_documented_quantile_error_bound_matches_code():
+    from repro.obs.metrics import BUCKET_FACTOR, QUANTILE_REL_ERROR
+    text = _read("docs/observability.md")
+    assert "17%" in text  # (sqrt(2)-1)/(sqrt(2)+1) ~= 0.1716
+    assert abs(QUANTILE_REL_ERROR
+               - (BUCKET_FACTOR - 1.0) / (BUCKET_FACTOR + 1.0)) < 1e-12
+    assert round(QUANTILE_REL_ERROR * 100) == 17

@@ -1,0 +1,348 @@
+"""Observability subsystem: span tracing, metrics registry, wiring.
+
+The load-bearing property is **determinism**: with a seeded simulator
+and an injected `TickClock`, a query's span tree serializes to
+byte-identical JSON across runs — in eager and partitioned execution,
+and under fault-injected scheduler retries (the retry spans themselves
+are part of the stable tree).  `tools/replay.py --trace-out` and the
+resume/debug workflows depend on this.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (AisqlEngine, Catalog, ExecConfig, ServingConfig,
+                        ServingEngine)
+from repro.core.serving import TenantPolicy
+from repro.inference.api import CortexClient
+from repro.inference.pipeline import PipelineConfig
+from repro.inference.scheduler import Scheduler
+from repro.inference.simulator import SimulatedBackend
+from repro.obs import (EVENT_KINDS, METRIC_FAMILIES, QUANTILE_REL_ERROR,
+                       SPAN_KINDS, MetricsRegistry, Observability, TickClock,
+                       TraceRing, Tracer, activate, active_tracer,
+                       critical_path, locked_snapshot, parse_prometheus_text,
+                       to_chrome, to_json, walk_spans)
+from repro.obs.metrics import BUCKET_BOUNDS, BUCKET_FACTOR
+from repro.obs.trace import NOOP
+from repro.tables.table import Table
+
+
+def small_catalog(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return Catalog({"t": Table({
+        "id": np.arange(n),
+        "score": rng.random(n),
+        "text": [f"row {i} text" for i in range(n)],
+        "_truth": rng.random(n) < 0.4,
+        "_difficulty": np.full(n, 0.05),
+    }, name="t")})
+
+
+def make_engine(*, obs, fault_rate=0.0, partitioned=False, seed=0,
+                pipelined=True):
+    sched = Scheduler()
+    sched.register(SimulatedBackend(seed=seed, fault_rate=fault_rate,
+                                    fault_seed=seed + 7))
+    client = CortexClient(
+        sched, pipeline=PipelineConfig(retry_backoff_s=0.001,
+                                       retry_backoff_cap_s=0.01,
+                                       max_retries=6)
+        if pipelined else None)
+    exec_cfg = ExecConfig(partitioned=partitioned, partition_rows=16,
+                          adaptive_reorder=False, pilot_rows=0)
+    return AisqlEngine(small_catalog(seed=seed), client,
+                       executor=exec_cfg, obs=obs)
+
+
+AI_SQL = ("SELECT t.id FROM t WHERE t.score < 0.8 AND "
+          "AI_FILTER(PROMPT('is this interesting? {0}', t.text))")
+
+
+# ---------------------------------------------------------------------------
+# tracer units
+# ---------------------------------------------------------------------------
+
+
+def test_tick_clock_is_deterministic():
+    c1, c2 = TickClock(), TickClock()
+    assert [c1() for _ in range(3)] == [c2() for _ in range(3)]
+    assert c1() > 0
+
+
+def test_span_ids_and_nesting():
+    tr = Tracer(clock=TickClock())
+    with tr.span("query", kind="query") as q:
+        with tr.span("parse", kind="parse"):
+            pass
+        with tr.span("execute", kind="execute") as e:
+            e.set(rows_out=3)
+            tr.event("optimize.memo_hit", reuses=1)
+    tree = tr.to_dict()
+    assert tree["id"] == 1 and tree["parent"] == 0
+    kids = tree["children"]
+    assert [c["kind"] for c in kids] == ["parse", "execute"]
+    assert all(c["parent"] == 1 for c in kids)
+    assert kids[1]["attrs"]["rows_out"] == 3
+    assert kids[1]["events"][0]["name"] == "optimize.memo_hit"
+    assert q.t1 is not None and q.t1 > q.t0
+    # every recorded kind is in the taxonomy
+    for span in walk_spans(tree):
+        assert span["kind"] in SPAN_KINDS
+
+
+def test_noop_tracer_records_nothing():
+    with NOOP.span("query", kind="query") as sp:
+        sp.set(rows=1)
+        NOOP.event("whatever")
+    assert not NOOP.enabled and NOOP.to_dict() is None
+    # active_tracer defaults to the no-op outside any activate()
+    assert active_tracer() is NOOP
+
+
+def test_activate_scopes_the_tracer():
+    tr = Tracer(clock=TickClock())
+    with activate(tr):
+        assert active_tracer() is tr
+    assert active_tracer() is NOOP
+
+
+def test_chrome_export_and_critical_path():
+    tr = Tracer(clock=TickClock())
+    with tr.span("query", kind="query"):
+        with tr.span("execute", kind="execute"):
+            tr.event("cascade.proxy", rows=4)
+    tree = tr.to_dict()
+    events = to_chrome(tree)["traceEvents"]
+    phases = {e["ph"] for e in events}
+    assert "X" in phases and "i" in phases
+    assert all("ts" in e and "pid" in e for e in events)
+    line = critical_path(tree)
+    assert "critical path" in line and "execute" in line
+
+
+def test_trace_ring_eviction():
+    ring = TraceRing(capacity=2)
+    for i in range(4):
+        ring.put(f"q{i}", {"span_id": i})
+    assert len(ring) == 2
+    assert ring.ids() == ["q2", "q3"]
+    assert ring.get("q0") is None
+    assert ring.get("q3") == {"span_id": 3}
+
+
+# ---------------------------------------------------------------------------
+# determinism: byte-identical span-tree JSON
+# ---------------------------------------------------------------------------
+
+
+def _trace_json(**kw):
+    obs = Observability(clock=TickClock)
+    eng = make_engine(obs=obs, **kw)
+    eng.sql(AI_SQL)
+    assert eng.last_report.trace is not None
+    return to_json(eng.last_report.trace)
+
+
+@pytest.mark.parametrize("partitioned", [False, True],
+                         ids=["eager", "partitioned"])
+def test_trace_bytes_stable(partitioned):
+    a = _trace_json(partitioned=partitioned)
+    b = _trace_json(partitioned=partitioned)
+    assert a == b
+    tree = json.loads(a)
+    kinds = {s["kind"] for s in walk_spans(tree)}
+    assert {"query", "parse", "optimize", "execute",
+            "pipeline.dispatch", "dispatch.replica"} <= kinds
+    if partitioned:
+        assert "partition" in kinds
+
+
+def test_trace_bytes_stable_under_faults():
+    a = _trace_json(partitioned=True, fault_rate=0.25)
+    b = _trace_json(partitioned=True, fault_rate=0.25)
+    assert a == b
+    tree = json.loads(a)
+    # the retries themselves are recorded — and stably so
+    outcomes = [s["attrs"].get("outcome")
+                for s in walk_spans(tree)
+                if s["kind"] == "dispatch.replica"]
+    assert "ok" in outcomes
+    assert any(o in ("fault", "timeout") for o in outcomes)
+
+
+def test_trace_attrs_reconcile_with_query_report():
+    obs = Observability(clock=TickClock)
+    eng = make_engine(obs=obs)
+    eng.sql(AI_SQL)
+    rep = eng.last_report
+    root = rep.trace
+    assert root["attrs"]["credits"] == pytest.approx(rep.ai_credits)
+    span_credits = sum(
+        s["attrs"].get("credits", 0.0) for s in walk_spans(root)
+        if s["kind"] == "dispatch.replica"
+        and s["attrs"].get("outcome") == "ok")
+    assert span_credits == pytest.approx(rep.ai_credits)
+    # the explain output gains the critical-path line
+    assert "critical path" in rep.explain_analyze()
+
+
+def test_disabled_obs_records_no_trace():
+    eng = make_engine(obs=Observability(enabled=False))
+    eng.sql(AI_SQL)
+    assert eng.last_report.trace is None
+    assert "critical path" not in eng.last_report.explain_analyze()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry units
+# ---------------------------------------------------------------------------
+
+
+def test_registry_rejects_unknown_family():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="unknown metric family"):
+        reg.counter("aisql_bogus_total")
+    with pytest.raises(ValueError, match="is a counter"):
+        reg.histogram("aisql_queries_total")
+
+
+def test_counter_and_gauge_children():
+    reg = MetricsRegistry()
+    c = reg.counter("aisql_queries_total")
+    c.inc(tenant="a", status="completed")
+    c.inc(2, tenant="a", status="completed")
+    assert c.labels(tenant="a", status="completed").value == 3
+    g = reg.gauge("aisql_storage_bytes")
+    g.set(123, state="resident")
+    assert g.labels(state="resident").value == 123
+
+
+def test_histogram_quantile_error_bound():
+    reg = MetricsRegistry()
+    h = reg.histogram("aisql_query_latency_seconds")
+    child = h.labels(tenant="x")
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(1e-3, 5.0, 400)
+    for x in xs:
+        child.observe(float(x))
+    for q in (0.5, 0.9, 0.95):
+        exact = float(np.quantile(xs, q))
+        est = child.quantile(q)
+        assert est == pytest.approx(exact, rel=2 * QUANTILE_REL_ERROR)
+    # monotone in q
+    assert child.quantile(0.95) >= child.quantile(0.5) >= child.quantile(0.05)
+    assert child.quantile(0.5) > 0
+
+
+def test_histogram_bucket_geometry():
+    assert BUCKET_BOUNDS[0] == pytest.approx(1e-4)
+    ratios = [BUCKET_BOUNDS[i + 1] / BUCKET_BOUNDS[i]
+              for i in range(len(BUCKET_BOUNDS) - 1)]
+    assert all(r == pytest.approx(BUCKET_FACTOR) for r in ratios)
+
+
+def test_render_parse_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("aisql_credits_total").inc(1.25, tenant="a")
+    reg.histogram("aisql_queue_wait_seconds").observe(0.01, tenant="a")
+    reg.gauge("aisql_storage_bytes").set(4096, state="peak")
+    text = reg.render_prometheus()
+    parsed = parse_prometheus_text(text)
+    assert parsed["aisql_credits_total"] == [({"tenant": "a"}, 1.25)]
+    assert ({"state": "peak"}, 4096.0) in parsed["aisql_storage_bytes"]
+    # histogram exposition: cumulative buckets, _sum, _count
+    assert parsed["aisql_queue_wait_seconds_count"][0][1] == 1.0
+    les = [lb["le"] for lb, _ in
+           parsed["aisql_queue_wait_seconds_bucket"]]
+    assert les[-1] == "+Inf"
+    counts = [v for _, v in parsed["aisql_queue_wait_seconds_bucket"]]
+    assert counts == sorted(counts)          # cumulative
+
+
+def test_parse_rejects_malformed_text():
+    with pytest.raises(ValueError):
+        parse_prometheus_text("this is { not a metric\n")
+
+
+def test_locked_snapshot_smoke():
+    import threading
+    lock = threading.Lock()
+    state = {"n": 41}
+    out = locked_snapshot(lock, lambda: dict(state))
+    assert out == {"n": 41} and not lock.locked()
+
+
+# ---------------------------------------------------------------------------
+# serving integration: reports are views over the registry
+# ---------------------------------------------------------------------------
+
+
+def test_serving_report_matches_registry():
+    obs = Observability(clock=TickClock)
+    eng = ServingEngine.simulated(
+        small_catalog(), tenants={"a": TenantPolicy(), "b": TenantPolicy()},
+        cfg=ServingConfig(workers=2, obs=obs))
+    with eng:
+        for t in ("a", "b", "a"):
+            eng.submit(t, AI_SQL)
+        eng.drain()
+        rep = eng.report()
+    reg = obs.registry
+    q = reg.counter("aisql_queries_total")
+    for name, tr in rep.tenants.items():
+        assert q.labels(tenant=name, status="completed").value \
+            == tr.completed
+        assert reg.counter("aisql_credits_total").labels(
+            tenant=name).value == pytest.approx(tr.credits_spent)
+    # conservation: tenant credit children sum to the backends' meters
+    assert rep.total_credits == pytest.approx(rep.backend_credits)
+    # collectors expose the same scheduler counters the report reads
+    snap = reg.snapshot()
+    sched = {s["labels"]["event"]: s["value"]
+             for s in snap["aisql_scheduler_events_total"]["series"]}
+    assert sched["retries"] == rep.scheduler_retries
+    # per-tenant percentiles come from the histogram children
+    hist = reg.histogram("aisql_query_latency_seconds").labels(tenant="a")
+    assert rep.tenants["a"].latency_p95_s == hist.quantile(0.95)
+    # the trace ring holds each query's span tree under its query id
+    assert len(obs.ring) == 3
+    for qid in obs.ring.ids():
+        assert obs.ring.get(qid)["kind"] == "query"
+
+
+def test_serving_percentiles_survive_many_queries():
+    """The old bounded sample window truncated history; histograms keep
+    every observation with bounded relative error instead."""
+    obs = Observability(enabled=False)
+    eng = ServingEngine.simulated(
+        small_catalog(), cfg=ServingConfig(workers=4, obs=obs))
+    with eng:
+        for _ in range(40):
+            eng.submit("a", "SELECT t.id FROM t WHERE t.id < 3")
+        eng.drain()
+        rep = eng.report()
+    t = rep.tenants["a"]
+    assert t.completed == 40
+    child = obs.registry.histogram(
+        "aisql_query_latency_seconds").labels(tenant="a")
+    assert child.count == 40
+    assert t.latency_p95_s >= t.latency_p50_s > 0
+
+
+def test_event_kinds_catalog_covers_emitted_events():
+    obs = Observability(clock=TickClock)
+    eng = make_engine(obs=obs, partitioned=True, fault_rate=0.2)
+    eng.sql(AI_SQL)
+    for span in walk_spans(eng.last_report.trace):
+        for ev in span["events"]:
+            assert ev["name"] in EVENT_KINDS, ev["name"]
+
+
+def test_metric_families_catalog_is_wellformed():
+    for name, (mtype, help_text, labels) in METRIC_FAMILIES.items():
+        assert name.startswith("aisql_")
+        assert mtype in ("counter", "gauge", "histogram")
+        assert help_text
+        assert isinstance(labels, tuple)

@@ -318,10 +318,13 @@ def replay(trace: List[TraceEvent], catalog: Catalog, *,
            fault_burst_every: int = 0, fault_burst_len: int = 0,
            replicas: int = 1, partition_rows: int = 256,
            max_retries: int = 6, cache_size: int = 1 << 17,
-           semindex=None) -> ReplayReport:
+           semindex=None, obs=None) -> ReplayReport:
     """Drive ``trace`` through a simulated `ServingEngine` and distil a
     `ReplayReport`.  Executor and pipeline knobs are pinned to the
-    schedule-independent configuration (see the module docstring)."""
+    schedule-independent configuration (see the module docstring).
+    Pass an `Observability` (ideally with ``clock=TickClock``) to keep
+    the per-query span trees and the metrics registry around after the
+    run — ``--trace-out`` / ``--metrics-out`` dump them."""
     cfg = ServingConfig(
         workers=workers,
         pipeline=PipelineConfig(cache_size=cache_size, cache_ttl_s=None,
@@ -331,7 +334,8 @@ def replay(trace: List[TraceEvent], catalog: Catalog, *,
         executor=ExecConfig(partitioned=True,
                             partition_rows=partition_rows,
                             partition_lookahead=1,
-                            adaptive_reorder=False, pilot_rows=0))
+                            adaptive_reorder=False, pilot_rows=0),
+        obs=obs)
     eng = ServingEngine.simulated(
         catalog, seed=seed, fault_rate=fault_rate,
         timeout_rate=timeout_rate, fault_burst_every=fault_burst_every,
@@ -414,7 +418,7 @@ def replay_http(trace: List[TraceEvent], catalog: Catalog, *,
                 fault_burst_every: int = 0, fault_burst_len: int = 0,
                 replicas: int = 1, partition_rows: int = 256,
                 max_retries: int = 6, cache_size: int = 1 << 17,
-                semindex=None) -> ReplayReport:
+                semindex=None, obs=None) -> ReplayReport:
     """`replay`, but over the wire: boots `AisqlHttpServer` on the same
     pinned engine configuration and drives each tenant's slice of the
     trace in order through a persistent authenticated HTTP client.  Row
@@ -434,7 +438,8 @@ def replay_http(trace: List[TraceEvent], catalog: Catalog, *,
         executor=ExecConfig(partitioned=True,
                             partition_rows=partition_rows,
                             partition_lookahead=1,
-                            adaptive_reorder=False, pilot_rows=0))
+                            adaptive_reorder=False, pilot_rows=0),
+        obs=obs)
     eng = ServingEngine.simulated(
         catalog, seed=seed, fault_rate=fault_rate,
         timeout_rate=timeout_rate, fault_burst_every=fault_burst_every,
@@ -500,17 +505,51 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--http", action="store_true",
                     help="drive the trace over the HTTP front-end "
                          "instead of direct ServingEngine submission")
+    ap.add_argument("--trace-out", metavar="DIR", default=None,
+                    help="dump each recent query's span tree as a "
+                         "chrome://tracing JSON file into DIR")
+    ap.add_argument("--metrics-out", metavar="FILE", default=None,
+                    help="dump the final metrics-registry snapshot "
+                         "(every family, JSON) to FILE")
     args = ap.parse_args(argv)
     cfg = TraceConfig(seed=args.seed, sessions=args.sessions,
                       tenants=args.tenants, rows=args.rows)
     trace = generate_trace(cfg)
     catalog = build_catalog(cfg, budget_bytes=args.budget_bytes)
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Observability, TickClock
+
+        # deterministic tick clock: the dumped span trees are a pure
+        # function of the trace seed, like every other replay artifact
+        obs = Observability(clock=TickClock,
+                            ring_size=max(len(trace), 1))
     fn = replay_http if args.http else replay
     rep = fn(trace, catalog, workers=args.workers, seed=args.seed,
              fault_rate=args.fault_rate,
              fault_burst_every=args.burst_every,
-             fault_burst_len=args.burst_len)
+             fault_burst_len=args.burst_len, obs=obs)
     print(rep.render())
+    if obs is not None and args.trace_out:
+        import json
+        import os
+
+        from repro.obs import to_chrome
+
+        os.makedirs(args.trace_out, exist_ok=True)
+        for qid in obs.ring.ids():
+            path = os.path.join(args.trace_out, f"{qid}.trace.json")
+            with open(path, "w") as f:
+                json.dump(to_chrome(obs.ring.get(qid)), f)
+        print(f"-- traces: {len(obs.ring)} chrome://tracing files "
+              f"in {args.trace_out}")
+    if obs is not None and args.metrics_out:
+        import json
+
+        with open(args.metrics_out, "w") as f:
+            json.dump(obs.registry.snapshot(), f, indent=2,
+                      sort_keys=True)
+        print(f"-- metrics: registry snapshot at {args.metrics_out}")
     return 0
 
 
